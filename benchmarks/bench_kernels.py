@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks (interpret mode on CPU — wall numbers are for the
+oracle comparison only; TPU performance is covered by §Roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save, time_call
+from repro.kernels import ops, ref
+
+
+def run():
+    rec = {}
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    # flash attention
+    q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, block_q=128,
+                                                    block_k=128))
+    dt, out = time_call(lambda: jax.block_until_ready(f(q, k, v)))
+    flops = 4 * 1 * 4 * 256 * 256 * 64
+    emit("kernel/flash_attention_256", dt * 1e6,
+         f"gflops={flops/dt/1e9:.2f} (interpret)")
+    rec["flash_us"] = dt * 1e6
+
+    # selective scan
+    xa = jax.random.normal(ks[0], (1, 256, 512), jnp.float32)
+    dtt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 512)))
+    b_ssm = jax.random.normal(ks[2], (1, 256, 16))
+    c_ssm = jax.random.normal(ks[3], (1, 256, 16))
+    a_log = jnp.zeros((512, 16))
+    d_skip = jnp.ones((512,))
+    g = jax.jit(lambda *a: ops.selective_scan(*a, chunk=128, block_c=256))
+    dt, _ = time_call(lambda: jax.block_until_ready(
+        g(xa, dtt, b_ssm, c_ssm, a_log, d_skip)))
+    emit("kernel/selective_scan_256x512", dt * 1e6, "(interpret)")
+    rec["scan_us"] = dt * 1e6
+
+    # vfl grad
+    xb = jax.random.normal(ks[0], (256, 512), jnp.float32)
+    w = jax.random.normal(ks[1], (512,))
+    th = jax.random.normal(ks[2], (256,))
+    h = jax.jit(lambda *a: ops.vfl_grad(*a, lam=1e-4))
+    dt, _ = time_call(lambda: jax.block_until_ready(h(xb, w, th)))
+    emit("kernel/vfl_grad_256x512", dt * 1e6, "(interpret)")
+    rec["vfl_us"] = dt * 1e6
+
+    save("kernels", rec)
+    return rec

@@ -1,0 +1,106 @@
+"""§Roofline: three-term roofline per (arch × shape) on the single-pod mesh.
+
+Methodology (see EXPERIMENTS §Roofline for the full writeup):
+XLA counts while/scan bodies once, so per-device FLOPs/bytes/collectives
+come from *unrolled* 1-unit and 2-unit lowerings, linearly extrapolated to
+the full depth (unit = layer, or the native period for jamba/gemma3/
+whisper).  The full scanned compile (same results directory) proves
+memory fit.  Hardware: TPU v5e — 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save
+from repro.configs.base import ARCH_IDS, SHAPES, get_arch
+from repro.launch import hlo_analysis
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+UNROLL_PAIRS = {a: (1, 2) for a in ARCH_IDS}
+UNROLL_PAIRS["gemma3_4b"] = (6, 12)
+
+
+def n_units(cfg) -> float:
+    if cfg.period is not None:
+        return cfg.n_layers / len(cfg.period)
+    if cfg.global_every:
+        return cfg.n_layers / cfg.global_every
+    return float(cfg.n_layers)
+
+
+def unit_layers(cfg) -> int:
+    # conversion from the --unroll argument to "units": for period archs
+    # --unroll already counts periods (dryrun._unrolled_cfg), so 1:1.
+    if cfg.period is not None:
+        return 1
+    if cfg.global_every:
+        return cfg.global_every
+    return 1
+
+
+def _load(arch, shape, mesh="16x16", unroll=None, suffix=""):
+    tag = f"{arch}_{shape}_{mesh}" + (f"_unroll{unroll}" if unroll else "") \
+        + suffix
+    path = os.path.join(DRYRUN_DIR, tag + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def extrapolate(arch: str, shape: str, suffix: str = ""):
+    cfg = get_arch(arch)
+    u1l, u2l = UNROLL_PAIRS[arch]
+    r1 = _load(arch, shape, unroll=u1l, suffix=suffix)
+    r2 = _load(arch, shape, unroll=u2l, suffix=suffix)
+    full = _load(arch, shape, suffix=suffix)
+    if not (r1 and r2 and full):
+        return None
+    units = n_units(cfg)
+    ul = unit_layers(cfg)
+    u1, u2 = u1l / ul, u2l / ul            # in units
+
+    def ext(key, sub=None):
+        a = r1[key] if sub is None else r1[key][sub]
+        b = r2[key] if sub is None else r2[key][sub]
+        return a + (units - u1) / (u2 - u1) * (b - a)
+
+    flops = ext("flops_per_device")
+    hbm = ext("bytes_accessed_per_device")
+    coll = ext("collectives", "total_bytes")
+    roof = hlo_analysis.Roofline(
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+        model_flops=full["model_flops"], n_chips=256)
+    return {"arch": arch, "shape": shape, "suffix": suffix,
+            "roofline": roof.to_dict(),
+            "memory_full_compile": full["memory"],
+            "collective_mix_u2": r2["collectives"]["bytes_by_kind"],
+            "compile_s_full": full.get("compile_s")}
+
+
+def run():
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            cfg = get_arch(arch)
+            if shape == "long_500k" and not cfg.supports_long:
+                rows.append({"arch": arch, "shape": shape,
+                             "status": "skipped (full attention)"})
+                continue
+            rec = extrapolate(arch, shape)
+            if rec is None:
+                rows.append({"arch": arch, "shape": shape,
+                             "status": "missing dry-run records"})
+                continue
+            rec["status"] = "ok"
+            rows.append(rec)
+            r = rec["roofline"]
+            emit(f"roofline/{arch}/{shape}", r["compute_s"] * 1e6,
+                 f"mem_s={r['memory_s']:.3e} coll_s={r['collective_s']:.3e} "
+                 f"dominant={r['dominant']} useful={r['useful_ratio']:.2f}")
+    save("roofline", rows)
+    return rows

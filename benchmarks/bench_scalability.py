@@ -1,0 +1,42 @@
+"""Paper Figs. 2/7: q-party speedup scalability (async vs sync).
+
+q-parties speedup = wall(1 party) / wall(q parties) at a fixed per-party
+compute delay — the thread simulation mirrors the paper's setup (m=2).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save
+from repro.core import algorithms, async_engine, losses
+from repro.data.synthetic import classification_dataset
+
+
+def run(qs=(1, 2, 4, 8), m: int = 2, epochs: float = 3.0):
+    ds = classification_dataset("scal", 800, 64, seed=1, noise=0.4)
+    d = ds.x_train.shape[1]
+    prob = losses.logistic_l2()
+    walls = {}
+    t0 = time.perf_counter()
+    for q in qs:
+        layout = algorithms.PartyLayout.even(d, q, min(m, q))
+        # per-party compute scales as 1/q: each party holds d/q feature
+        # columns (the paper's vertical split), so its partial product and
+        # BUM update cost shrink proportionally
+        a = async_engine.run_async(prob, ds.x_train, ds.y_train, layout,
+                                   lr=0.2, batch=16, total_epochs=epochs,
+                                   threads_per_party=2,
+                                   base_delay=4e-3 / q,
+                                   speed_factors=[1.0] * q)
+        walls[q] = a.wall_time
+    speedups = {q: walls[qs[0]] / walls[q] * qs[0] / qs[0] for q in qs}
+    rec = {"walls": walls,
+           "speedup": {q: walls[1] / walls[q] if 1 in walls else None
+                       for q in qs}}
+    save("scalability", rec)
+    emit("fig2/q_speedup", (time.perf_counter() - t0) * 1e6,
+         " ".join(f"q{q}={rec['speedup'][q]:.2f}x" for q in qs
+                  if rec['speedup'][q]))
+    return rec

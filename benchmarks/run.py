@@ -1,0 +1,61 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines; detailed records are written
+to results/bench/*.json.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller trials/datasets (CI budget)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_async, bench_kernels, bench_losslessness,
+                            bench_regression, bench_roofline,
+                            bench_scalability, bench_secure_agg,
+                            bench_staleness)
+
+    suites = {
+        "losslessness": lambda: bench_losslessness.run(
+            trials=1 if args.quick else 3,
+            scale=0.25 if args.quick else 0.5,
+            epochs=8 if args.quick else 12),
+        "regression": lambda: bench_regression.run(
+            trials=1 if args.quick else 3,
+            scale=0.25 if args.quick else 0.5),
+        "async": lambda: bench_async.run(
+            epochs=3.0 if args.quick else 6.0),
+        "scalability": lambda: bench_scalability.run(
+            epochs=1.5 if args.quick else 3.0),
+        "staleness": lambda: bench_staleness.run(
+            epochs=4 if args.quick else 8),
+        "secure_agg": bench_secure_agg.run,
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print("FAILED SUITES:", failed, file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

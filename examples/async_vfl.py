@@ -1,0 +1,37 @@
+"""BAPA in action: bilevel asynchronous VFL vs its synchronous counterpart.
+
+Runs the thread-based simulation (the paper's own experimental setup) with
+a 45% straggler party and prints loss-vs-walltime traces for both systems.
+
+    PYTHONPATH=src python examples/async_vfl.py
+"""
+from repro.core import algorithms, async_engine, losses
+from repro.data.synthetic import classification_dataset
+
+
+def main():
+    ds = classification_dataset("async-demo", 1200, 64, seed=0, noise=0.4)
+    layout = algorithms.PartyLayout.even(64, 8, 3)
+    prob = losses.logistic_l2()
+    speeds = [1.0] * 8
+    speeds[-1] = 1.45  # straggler
+    kw = dict(lr=0.2, batch=16, total_epochs=5.0, base_delay=2e-3,
+              speed_factors=speeds)
+
+    print("async (VFB², bilevel: 3 dominators × 3 threads/party)...")
+    a = async_engine.run_async(prob, ds.x_train, ds.y_train, layout,
+                               threads_per_party=3, **kw)
+    print("sync (VFB, barrier per iteration)...")
+    s = async_engine.run_sync(prob, ds.x_train, ds.y_train, layout, **kw)
+
+    print(f"\nwall time: async {a.wall_time:.2f}s vs sync {s.wall_time:.2f}s"
+          f"  (speedup {s.wall_time / a.wall_time:.2f}x)")
+    print("\nloss traces (t, epochs, objective):")
+    for name, res in [("async", a), ("sync", s)]:
+        pts = res.loss_trace[:: max(1, len(res.loss_trace) // 6)]
+        print(f"  {name}: " + "  ".join(f"({t:.2f}s,{e:.1f}ep,{o:.4f})"
+                                        for t, e, o in pts))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Deep VFB²: the paper's protocol with *nonlinear* party-local encoders.
+
+Each party trains a private 1-hidden-layer encoder on its feature block;
+representations are securely summed (Algorithm 1) and the BUM broadcasts
+ϑ backward — no gradients ever cross party boundaries, only ϑ.  The
+trajectory matches a centralized autodiff model exactly (losslessness at
+deep-model scale), and freezing passive encoders (no BUM) hurts.
+
+    PYTHONPATH=src python examples/deep_vfl.py
+"""
+import numpy as np
+
+from repro.core import deep_vfl, losses
+from repro.core.algorithms import PartyLayout
+from repro.data.synthetic import classification_dataset
+
+
+def main():
+    ds = classification_dataset("deep", 2000, 32, seed=5, noise=0.4)
+    layout = PartyLayout.even(32, 4, 2)
+    prob = losses.logistic_l2()
+    kw = dict(epochs=10, lr=0.05, batch=32, seed=0)
+
+    print("training deep VFL (BUM gradients, protocol message boundary)...")
+    _, hist_vfl = deep_vfl.train_deep_vfl(prob, ds.x_train, ds.y_train,
+                                          layout, **kw)
+    print("training centralized oracle (one autodiff graph)...")
+    _, hist_c = deep_vfl.train_centralized(prob, ds.x_train, ds.y_train,
+                                           layout, **kw)
+    print("training with frozen passive encoders (no BUM)...")
+    _, hist_f = deep_vfl.train_deep_vfl(prob, ds.x_train, ds.y_train,
+                                        layout, freeze_passive=True, **kw)
+
+    print(f"\nfinal loss: VFB²-deep {hist_vfl[-1]:.4f} | centralized "
+          f"{hist_c[-1]:.4f} | frozen-passive {hist_f[-1]:.4f}")
+    print("lossless:", np.allclose(hist_vfl, hist_c, atol=1e-4))
+    print("BUM advantage over frozen passive:",
+          f"{hist_f[-1] - hist_vfl[-1]:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

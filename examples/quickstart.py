@@ -1,0 +1,58 @@
+"""Quickstart: VFB² on vertically partitioned data (the paper, end to end).
+
+Eight parties hold disjoint feature blocks of a credit-scoring-shaped
+dataset; three of them have labels.  We train ℓ2-regularized logistic
+regression with VFB²-SVRG (backward updating + secure two-tree
+aggregation) and verify the three headline claims:
+  1. losslessness  — identical accuracy to non-federated training;
+  2. the AFSVRG-VP baseline (no BUM → passive blocks frozen) is lossy;
+  3. secure aggregation is exact (masks cancel bit-for-bit within fp
+     tolerance).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import algorithms, losses, trees
+from repro.core.secure_agg import secure_aggregate_host
+from repro.data.synthetic import classification_dataset
+from repro.data.vertical import vertical_split
+
+
+def main():
+    ds = classification_dataset("credit", n=6000, d=90, seed=0,
+                                onehot_frac=0.4, noise=0.4)
+    q, m = 8, 3
+    blocks, layout = vertical_split(ds.x_train, q=q, m=m)
+    print(f"{q} parties ({m} active), feature blocks:",
+          [b.shape[1] for b in blocks])
+
+    # --- secure aggregation demo (Algorithm 1) -------------------------
+    t1, t2 = trees.default_tree_pair(q)
+    assert trees.significantly_different(t1, t2)
+    rng = np.random.default_rng(0)
+    w_demo = rng.standard_normal(ds.x_train.shape[1])
+    partials = [blocks[p][0] @ w_demo[lo:hi]
+                for p, (lo, hi) in enumerate(layout.bounds)]
+    agg, _ = secure_aggregate_host([np.atleast_1d(p) for p in partials], rng)
+    print(f"secure wᵀx = {float(np.ravel(agg)[0]):.6f}  "
+          f"(true {float(ds.x_train[0] @ w_demo):.6f})")
+
+    # --- train ----------------------------------------------------------
+    prob = losses.logistic_l2()
+    kw = dict(algo="svrg", epochs=12, lr=0.5, batch=32, seed=0)
+    vfb2 = algorithms.train(prob, ds.x_train, ds.y_train, layout, **kw)
+    nonf = algorithms.train(prob, ds.x_train, ds.y_train,
+                            algorithms.PartyLayout.even(90, 1, 1), **kw)
+    vp = algorithms.train(prob, ds.x_train, ds.y_train, layout,
+                          active_only=True, **kw)
+
+    acc = lambda r: algorithms.accuracy(r.w, ds.x_test, ds.y_test)
+    print(f"\naccuracy: VFB²-SVRG {acc(vfb2):.4f} | NonF {acc(nonf):.4f} "
+          f"| AFSVRG-VP {acc(vp):.4f}")
+    print("lossless (VFB² == NonF):", np.allclose(vfb2.w, nonf.w, atol=1e-6))
+    print("VP accuracy gap:", f"{acc(nonf) - acc(vp):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""End-to-end serving driver: batched prefill + greedy decode against the
+sequence-sharded KV cache (the same serve_step the 32k/500k dry-runs
+lower), on a reduced model.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3_4b \
+        --batch 4 --prompt-len 32 --gen-tokens 16
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_1_6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    a = ap.parse_args()
+    gen = serve(a.arch, a.batch, a.prompt_len, a.gen_tokens, reduced=True)
+    assert gen.shape == (a.batch, a.gen_tokens)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""End-to-end driver: train a language model under the VFB² framework.
+
+Full pipeline: synthetic token stream → secure vocab-parallel VFL embedding
+(masked two-tree aggregation + BUM backward) → transformer backbone →
+vocab-parallel loss → AdamW or the bounded-staleness VFB²-SGD optimizer →
+checkpoint.  Defaults to a CPU-sized reduced config; on accelerators run
+e.g.::
+
+    python examples/train_lm.py --arch granite_moe_1b_a400m --steps 300 \
+        --batch 8 --seq 256 --optimizer vfb2_sgd --tau 4
+
+    PYTHONPATH=src python examples/train_lm.py --steps 60
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_1_6b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "vfb2_sgd"])
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    a = ap.parse_args()
+    losses = train(a.arch, a.steps, a.batch, a.seq, a.lr, a.optimizer,
+                   a.tau, reduced=True, ckpt_dir=a.ckpt)
+    drop = losses[0] - losses[-1]
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}  (drop {drop:.3f}; "
+          f"unigram-entropy baseline would plateau near the start value)")
+    assert drop > 0.05, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Dependency-free checkpointing: flat npz + pytree structure manifest."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[jax.tree_util.keystr(kp)] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"step": step, "treedef": str(treedef),
+                   "keys": list(flat.keys())}, f)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    leaves = []
+    for kp, leaf in leaves_with_path:
+        arr = data[jax.tree_util.keystr(kp)]
+        assert arr.shape == leaf.shape, (kp, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def checkpoint_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]

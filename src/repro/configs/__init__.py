@@ -1,0 +1,2 @@
+from repro.configs.base import (ArchConfig, MoESpec, SSMSpec, ShapeConfig,
+                                SHAPES, ARCH_IDS, get_arch, all_archs)

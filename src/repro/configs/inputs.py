@@ -1,0 +1,83 @@
+"""``input_specs()``: ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+``train_step``/``serve_step`` against these.  ``make_batch`` materializes
+small concrete batches for smoke tests / examples.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model import init_cache
+from repro.sharding.api import Runtime
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def token_split(cfg: ArchConfig, seq_len: int) -> int:
+    """Text-token count for VLM (patches occupy a prefix of the sequence)."""
+    if cfg.arch_type == "vlm":
+        return seq_len - cfg.n_patches
+    return seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, rt: Runtime,
+                abstract: bool = True) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    mk = _sds if abstract else (lambda sh, dt: jnp.zeros(sh, dt))
+    s_text = token_split(cfg, s)
+
+    if shape.mode in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": mk((b, s_text), I32)}
+        if shape.mode == "train":
+            batch["labels"] = mk((b, s_text), I32)
+        if cfg.enc_dec:
+            batch["frames"] = mk((b, cfg.enc_seq, 2 * cfg.d_model),
+                                 jnp.bfloat16)
+        if cfg.arch_type == "vlm":
+            batch["patches"] = mk((b, cfg.n_patches, cfg.d_patch),
+                                  jnp.bfloat16)
+        return batch
+
+    # decode: one token against a cache of length seq_len
+    cache = init_cache(rt, cfg, b, s, abstract=abstract)
+    return {"token": mk((b,), I32),
+            "pos": mk((), I32),
+            "cache": cache}
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, rt: Runtime,
+               seed: int = 0) -> Dict[str, Any]:
+    """Concrete random batch (smoke tests; small shapes only)."""
+    rng = np.random.default_rng(seed)
+    b, s = shape.global_batch, shape.seq_len
+    s_text = token_split(cfg, s)
+    if shape.mode in ("train", "prefill"):
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, s_text)), I32)}
+        if shape.mode == "train":
+            batch["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, (b, s_text)), I32)
+        if cfg.enc_dec:
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((b, cfg.enc_seq, 2 * cfg.d_model)),
+                jnp.bfloat16)
+        if cfg.arch_type == "vlm":
+            batch["patches"] = jnp.asarray(
+                rng.standard_normal((b, cfg.n_patches, cfg.d_patch)),
+                jnp.bfloat16)
+        return batch
+    cache = init_cache(rt, cfg, b, s, abstract=False)
+    return {"token": jnp.asarray(rng.integers(0, cfg.vocab, (b,)), I32),
+            "pos": jnp.asarray(s // 2, I32),
+            "cache": cache}

@@ -1,0 +1,230 @@
+"""VFB²-SGD / -SVRG / -SAGA (paper Algorithms 2–7) + comparison baselines.
+
+This module is the *algorithmic* reference: a deterministic, vectorized
+JAX implementation of the exact update rules.  Two properties tie it to the
+protocol implementations:
+
+* the aggregation ``agg = Σ_ℓ X_{G_ℓ} w_{G_ℓ}`` is block-separable — the
+  secure two-tree masked aggregation (`core.secure_agg`) computes the same
+  value to float tolerance (tested), so the sequential math here is the
+  federated math ("lossless" by construction);
+* every gradient is formed the BUM way: ϑ first, then per-block
+  ``X_{G_ℓ}ᵀϑ + λ∇g(w_{G_ℓ})``, which is what passive parties compute from
+  the received ϑ (paper Alg. 3/5/7 step 3).
+
+Baselines:
+* ``NONF``      — non-federated training (identical updates on pooled data;
+                  equals VFB² exactly, which is the losslessness claim);
+* ``AFSVRG_VP`` — ERCR without BUM (Gu et al. 2020b): coordinates owned by
+                  passive parties are never updated (no labels → no ϑ).
+
+The asynchronous execution of these same rules lives in
+``core.async_engine`` (threads, wall-clock) and ``core.staleness``
+(bounded-delay SPMD emulation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import Problem
+
+
+@dataclasses.dataclass(frozen=True)
+class PartyLayout:
+    """Vertical partition of d features over q parties; m active parties.
+
+    Parties 0..m-1 are active (hold labels); m..q-1 are passive.
+    """
+
+    q: int
+    m: int
+    bounds: Tuple[Tuple[int, int], ...]  # (lo, hi) per party
+
+    @staticmethod
+    def even(d: int, q: int, m: int) -> "PartyLayout":
+        assert 1 <= m <= q
+        cuts = np.linspace(0, d, q + 1).astype(int)
+        return PartyLayout(q=q, m=m,
+                           bounds=tuple((int(cuts[i]), int(cuts[i + 1]))
+                                        for i in range(q)))
+
+    def update_mask(self, d: int, active_only: bool) -> np.ndarray:
+        """1.0 where the coordinate may be updated.
+
+        ``active_only=True`` reproduces AFSVRG-VP: only active-party blocks
+        (those whose owners hold labels) are trainable.
+        """
+        mask = np.zeros(d, np.float32)
+        parties = range(self.m) if active_only else range(self.q)
+        for p in parties:
+            lo, hi = self.bounds[p]
+            mask[lo:hi] = 1.0
+        return mask
+
+    def party_of_coord(self, d: int) -> np.ndarray:
+        owner = np.zeros(d, np.int32)
+        for p, (lo, hi) in enumerate(self.bounds):
+            owner[lo:hi] = p
+        return owner
+
+
+def _batch_indices(key, n, batch, steps):
+    return jax.random.randint(key, (steps, batch), 0, n)
+
+
+def _grad_from_theta(problem: Problem, x, w, theta_vec):
+    """BUM gradient: Xᵀϑ/b + λ∇g(w) (block-separable ⇒ full-vector form)."""
+    return x.T @ theta_vec / theta_vec.shape[0] + problem.lam * problem.reg_grad(w)
+
+
+# ---------------------------------------------------------------------------
+# epoch drivers (jitted; scan over minibatches)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps"))
+def sgd_epoch(problem: Problem, w, x, y, lr, mask, key, batch: int, steps: int):
+    idx = _batch_indices(key, x.shape[0], batch, steps)
+
+    def body(w, ib):
+        xb, yb = x[ib], y[ib]
+        agg = xb @ w                       # = Σ_ℓ secure-aggregated partials
+        theta = problem.theta(agg, yb)     # dominator computes ϑ
+        g = _grad_from_theta(problem, xb, w, theta)
+        return w - lr * mask * g, None
+
+    w, _ = jax.lax.scan(body, w, idx)
+    return w
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps"))
+def svrg_epoch(problem: Problem, w, w_snap, mu, x, y, lr, mask, key,
+               batch: int, steps: int):
+    """Inner loop of VFB²-SVRG (Alg. 4/5): v = g_i(w) − g_i(w̃) + ∇f(w̃)."""
+    idx = _batch_indices(key, x.shape[0], batch, steps)
+
+    def body(w, ib):
+        xb, yb = x[ib], y[ib]
+        th1 = problem.theta(xb @ w, yb)          # ϑ₁ at current iterate
+        th0 = problem.theta(xb @ w_snap, yb)     # ϑ₀ at snapshot (distributed)
+        g1 = _grad_from_theta(problem, xb, w, th1)
+        g0 = _grad_from_theta(problem, xb, w_snap, th0)
+        return w - lr * mask * (g1 - g0 + mu), None
+
+    w, _ = jax.lax.scan(body, w, idx)
+    return w
+
+
+@functools.partial(jax.jit, static_argnames=("problem",))
+def full_gradient(problem: Problem, w, x, y):
+    theta = problem.theta(x @ w, y)
+    return x.T @ theta / x.shape[0] + problem.lam * problem.reg_grad(w)
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps"))
+def saga_epoch(problem: Problem, w, theta_tab, avg, x, y, lr, mask, key,
+               batch: int, steps: int):
+    """VFB²-SAGA (Alg. 6/7) with the linear-model memory trick.
+
+    The history table stores per-sample ϑ̃_i (scalar) instead of the full
+    α_i = ϑ̃_i·x_i vector; ``avg`` maintains (1/n)Σ_j ϑ̃_j x_j incrementally.
+    The λ∇g term is applied at the current iterate (it is deterministic per
+    block, so it needs no variance reduction).
+    """
+    n = x.shape[0]
+    idx = _batch_indices(key, n, batch, steps)
+
+    def body(carry, ib):
+        w, tab, avg = carry
+        xb, yb = x[ib], y[ib]
+        th_new = problem.theta(xb @ w, yb)
+        th_old = tab[ib]
+        v = (xb.T @ (th_new - th_old)) / ib.shape[0] + avg \
+            + problem.lam * problem.reg_grad(w)
+        w = w - lr * mask * v
+        # α-table update (last write wins on duplicate indices, as in async)
+        avg = avg + xb.T @ (th_new - th_old) / n
+        tab = tab.at[ib].set(th_new)
+        return (w, tab, avg), None
+
+    (w, theta_tab, avg), _ = jax.lax.scan(body, (w, theta_tab, avg), idx)
+    return w, theta_tab, avg
+
+
+# ---------------------------------------------------------------------------
+# top-level trainers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainResult:
+    w: np.ndarray
+    history: List[dict]  # per-epoch: objective, epoch, algo
+
+
+def _eval(problem, w, x, y):
+    agg = x @ w
+    obj = float(jnp.mean(problem.loss(agg, y))
+                + problem.lam * jnp.sum(problem.reg(w)))
+    return obj
+
+
+def train(
+    problem: Problem,
+    x: np.ndarray,
+    y: np.ndarray,
+    layout: PartyLayout,
+    algo: str = "svrg",
+    epochs: int = 20,
+    lr: float = 0.5,
+    batch: int = 32,
+    seed: int = 0,
+    active_only: bool = False,  # True => AFSVRG-VP-style baseline
+    w0: Optional[np.ndarray] = None,
+) -> TrainResult:
+    n, d = x.shape
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    w = jnp.zeros(d, jnp.float32) if w0 is None else jnp.asarray(w0, jnp.float32)
+    mask = jnp.asarray(layout.update_mask(d, active_only))
+    steps = max(1, n // batch)
+    key = jax.random.PRNGKey(seed)
+    hist = []
+
+    if algo == "saga":
+        theta_tab = problem.theta(x @ w, y)          # Alg. 6 step 2 (init pass)
+        avg = x.T @ theta_tab / n
+
+    w_snap, mu = w, None
+    for ep in range(epochs):
+        key, sub = jax.random.split(key)
+        if algo == "sgd":
+            w = sgd_epoch(problem, w, x, y, lr, mask, sub, batch, steps)
+        elif algo == "svrg":
+            w_snap = w
+            mu = full_gradient(problem, w_snap, x, y)
+            w = svrg_epoch(problem, w, w_snap, mu, x, y, lr, mask, sub,
+                           batch, steps)
+        elif algo == "saga":
+            w, theta_tab, avg = saga_epoch(problem, w, theta_tab, avg, x, y,
+                                           lr, mask, sub, batch, steps)
+        else:
+            raise ValueError(f"unknown algo {algo}")
+        hist.append({"epoch": ep + 1, "objective": _eval(problem, w, x, y),
+                     "algo": algo})
+    return TrainResult(w=np.asarray(w), history=hist)
+
+
+def accuracy(w, x, y) -> float:
+    pred = np.sign(np.asarray(x) @ np.asarray(w))
+    pred[pred == 0] = 1
+    return float((pred == np.asarray(y)).mean())
+
+
+def rmse(w, x, y) -> float:
+    err = np.asarray(x) @ np.asarray(w) - np.asarray(y)
+    return float(np.sqrt(np.mean(err ** 2)))

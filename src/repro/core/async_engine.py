@@ -1,0 +1,232 @@
+"""BAPA: bilevel asynchronous parallel architecture (thread simulation).
+
+This mirrors the paper's own experimental harness (§7: parties are thread
+groups on one multi-core machine; an extra scheduler thread per party
+handles communication).  Two parallel levels:
+
+* upper / inter-party (distributed-memory): each *active* party runs a
+  dominator thread that repeatedly (i) draws a sample index, (ii) gathers
+  the parties' masked partial products through the two-tree protocol
+  (Algorithm 1), (iii) computes ϑ, (iv) pushes (ϑ, i) to every party's
+  inbox, (v) updates its own block (Alg. 2);
+* lower / intra-party (shared-memory): every party (active and passive)
+  runs k collaborator threads that drain the inbox and apply BUM updates to
+  the party's block in shared memory (Alg. 3), with deliberately lock-free
+  reads (the paper's "inconsistent read" ŵ).
+
+A synchronous counterpart (``run_sync`` = "VFB") performs the same updates
+behind a barrier — with a straggler party this is what Figs. 3/4 compare
+against.  Per-party speed factors simulate unbalanced resources.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import sys
+import threading
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import trees as trees_lib
+from repro.core.algorithms import PartyLayout
+from repro.core.losses import Problem
+from repro.core.secure_agg import secure_aggregate_host
+
+
+@dataclasses.dataclass
+class AsyncResult:
+    w: np.ndarray
+    wall_time: float
+    updates: int
+    loss_trace: List[tuple]  # (wall_time, epochs_done, objective)
+
+
+class _Shared:
+    """Shared parameter store; per-party blocks with tiny critical sections."""
+
+    def __init__(self, d: int, layout: PartyLayout):
+        self.w = np.zeros(d, np.float64)
+        self.layout = layout
+        self.locks = [threading.Lock() for _ in range(layout.q)]
+        self.update_count = 0
+        self.count_lock = threading.Lock()
+
+    def read_inconsistent(self) -> np.ndarray:
+        # deliberately unlocked: ŵ may interleave with concurrent writes
+        return self.w.copy()
+
+    def add_to_block(self, p: int, delta: np.ndarray):
+        lo, hi = self.layout.bounds[p]
+        with self.locks[p]:
+            self.w[lo:hi] += delta
+        with self.count_lock:
+            self.update_count += 1
+
+
+def _np_theta(problem: Problem, agg: np.ndarray, y: np.ndarray) -> np.ndarray:
+    return np.asarray(problem.theta(agg, y))
+
+
+def _np_reg_grad(problem: Problem, w: np.ndarray) -> np.ndarray:
+    return np.asarray(problem.reg_grad(w))
+
+
+def run_async(
+    problem: Problem,
+    x: np.ndarray,
+    y: np.ndarray,
+    layout: PartyLayout,
+    lr: float = 0.1,
+    batch: int = 16,
+    total_epochs: float = 10.0,
+    threads_per_party: int = 2,
+    speed_factors: Optional[List[float]] = None,
+    base_delay: float = 2e-3,
+    seed: int = 0,
+    secure: bool = True,
+) -> AsyncResult:
+    """Run VFB² asynchronously until ``total_epochs`` sample-passes happen."""
+    n, d = x.shape
+    q, m = layout.q, layout.m
+    speed_factors = speed_factors or [1.0] * q
+    shared = _Shared(d, layout)
+    inboxes = [queue.Queue(maxsize=4 * max(1, m)) for _ in range(q)]
+    t1, t2 = trees_lib.default_tree_pair(q)
+    stop = threading.Event()
+    rng0 = np.random.default_rng(seed)
+    target_updates = int(total_epochs * n / batch) * q  # each ϑ → q block updates
+    trace: List[tuple] = []
+
+    xs = [x[:, lo:hi] for (lo, hi) in layout.bounds]
+
+    def objective(w):
+        import jax.numpy as jnp
+        agg = x @ w
+        return float(np.mean(np.asarray(problem.loss(agg, y)))
+                     + problem.lam * float(np.sum(np.asarray(problem.reg(jnp.asarray(w))))))
+
+    def dominator(a: int):
+        rng = np.random.default_rng(seed + 1000 + a)
+        while not stop.is_set():
+            ib = rng.integers(0, n, size=batch)
+            w_hat = shared.read_inconsistent()
+            # Algorithm 1: per-party masked partials, two-tree aggregation.
+            # Parties compute their partials concurrently; the dominator
+            # waits for the slowest one (a sum needs every contribution).
+            time.sleep(base_delay * max(speed_factors))
+            partials = []
+            for p in range(q):
+                lo, hi = layout.bounds[p]
+                partials.append(xs[p][ib] @ w_hat[lo:hi])
+            if secure:
+                agg, _ = secure_aggregate_host(partials, rng, t1, t2)
+            else:
+                agg = np.sum(partials, axis=0)
+            theta = _np_theta(problem, agg, y[ib]) / batch
+            for p in range(q):  # backward distribution of (ϑ, i)
+                while not stop.is_set():
+                    try:  # bounded inboxes = bounded communication delay τ₂
+                        inboxes[p].put((theta, ib), timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+
+    def collaborator(p: int):
+        lo, hi = layout.bounds[p]
+        while not stop.is_set():
+            try:
+                theta, ib = inboxes[p].get(timeout=0.05)
+            except queue.Empty:
+                continue
+            time.sleep(base_delay * speed_factors[p])
+            w_hat_blk = shared.w[lo:hi].copy()  # local inconsistent read
+            g = xs[p][ib].T @ theta \
+                + problem.lam * _np_reg_grad(problem, w_hat_blk)
+            shared.add_to_block(p, -lr * g)
+            if shared.update_count >= target_updates:
+                stop.set()
+
+    sys.setswitchinterval(0.0005)  # fine-grained GIL switching (1-core sim)
+    threads = [threading.Thread(target=dominator, args=(a,), daemon=True)
+               for a in range(m)]
+    for p in range(q):
+        for _ in range(threads_per_party):
+            threads.append(threading.Thread(target=collaborator, args=(p,),
+                                            daemon=True))
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    next_probe = 0.05
+    while not stop.is_set():
+        time.sleep(0.01)
+        el = time.perf_counter() - t0
+        if el >= next_probe:
+            eps = shared.update_count / q * batch / n
+            trace.append((el, eps, objective(shared.w.copy())))
+            next_probe = el + 0.05
+        if el > 120:  # safety
+            stop.set()
+    for th in threads:
+        th.join(timeout=2.0)
+    wall = time.perf_counter() - t0
+    trace.append((wall, shared.update_count / q * batch / n,
+                  objective(shared.w.copy())))
+    return AsyncResult(w=shared.w.copy(), wall_time=wall,
+                       updates=shared.update_count, loss_trace=trace)
+
+
+def run_sync(
+    problem: Problem,
+    x: np.ndarray,
+    y: np.ndarray,
+    layout: PartyLayout,
+    lr: float = 0.1,
+    batch: int = 16,
+    total_epochs: float = 10.0,
+    speed_factors: Optional[List[float]] = None,
+    base_delay: float = 2e-3,
+    seed: int = 0,
+) -> AsyncResult:
+    """Synchronous VFB (BUM without asynchrony): barrier per iteration.
+
+    Every iteration waits for the *slowest* party twice (forward partials
+    and collaborative updates) — the straggler dominates wall time.
+    """
+    n, d = x.shape
+    q = layout.q
+    speed_factors = speed_factors or [1.0] * q
+    rng = np.random.default_rng(seed)
+    xs = [x[:, lo:hi] for (lo, hi) in layout.bounds]
+    w = np.zeros(d, np.float64)
+    iters = int(total_epochs * n / batch)
+    trace: List[tuple] = []
+    t0 = time.perf_counter()
+
+    def objective(wv):
+        import jax.numpy as jnp
+        agg = x @ wv
+        return float(np.mean(np.asarray(problem.loss(agg, y)))
+                     + problem.lam * float(np.sum(np.asarray(problem.reg(jnp.asarray(wv))))))
+
+    probe_every = max(1, iters // 40)
+    for it in range(iters):
+        ib = rng.integers(0, n, size=batch)
+        # forward barrier: wait for slowest party's partial
+        time.sleep(base_delay * max(speed_factors))
+        agg = sum(xs[p][ib] @ w[lo:hi]
+                  for p, (lo, hi) in enumerate(layout.bounds))
+        theta = _np_theta(problem, agg, y[ib]) / batch
+        # update barrier: all parties update in lockstep, straggler gates
+        time.sleep(base_delay * max(speed_factors))
+        for p, (lo, hi) in enumerate(layout.bounds):
+            g = xs[p][ib].T @ theta + problem.lam * _np_reg_grad(problem, w[lo:hi])
+            w[lo:hi] -= lr * g
+        if it % probe_every == 0:
+            trace.append((time.perf_counter() - t0, it * batch / n,
+                          objective(w.copy())))
+    wall = time.perf_counter() - t0
+    trace.append((wall, total_epochs, objective(w.copy())))
+    return AsyncResult(w=w, wall_time=wall, updates=iters * q,
+                       loss_trace=trace)

@@ -1,0 +1,183 @@
+"""Secure aggregation (paper Algorithm 1).
+
+Two executable forms of the same protocol:
+
+* ``secure_aggregate_host`` — the faithful reference: python/numpy values,
+  explicit masks, explicit tree schedules, and a transcript of every message
+  each party sees (used by the security property tests to verify that no
+  transmitted value reveals a raw partial product).
+
+* ``secure_psum`` — the TPU form: inside ``shard_map`` over the party
+  ("model") mesh axis, each shard adds a per-party mask, the masked values
+  are reduced with tree schedule T1 realized as ``lax.psum`` (XLA's
+  reduction is schedule-free; we additionally provide
+  ``tree_psum_collective_permute`` which replays the exact T1/T2 round
+  structure with ``lax.ppermute`` for schedule-faithful lowering), the
+  masks are reduced over the *significantly different* T2, and the mask sum
+  is subtracted.  Output step (paper): ``wᵀx = ξ1 − ξ2``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import trees as trees_lib
+
+
+@dataclasses.dataclass
+class AggTranscript:
+    """Every value each party observed during the protocol (for audits)."""
+
+    # messages[p] = list of (tag, value) pairs party p received
+    messages: List[List[Tuple[str, np.ndarray]]]
+
+    def seen_by(self, party: int) -> List[np.ndarray]:
+        return [v for _, v in self.messages[party]]
+
+
+def secure_aggregate_host(
+    partials: Sequence[np.ndarray],
+    rng: np.random.Generator,
+    t1: trees_lib.ReductionTree | None = None,
+    t2: trees_lib.ReductionTree | None = None,
+    mask_scale: float = 1.0,
+) -> Tuple[np.ndarray, AggTranscript]:
+    """Algorithm 1 on host values. Returns (sum, transcript).
+
+    ``partials[ℓ]`` is party ℓ's local ``w_{G_ℓ}ᵀ(x_i)_{G_ℓ}`` (any shape).
+    """
+    q = len(partials)
+    if t1 is None or t2 is None:
+        t1, t2 = trees_lib.default_tree_pair(q)
+        assert trees_lib.significantly_different(t1, t2) or q == 2
+    # callers may pass explicit (possibly Definition-4-violating) trees to
+    # study the collusion attack of supplementary B (tests do).
+    partials = [np.asarray(p, dtype=np.float64) for p in partials]
+    # step 2: mask locally
+    deltas = [mask_scale * rng.standard_normal(partials[0].shape) for _ in range(q)]
+    masked = [p + d for p, d in zip(partials, deltas)]
+
+    transcript = AggTranscript(messages=[[] for _ in range(q)])
+
+    def run(tree: trees_lib.ReductionTree, values: List[np.ndarray], tag: str):
+        acc = list(values)
+        for rnd in tree.rounds:
+            for dst, src in rnd:
+                transcript.messages[dst].append((f"{tag}:from{src}", acc[src].copy()))
+                acc[dst] = acc[dst] + acc[src]
+        return acc[tree.root]
+
+    xi1 = run(t1, masked, "xi1")   # step 4: masked sum over T1
+    xi2 = run(t2, deltas, "xi2")   # step 5: mask sum over totally different T2
+    return xi1 - xi2, transcript   # output: wᵀx = ξ1 − ξ2
+
+
+# ---------------------------------------------------------------------------
+# JAX / mesh-axis forms
+# ---------------------------------------------------------------------------
+
+def tree_psum_collective_permute(x: jax.Array, axis_name: str,
+                                 tree: trees_lib.ReductionTree) -> jax.Array:
+    """Reduce ``x`` over mesh axis ``axis_name`` replaying ``tree``'s rounds
+    with ``lax.ppermute`` + local adds, then broadcast the root's value.
+
+    Faithful to the round structure of Algorithm 1 (each round only the
+    scheduled (dst, src) pairs move data).  Cost: log2(q) permutes, same
+    asymptotics as a binary-tree all-reduce.
+    """
+    q = tree.q
+    idx = jax.lax.axis_index(axis_name)
+    acc = x
+    for rnd in tree.rounds:
+        perm = [(src, dst) for dst, src in rnd]
+        moved = jax.lax.ppermute(acc, axis_name, perm)
+        # parties that are a dst this round accumulate; others keep acc
+        is_dst = jnp.zeros((), dtype=bool)
+        for dst, _src in rnd:
+            is_dst = jnp.logical_or(is_dst, idx == dst)
+        acc = jnp.where(is_dst, acc + moved, acc)
+    # distribute the root total back down the tree (reverse rounds; each
+    # round is a disjoint pair set, hence a valid partial permutation)
+    for rnd in reversed(tree.rounds):
+        perm = [(dst, src) for dst, src in rnd]  # parent -> child
+        moved = jax.lax.ppermute(acc, axis_name, perm)
+        is_child = jnp.zeros((), dtype=bool)
+        for _dst, src in rnd:
+            is_child = jnp.logical_or(is_child, idx == src)
+        acc = jnp.where(is_child, moved, acc)
+    return acc
+
+
+def secure_psum_ring(
+    partial: jax.Array,
+    axis_name: str,
+    key: jax.Array,
+    mask_scale: float = 1.0,
+) -> jax.Array:
+    """Beyond-paper optimization (EXPERIMENTS §Perf): pairwise-cancelling
+    ring masks δ_ℓ = PRG(s_ℓ) − PRG(s_{ℓ−1}) with Σ_ℓ δ_ℓ ≡ 0, so the mask
+    sum never needs to be aggregated — ONE collective instead of the
+    paper's two tree reductions (ξ₂ ≡ 0), halving VFL-frontend collective
+    bytes.
+
+    Security: each seed s_ℓ is pairwise-shared between ring neighbours
+    (DH-agreed in a real deployment; the SPMD simulation derives them from
+    a common key, which is traffic-equivalent).  Under threat model 1
+    every transmitted value is masked, as in Algorithm 1; under threat
+    model 2 the two ring neighbours of ℓ can jointly strip δ_ℓ — the same
+    collusion caveat as the paper's scheme, where Lemma 1 still protects
+    the rank-1 factors.  See tests/test_security.py.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    q = jax.lax.psum(1, axis_name)
+    out_dtype = partial.dtype
+    partial = partial.astype(jnp.float32)
+    r_self = jax.random.normal(jax.random.fold_in(key, idx), partial.shape,
+                               jnp.float32)
+    r_prev = jax.random.normal(jax.random.fold_in(key, (idx - 1) % q),
+                               partial.shape, jnp.float32)
+    masked = partial + mask_scale * (r_self - r_prev)
+    return jax.lax.psum(masked, axis_name).astype(out_dtype)
+
+
+def secure_psum(
+    partial: jax.Array,
+    axis_name: str,
+    key: jax.Array,
+    mask_scale: float = 1.0,
+    schedule_faithful: bool = False,
+    q: int | None = None,
+) -> jax.Array:
+    """Masked two-tree reduction over a mesh axis (Algorithm 1 on TPU).
+
+    Must be called inside ``shard_map`` (or any context where ``axis_name``
+    is bound).  ``key`` must be *per-party distinct* (fold in axis_index).
+
+    With ``schedule_faithful=True`` the exact T1/T2 round structures are
+    replayed via ``ppermute``; otherwise both reductions lower to
+    ``lax.psum`` (XLA all-reduce) which is the production fast path — the
+    protocol security rests on masking + distinct schedules, and we keep T2
+    distinct by reducing masks with a rotated ppermute ring.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    pkey = jax.random.fold_in(key, idx)
+    out_dtype = partial.dtype
+    # Mask arithmetic in f32: masking/unmasking must cancel exactly enough
+    # that the aggregate is lossless (bf16 partial + O(1) mask would lose
+    # the partial's mantissa).
+    partial = partial.astype(jnp.float32)
+    delta = mask_scale * jax.random.normal(pkey, partial.shape, jnp.float32)
+    masked = partial + delta
+    if schedule_faithful:
+        nparties = q if q is not None else jax.lax.psum(1, axis_name)
+        t1, t2 = trees_lib.default_tree_pair(int(nparties))
+        xi1 = tree_psum_collective_permute(masked, axis_name, t1)
+        xi2 = tree_psum_collective_permute(delta, axis_name, t2)
+    else:
+        xi1 = jax.lax.psum(masked, axis_name)
+        xi2 = jax.lax.psum(delta, axis_name)
+    return (xi1 - xi2).astype(out_dtype)

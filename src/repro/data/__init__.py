@@ -1,0 +1,4 @@
+from repro.data.synthetic import (classification_dataset, regression_dataset,
+                                  paper_datasets)
+from repro.data.vertical import vertical_split
+from repro.data.tokens import TokenStream, synthetic_token_batches

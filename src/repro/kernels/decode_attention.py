@@ -1,0 +1,107 @@
+"""Pallas TPU flash-decoding kernel: one-token attention over a local KV
+cache shard, emitting (unnormalized output, running max, sum-exp) so the
+partial results can be LSE-merged across cache shards with ``psum`` — the
+kernel form of ``repro.models.attention.local_decode_attention`` (the
+sequence-sharded serve path, §Perf hillclimb 1).
+
+Grid (B, H, nK): kv blocks iterate minor-most (sequentially) with the
+(m, l, acc) state carried in VMEM scratch; GQA via the k/v index_map
+(head h reads kv head h//rep).  pos/offset/window arrive as tiny s32
+arrays (scalar operands), so one compiled kernel serves every decode step
+and every shard.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(scalars_ref, q_ref, k_ref, v_ref, o_ref, m_out, l_out,
+                   m_ref, l_ref, acc_ref, *, block_k: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos, offset, window = scalars_ref[0], scalars_ref[1], scalars_ref[2]
+    q = q_ref[0, 0].astype(jnp.float32)                  # (dh,)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (BK, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (BK, dh)
+    dh = q.shape[0]
+    s = k @ q * (dh ** -0.5)                             # (BK,)
+
+    kpos = offset + ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (k.shape[0],), 0)
+    valid = (kpos <= pos) & (kpos > pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[0] = alpha * l_ref[0] + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[0] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+        m_out[0, 0] = m_ref[0]
+        l_out[0, 0] = l_ref[0]
+
+
+def decode_attention(q, k_cache, v_cache, pos, shard_offset, window=None, *,
+                     block_k: int = 256, interpret: bool = True):
+    """q: (B, H, dh); caches: (B, S_loc, Hkv, dh); pos/shard_offset: scalar
+    i32.  Returns (o (B,H,dh) f32 unnormalized, m (B,H), l (B,H)) — the
+    same contract as ``local_decode_attention`` (LSE-merge ready)."""
+    b, h, dh = q.shape
+    s_loc, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hkv
+    block_k = min(block_k, s_loc)
+    assert s_loc % block_k == 0
+    nk = s_loc // block_k
+    win = jnp.asarray(window if window is not None else 1 << 30, jnp.int32)
+    scalars = jnp.stack([jnp.asarray(pos, jnp.int32),
+                         jnp.asarray(shard_offset, jnp.int32), win])
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # scalars
+            pl.BlockSpec((1, 1, dh), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda bi, hi, ki, rep=rep: (bi, ki, hi // rep, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda bi, hi, ki, rep=rep: (bi, ki, hi // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, dh), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ki: (bi, hi)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ki: (bi, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((dh,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, q, k_cache, v_cache)
+    return o, m, l

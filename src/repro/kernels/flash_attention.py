@@ -1,0 +1,113 @@
+"""Pallas TPU flash attention (causal / sliding-window / GQA).
+
+TPU-native adaptation of the attention hot spot (DESIGN §6): online-softmax
+attention with q/k tiles staged HBM→VMEM by ``pl.pallas_call`` BlockSpecs,
+MXU-aligned (128×128) tiles, f32 accumulators in VMEM scratch.  GQA is
+expressed in the k/v ``index_map`` (q-head h reads kv-head h//rep), so
+grouped K/V are never materialized per q-head.
+
+Layout: q (B, H, Sq, dh); k/v (B, Hkv, Skv, dh); grid (B, H, nQ, nK) with
+the kv dimension iterated minor-most (sequentially on TPU) so the (m, l,
+acc) scratch carries across kv tiles of one q tile.
+
+Validated in ``interpret=True`` mode against ``ref.attention_ref`` (this
+container is CPU-only; TPU is the compile target).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  window: int | None, seq_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (BQ, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, dh)
+    s = q @ k.T                                          # (BQ, BK)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = kpos < seq_kv
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] \
+        + p @ v_ref[0, 0].astype(jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: (B, H, Sq, dh); k/v: (B, Hkv, Skv, dh) -> (B, H, Sq, dh)."""
+    b, h, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert h % hkv == 0
+    rep = h // hkv
+    scale = dh ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(skv, block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, seq_kv=skv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b_, h_, qi, ki, rep=rep: (b_, h_ // rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b_, h_, qi, ki, rep=rep: (b_, h_ // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q,), jnp.float32),      # running sum-exp l
+            pltpu.VMEM((block_q, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

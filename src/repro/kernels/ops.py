@@ -1,0 +1,68 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) so the kernel body
+executes in Python for correctness validation; on a real TPU backend pass
+``interpret=False`` (or rely on the default platform detection) to compile
+through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import selective_scan as _ss
+from repro.kernels import vfl_grad as _vg
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_c", "interpret"))
+def selective_scan(xa, dt, b_ssm, c_ssm, a_log, d_skip, *, chunk=128,
+                   block_c=512, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    y, _ = _ss.selective_scan(xa, dt, b_ssm, c_ssm, a_log, d_skip,
+                              chunk=chunk, block_c=block_c,
+                              interpret=interpret)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "block_b", "block_d",
+                                             "interpret"))
+def vfl_grad(xb, w, theta, lam=0.0, *, block_b=128, block_d=128,
+             interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    z_partial, g = _vg.vfl_grad(xb, w, theta, lam, block_b=block_b,
+                                block_d=block_d, interpret=interpret)
+    return z_partial.sum(0), g
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, shard_offset, window=None, *,
+                     block_k=256, interpret=None):
+    """Flash-decoding partials (o, m, l) — LSE-merge-ready (see
+    repro.kernels.decode_attention)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    from repro.kernels import decode_attention as _da
+    return _da.decode_attention(q, k_cache, v_cache, pos, shard_offset,
+                                window, block_k=block_k,
+                                interpret=interpret)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B, H, Sq, dh); k/v: (B, Hkv, Skv, dh) -> (B, H, Sq, dh)."""
+    b, h, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * dh ** -0.5,
+                   kk.astype(jnp.float32))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def selective_scan_ref(xa, dt, b_ssm, c_ssm, a_log, d_skip):
+    """Sequential mamba-1 scan oracle.  See repro.models.ssm."""
+    from repro.models.ssm import selective_scan_ref as _ref
+    return _ref(xa, dt, b_ssm, c_ssm, a_log, d_skip)
+
+
+def vfl_grad_ref(xb, w, theta, lam: float):
+    """Fused VFL forward partial + BUM backward (the paper's hot loop).
+
+    xb: (B, D) minibatch feature block; w: (D,); theta: (B,).
+    Returns (z (B,) partial products, g (D,) block gradient)."""
+    z = xb.astype(jnp.float32) @ w.astype(jnp.float32)
+    g = xb.astype(jnp.float32).T @ theta.astype(jnp.float32) \
+        / xb.shape[0] + lam * w.astype(jnp.float32)
+    return z, g

@@ -1,0 +1,79 @@
+"""Pallas TPU selective-scan (mamba-1 recurrence).
+
+TPU-native adaptation (DESIGN §6): the GPU kernel's warp-parallel scan has
+no TPU analogue; instead the sequence is processed in VMEM-resident chunks
+with the (C_blk, N) state carried in VMEM scratch across sequential grid
+steps (TPU grids iterate the minor-most dimension sequentially, which
+Pallas guarantees for carried scratch).  Channels are blocked to fit VMEM
+and map to the VPU lanes (128-multiples); the channel-block grid dimension
+is parallel (the state is per-channel, no cross-channel coupling — the
+same property that lets the party axis shard channels communication-free).
+
+Layout: xa/dt (B, S, C); b/c_ssm (B, S, N); a_log (C, N); d_skip (C).
+Grid (B, nC, nS) — nS minor-most (sequential), scratch h (C_blk, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(xa_ref, dt_ref, b_ref, c_ref, alog_ref, dskip_ref, y_ref,
+                 h_ref, *, chunk: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = -jnp.exp(alog_ref[...].astype(jnp.float32))        # (Cb, N)
+    d_skip = dskip_ref[...].astype(jnp.float32)            # (Cb,)
+
+    def step(t, h):
+        xa_t = xa_ref[0, t].astype(jnp.float32)            # (Cb,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)            # (Cb,)
+        b_t = b_ref[0, t].astype(jnp.float32)              # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)              # (N,)
+        da = jnp.exp(dt_t[:, None] * a)                    # (Cb, N)
+        h = da * h + (dt_t * xa_t)[:, None] * b_t[None, :]
+        y = jnp.sum(h * c_t[None, :], axis=1) + d_skip * xa_t
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+def selective_scan(xa, dt, b_ssm, c_ssm, a_log, d_skip, *,
+                   chunk: int = 128, block_c: int = 512,
+                   interpret: bool = True):
+    """Returns (y (B,S,C), None).  Matches ``ref.selective_scan_ref`` (y)."""
+    bsz, s, c = xa.shape
+    n = a_log.shape[1]
+    chunk = min(chunk, s)
+    block_c = min(block_c, c)
+    assert s % chunk == 0 and c % block_c == 0
+    ns, nc = s // chunk, c // block_c
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(bsz, nc, ns),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_c), lambda b, ci, si: (b, si, ci)),
+            pl.BlockSpec((1, chunk, block_c), lambda b, ci, si: (b, si, ci)),
+            pl.BlockSpec((1, chunk, n), lambda b, ci, si: (b, si, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, ci, si: (b, si, 0)),
+            pl.BlockSpec((block_c, n), lambda b, ci, si: (ci, 0)),
+            pl.BlockSpec((block_c,), lambda b, ci, si: (ci,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_c),
+                               lambda b, ci, si: (b, si, ci)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, c), xa.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, n), jnp.float32)],
+        interpret=interpret,
+    )(xa, dt, b_ssm, c_ssm, a_log, d_skip)
+    return y, None

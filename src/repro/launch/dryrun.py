@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not move them.
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) lowers + compiles.
+
+For each combination this script:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod);
+  2. lowers + compiles train_step / prefill_step / serve_step against
+     ShapeDtypeStruct inputs (no allocation);
+  3. prints ``compiled.memory_analysis()`` (fit proof) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline);
+  4. parses collective bytes from the post-SPMD HLO;
+  5. writes a JSON record under results/dryrun/.
+
+Roofline variants: ``--unroll N`` lowers an N-layer *unrolled* model
+(see hlo_analysis module docstring for why).
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_arch, ARCH_IDS
+from repro.configs.inputs import input_specs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import batch_axes_for, make_production_mesh
+from repro.models import model as model_lib
+from repro.optim.adamw import adamw_init
+from repro.sharding.api import Runtime, use_runtime
+
+
+def batch_specs(cfg, shape, rt):
+    """PartitionSpec tree matching input_specs structure."""
+    bs = rt.bspec(shape.global_batch)
+    if shape.mode in ("train", "prefill"):
+        sp = {"tokens": P(bs, None)}
+        if shape.mode == "train":
+            sp["labels"] = P(bs, None)
+        if cfg.enc_dec:
+            sp["frames"] = P(bs, None, rt.model_axis)   # VFL feature split
+        if cfg.arch_type == "vlm":
+            sp["patches"] = P(bs, None, rt.model_axis)  # VFL feature split
+        return sp
+    return {"token": P(bs), "pos": P(),
+            "cache": model_lib.cache_specs(rt, cfg, shape.global_batch)}
+
+
+def shardings_of(rt, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(rt.mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _unrolled_cfg(cfg, n: int):
+    """Shrink depth for the unrolled roofline variant (keeps per-layer
+    structure: `n` layers, or `n` periods for hybrid archs)."""
+    if cfg.period is not None:
+        return dataclasses.replace(cfg, n_layers=n * len(cfg.period))
+    return dataclasses.replace(cfg, n_layers=n,
+                               enc_layers=min(cfg.enc_layers, n))
+
+
+def build_step(cfg, shape, rt, mode, serve_weights="fsdp",
+               cast_bf16: bool = False):
+    key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_s = jax.eval_shape(functools.partial(model_lib.init_params, cfg),
+                              key_s)
+    pspecs = model_lib.param_specs(cfg)
+    if mode == "decode" and serve_weights == "replicated_bf16":
+        pspecs = model_lib.serve_param_specs(cfg)
+        params_s = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16), params_s)
+    bspecs = batch_specs(cfg, shape, rt)
+    binputs = input_specs(cfg, shape, rt, abstract=True)
+
+    if mode == "train":
+        opt_s = jax.eval_shape(adamw_init, params_s)
+        opt_specs = {"mu": pspecs, "nu": pspecs, "step": P()}
+
+        def train_step(params, opt, batch, key):
+            def loss_fn(p):
+                if cast_bf16:
+                    # cast the whole tree ONCE, before XLA's FSDP
+                    # all-gathers: weight movement + grad reduction then
+                    # happen in bf16 (half the collective bytes). §Perf.
+                    p = jax.tree.map(
+                        lambda a: a.astype(jnp.bfloat16)
+                        if a.dtype == jnp.float32 else a, p)
+                return model_lib.train_loss(rt, cfg, p, batch, key)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            from repro.optim.adamw import adamw_update
+            params, opt = adamw_update(params, grads, opt)
+            return loss, params, opt
+
+        in_sh = (shardings_of(rt, pspecs), shardings_of(rt, opt_specs),
+                 shardings_of(rt, bspecs), NamedSharding(rt.mesh, P()))
+        out_sh = (NamedSharding(rt.mesh, P()), shardings_of(rt, pspecs),
+                  shardings_of(rt, opt_specs))
+        fn = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+        args = (params_s, opt_s, binputs, key_s)
+        return fn, args
+
+    if mode == "prefill":
+        def prefill_step(params, batch, key):
+            tok, _cache = model_lib.prefill(rt, cfg, params, batch, key)
+            return tok
+        bs = rt.bspec(shape.global_batch)
+        in_sh = (shardings_of(rt, pspecs), shardings_of(rt, bspecs),
+                 NamedSharding(rt.mesh, P()))
+        out_sh = NamedSharding(rt.mesh, P(bs))
+        fn = jax.jit(prefill_step, in_shardings=in_sh, out_shardings=out_sh)
+        return fn, (params_s, binputs, key_s)
+
+    # decode
+    def serve_step(params, batch, key):
+        return model_lib.decode_step(rt, cfg, params, batch, key)
+    bs = rt.bspec(shape.global_batch)
+    cache_sp = model_lib.cache_specs(rt, cfg, shape.global_batch)
+    in_sh = (shardings_of(rt, pspecs), shardings_of(rt, bspecs),
+             NamedSharding(rt.mesh, P()))
+    out_sh = (NamedSharding(rt.mesh, P(bs)), shardings_of(rt, cache_sp))
+    fn = jax.jit(serve_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(1,))  # cache buffers update in place
+    return fn, (params_s, binputs, key_s)
+
+
+def run_one(arch_id: str, shape_name: str, multi_pod: bool,
+            unroll: int | None, out_dir: str, cache_seq_axes=("model",),
+            quiet: bool = False, secure_mode: str = "two_tree",
+            moe_dispatch: str = "replicated",
+            serve_weights: str = "fsdp",
+            seq_parallel: bool = False,
+            cast_bf16: bool = False) -> dict:
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.supports_long:
+        return {"arch": arch_id, "shape": shape_name,
+                "status": "skipped (full attention; see DESIGN §Arch-applicability)"}
+    if unroll is not None:
+        cfg = _unrolled_cfg(cfg, unroll)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rt = Runtime(mesh=mesh, batch_axes=batch_axes_for(mesh),
+                 unroll_layers=unroll, cache_seq_axes=tuple(cache_seq_axes),
+                 secure_mode=secure_mode, moe_dispatch=moe_dispatch,
+                 seq_parallel_norms=seq_parallel)
+    rec = {"arch": arch_id, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "unroll": unroll, "cache_seq_axes": list(cache_seq_axes),
+           "secure_mode": secure_mode, "moe_dispatch": moe_dispatch,
+           "serve_weights": serve_weights}
+    t0 = time.time()
+    with use_runtime(rt):
+        fn, args = build_step(cfg, shape, rt, shape.mode,
+                              serve_weights=serve_weights,
+                              cast_bf16=cast_bf16)
+        lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        rec["flops_per_device"] = float(cost.get("flops", 0.0))
+        rec["bytes_accessed_per_device"] = float(
+            cost.get("bytes accessed", 0.0))
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        }
+        txt = compiled.as_text()
+        coll = hlo_analysis.collective_stats(txt)
+        rec["collectives"] = {"bytes_by_kind": coll.bytes_by_kind,
+                              "count_by_kind": coll.count_by_kind,
+                              "total_bytes": coll.total_bytes}
+        rec["model_flops"] = hlo_analysis.model_flops(get_arch(arch_id),
+                                                      shape)
+        rec["param_count"] = hlo_analysis.param_count(get_arch(arch_id))
+        rec["status"] = "ok"
+        if not quiet:
+            print(f"== {arch_id} × {shape_name} × {rec['mesh']}"
+                  f"{' unroll=' + str(unroll) if unroll else ''} ==")
+            print("memory_analysis:", rec["memory"])
+            print("cost_analysis: flops/device={:.3e} bytes/device={:.3e}"
+                  .format(rec["flops_per_device"],
+                          rec["bytes_accessed_per_device"]))
+            print("collectives:", coll.bytes_by_kind)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch_id}_{shape_name}_{rec['mesh']}" + \
+            (f"_unroll{unroll}" if unroll else "") + \
+            ("_seqdp" if tuple(cache_seq_axes) != ("model",) else "") + \
+            ("_ring" if secure_mode == "ring_masks" else "") + \
+            ("_a2a" if moe_dispatch == "alltoall" else "") + \
+            ("_repw" if serve_weights == "replicated_bf16" else "") + \
+            ("_sp" if seq_parallel else "") + \
+            ("_bf16" if cast_bf16 else "")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=list(SHAPES) + ["all"])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--unroll", type=int, default=None)
+    ap.add_argument("--cache-seq-axes", default="model",
+                    help="comma list, e.g. 'data,model' (perf hillclimb)")
+    ap.add_argument("--secure-mode", default="two_tree",
+                    choices=["two_tree", "ring_masks"])
+    ap.add_argument("--moe-dispatch", default="replicated",
+                    choices=["replicated", "alltoall"])
+    ap.add_argument("--serve-weights", default="fsdp",
+                    choices=["fsdp", "replicated_bf16"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--cast-bf16", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_one(arch, shape, mp, args.unroll, args.out,
+                                  tuple(args.cache_seq_axes.split(",")),
+                                  secure_mode=args.secure_mode,
+                                  moe_dispatch=args.moe_dispatch,
+                                  serve_weights=args.serve_weights,
+                                  seq_parallel=args.seq_parallel,
+                                  cast_bf16=args.cast_bf16)
+                    if rec["status"].startswith("skipped"):
+                        print(f"-- {arch} × {shape}: {rec['status']}")
+                except Exception as e:  # pragma: no cover
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, str(e)))
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete: all combinations lowered + compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``collective_bytes`` is not in ``cost_analysis()`` — we parse the
+post-SPMD-partitioning HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Caveat (measured, see EXPERIMENTS §Roofline methodology): XLA's
+HloCostAnalysis and the HLO text count a ``while`` (lax.scan) body ONCE,
+not trip-count times.  The dry-run therefore lowers *unrolled* 1-layer and
+2-layer variants and linearly extrapolates the marginal per-layer cost to
+the full depth; the full scanned model is compiled separately to prove
+memory fit and shardability.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16,128]' -> byte size; tuples handled by caller."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _line_output_bytes(line: str) -> int:
+    """Bytes of the op's output (LHS shape), tuple-aware."""
+    m = re.search(r"=\s*(\(?)([^)=]*?)\)?\s*(all-gather|all-reduce|"
+                  r"reduce-scatter|all-to-all|collective-permute)", line)
+    if not m:
+        return 0
+    shapes_part = m.group(2)
+    total = 0
+    for sm in _SHAPE_RE.finditer(shapes_part):
+        total += _shape_bytes(sm.group(0))
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    count_by: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match op instructions only (e.g. "%x = f32[..] all-reduce(...)"),
+        # including -start/-done async forms (count starts only)
+        for kind in _COLLECTIVE_KINDS:
+            if re.search(rf"=\s*[^=]*\b{kind}(-start)?\(", ls):
+                b = _line_output_bytes(ls)
+                bytes_by[kind] += b
+                count_by[kind] += 1
+                break
+    return CollectiveStats(bytes_by, count_by)
+
+
+# ---------------------------------------------------------------------------
+# hardware model (TPU v5e)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective bytes
+    model_flops: float           # analytic useful flops (global)
+    n_chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total_hlo = self.flops * self.n_chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for
+    inference (D = tokens processed)."""
+    n_active = active_param_count(cfg)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq
+
+
+def param_count(cfg) -> float:
+    """Total parameters (analytic, matches init_params)."""
+    return _count(cfg, active_only=False)
+
+
+def active_param_count(cfg) -> float:
+    """Parameters touched per token (MoE: top-k experts only)."""
+    return _count(cfg, active_only=True)
+
+
+def _count(cfg, active_only: bool) -> float:
+    d = cfg.d_model
+    emb = cfg.padded_vocab * d
+    total = emb + d  # embed + final norm (tied head)
+    from repro.models.model import layer_kinds
+    for kind in layer_kinds(cfg):
+        total += d  # norm1
+        if kind.startswith("attn"):
+            dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+            total += d * h * dh + 2 * d * hkv * dh + h * dh * d
+        else:
+            s = cfg.ssm
+            ci = s.expand * d
+            dt_rank = max(1, -(-d // 16))
+            total += (d * 2 * ci + s.d_conv * ci + ci
+                      + ci * (dt_rank + 2 * s.d_state)
+                      + dt_rank * ci + ci + ci * s.d_state + ci + ci * d)
+        if kind.endswith("mlp"):
+            total += d + 3 * d * cfg.d_ff
+        elif kind.endswith("moe"):
+            e = cfg.moe.top_k if active_only else cfg.moe.n_experts
+            total += d + cfg.d_model * cfg.moe.n_experts  # norm + router
+            total += e * 3 * d * cfg.moe.d_expert
+    if cfg.enc_dec:
+        total += 2 * d * d  # enc_proj
+        dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+        per_enc = 2 * d + d * h * dh + 2 * d * hkv * dh + h * dh * d \
+            + 3 * d * cfg.d_ff
+        total += cfg.enc_layers * per_enc + d
+        # decoder cross-attn
+        total += cfg.n_layers * (d + d * h * dh + 2 * d * hkv * dh
+                                 + h * dh * d)
+    if cfg.arch_type == "vlm":
+        total += cfg.d_patch * d
+    return float(total)

@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+Axis roles: see ``repro.sharding.api`` — "model" is the party axis (q=16
+vertical-federated parties), "data" the intra-party collaborative level,
+"pod" the inter-active-party-group level of BAPA.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, model_parallel: int,
+                  pods: int = 1) -> Mesh:
+    """Smaller meshes for tests/examples (same axis names, incl. 'pod')."""
+    data = devices // (model_parallel * pods)
+    devs = np.array(jax.devices()[:pods * data * model_parallel])
+    devs = devs.reshape(pods, data, model_parallel)
+    return Mesh(devs, ("pod", "data", "model"),
+                axis_types=(AxisType.Auto,) * 3)
+
+
+def batch_axes_for(mesh: Mesh):
+    if "pod" in mesh.axis_names and mesh.shape.get("pod", 1) > 1:
+        return ("pod", "data")
+    return ("data",)

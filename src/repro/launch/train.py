@@ -1,0 +1,113 @@
+"""Production training launcher.
+
+On real hardware this runs the same jitted ``train_step`` the dry-run
+lowers, over the production mesh; on this CPU container it is exercised
+with reduced configs + a small mesh (see examples/train_lm.py for the
+runnable end-to-end driver).
+
+Optimizers: ``adamw`` (default) or ``vfb2_sgd`` (bounded-staleness BAPA
+emulation, --tau) — the paper's asynchronous update rule at framework
+scale.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.base import ShapeConfig, get_arch
+from repro.data.tokens import synthetic_token_batches
+from repro.launch.mesh import batch_axes_for, make_mesh_for
+from repro.models import model as model_lib
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.delayed import delayed_init, delayed_update
+from repro.sharding.api import Runtime, use_runtime
+
+
+def build_runtime(model_parallel: int, reduced: bool) -> Runtime:
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    mesh = make_mesh_for(n - n % mp, mp)
+    kw = dict(attn_chunk=128, loss_chunk=64) if reduced else {}
+    return Runtime(mesh=mesh, batch_axes=batch_axes_for(mesh), **kw)
+
+
+def train(arch: str, steps: int, batch: int, seq: int, lr: float,
+          optimizer: str = "adamw", tau: int = 4, reduced: bool = True,
+          ckpt_dir: str | None = None, log_every: int = 10,
+          model_parallel: int = 1):
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    rt = build_runtime(model_parallel, reduced)
+    key = jax.random.PRNGKey(0)
+
+    with use_runtime(rt):
+        params = model_lib.init_params(cfg, key)
+        if optimizer == "adamw":
+            opt = adamw_init(params)
+            upd = functools.partial(adamw_update, lr=lr)
+        else:
+            opt = delayed_init(params, tau)
+            upd = functools.partial(delayed_update, lr=lr)
+
+        @jax.jit
+        def step_fn(params, opt, batch, key):
+            loss, grads = jax.value_and_grad(
+                lambda p: model_lib.train_loss(rt, cfg, p, batch, key)
+            )(params)
+            params, opt = upd(params, grads, opt)
+            return loss, params, opt
+
+        data = synthetic_token_batches(cfg.vocab, batch, seq, steps)
+        losses = []
+        t0 = time.time()
+        for i, b in enumerate(data):
+            if cfg.enc_dec:
+                b["frames"] = jnp.zeros((batch, cfg.enc_seq, 2 * cfg.d_model),
+                                        jnp.bfloat16)
+            if cfg.arch_type == "vlm":
+                b["patches"] = jnp.zeros((batch, cfg.n_patches, cfg.d_patch),
+                                         jnp.bfloat16)
+            key, sub = jax.random.split(key)
+            loss, params, opt = step_fn(params, opt,
+                                        jax.tree.map(jnp.asarray, b), sub)
+            losses.append(float(loss))
+            if i % log_every == 0:
+                print(f"step {i:5d} loss {losses[-1]:.4f} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
+        if ckpt_dir:
+            save_checkpoint(ckpt_dir, {"params": params}, step=steps)
+            print("checkpoint saved to", ckpt_dir)
+        return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "vfb2_sgd"])
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--full", action="store_true",
+                    help="full (production) config instead of reduced")
+    ap.add_argument("--ckpt")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    a = ap.parse_args()
+    losses = train(a.arch, a.steps, a.batch, a.seq, a.lr, a.optimizer,
+                   a.tau, reduced=not a.full, ckpt_dir=a.ckpt,
+                   model_parallel=a.model_parallel)
+    print(f"final loss: {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import (init_params, param_specs, train_loss,
+                                prefill, decode_step, init_cache,
+                                cache_specs, layer_kinds, layer_windows)

@@ -1,0 +1,164 @@
+"""GQA attention: chunked (flash-style) training/prefill path and a
+sequence-sharded decode path.
+
+* ``chunked_attention`` — online-softmax attention computed in query chunks
+  with a ``lax.scan`` so the (S×S) score matrix is never materialized
+  (required for 32k prefill).  Supports causal masking, sliding windows
+  (gemma3's 5:1 local:global) and GQA head groups.  This is also the
+  jnp oracle for the Pallas flash kernel (`repro.kernels.flash_attention`).
+
+* ``decode_attend_update`` — one-token decode against a KV cache whose
+  *sequence* dimension is sharded over the party ("model") mesh axis (and
+  optionally the "data" axis for long-context): each shard attends to its
+  local KV block, and the partial (max, sum-exp, weighted-value) triples
+  are psum-merged — the same partial-result aggregation pattern as the
+  paper's Algorithm 1 (here unmasked: no privacy requirement on serving
+  partials, documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def apply_rope_positions(x, positions, theta: float = 10000.0):
+    """Rotary embedding at explicit positions.  x: (B, S, H, dh);
+    positions: (B, S) or (1, S) int32 (broadcasts over batch)."""
+    from repro.models.layers import apply_rope
+    return apply_rope(x, jnp.broadcast_to(positions, x.shape[:2]), theta)
+
+
+def _gqa_expand(k, n_heads):
+    """(B, S, Hkv, dh) -> logical per-q-head view via repeat."""
+    b, s, hkv, dh = k.shape
+    rep = n_heads // hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      q_offset: int = 0,
+                      chunk: int = 1024):
+    """q: (B, Sq, H, dh); k/v: (B, Skv, Hkv, dh).  Returns (B, Sq, H, dh).
+
+    ``window``: if set, query t attends to keys in (t-window, t] (causal
+    sliding window).  ``q_offset``: absolute position of q[0] relative to
+    k[0] (for cross-chunk decode prefill continuation).
+    """
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    assert h % hkv == 0
+    rep = h // hkv
+    scale = dh ** -0.5
+    chunk = min(chunk, sq)
+    n_chunks = sq // chunk
+    assert sq % chunk == 0, (sq, chunk)
+
+    qr = q.reshape(b, n_chunks, chunk, hkv, rep, dh)
+    kpos = jnp.arange(skv)
+
+    def body(_, qc_i):
+        qc, i = qc_i  # qc: (B, chunk, Hkv, rep, dh)
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qc.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))
+        mask = jnp.ones((chunk, skv), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v)
+        return None, o
+
+    # flash-style memory behaviour: recompute chunk scores in the backward
+    # pass instead of storing the (S×S) probabilities across all chunks
+    body = jax.checkpoint(body)
+    _, out = jax.lax.scan(body, None,
+                          (jnp.moveaxis(qr, 1, 0), jnp.arange(n_chunks)))
+    # out: (n_chunks, B, chunk, Hkv, rep, dh)
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, dh)
+
+
+def reference_attention(q, k, v, *, causal=True, window=None, q_offset=0):
+    """Naive O(S²)-memory oracle (tests only)."""
+    h, hkv = q.shape[2], k.shape[2]
+    kk, vv = _gqa_expand(k, h), _gqa_expand(v, h)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   kk.astype(jnp.float32))
+    qpos = q_offset + jnp.arange(q.shape[1])
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), vv)
+
+
+# ---------------------------------------------------------------------------
+# decode against sharded cache
+# ---------------------------------------------------------------------------
+
+def local_decode_attention(q, k_cache, v_cache, pos, shard_offset,
+                           window: Optional[int] = None):
+    """Partial decode attention over the *local* cache shard.
+
+    q: (B, H, dh); caches: (B, S_loc, Hkv, dh); pos: scalar int32 — index of
+    the current token (attends to cache slots [0, pos], absolute).
+    Returns (o_partial, m, l): un-normalized weighted values + max + sumexp
+    in f32, ready for a psum-style log-sum-exp merge across shards.
+    """
+    b, s_loc, hkv, dh = k_cache.shape
+    h = q.shape[1]
+    rep = h // hkv
+    qg = q.reshape(b, hkv, rep, dh)
+    scale = dh ** -0.5
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32) * scale,
+                   k_cache.astype(jnp.float32))
+    kpos = shard_offset + jnp.arange(s_loc)
+    valid = kpos[None, None, None, :] <= pos
+    if window is not None:
+        valid &= kpos[None, None, None, :] > (pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                  # (B, Hkv, rep)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid, p, 0.0)
+    l = jnp.sum(p, axis=-1)                                  # (B, Hkv, rep)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, dh), m.reshape(b, h), l.reshape(b, h)
+
+
+def merge_partial_attention(o, m, l, axis_name: str):
+    """LSE-merge partial attention results over a mesh axis.
+
+    Numerically stable combine: weights w_i = l_i * exp(m_i − m*) with
+    m* = pmax(m); out = Σ o_i·exp(m_i − m*) / Σ w_i.
+    """
+    m_star = jax.lax.pmax(m, axis_name)                       # (B, H)
+    corr = jnp.exp(m - m_star)
+    o_corr = o * corr[..., None]
+    l_corr = l * corr
+    o_sum = jax.lax.psum(o_corr, axis_name)
+    l_sum = jax.lax.psum(l_corr, axis_name)
+    return o_sum / jnp.maximum(l_sum[..., None], 1e-30)
+
+
+def cache_scatter(cache, new, pos, shard_offset):
+    """Write ``new`` (B, Hkv, dh) at absolute position ``pos`` if this shard
+    owns it; no-op otherwise.  cache: (B, S_loc, Hkv, dh)."""
+    s_loc = cache.shape[1]
+    local = pos - shard_offset
+    owns = (local >= 0) & (local < s_loc)
+    idx = jnp.clip(local, 0, s_loc - 1)
+    updated = jax.lax.dynamic_update_slice_in_dim(
+        cache, new[:, None].astype(cache.dtype), idx, axis=1)
+    return jnp.where(owns, updated, cache)

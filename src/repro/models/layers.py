@@ -1,0 +1,69 @@
+"""Shared building blocks: norms, rotary embeddings, initializers.
+
+Pure-JAX (no flax): params are plain dict pytrees; every module is a pair
+(init_fn, apply_fn).  Compute dtype is bf16 with f32 params and f32
+softmax/norm accumulation (TPU mixed-precision convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ACT_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+def normal_init(key, shape, scale=0.02, dtype=PARAM_DTYPE):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, d_head, 2) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, dh); positions: (..., S) int32."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d_head, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = silu(x @ w_gate.astype(x.dtype))
+    u = x @ w_up.astype(x.dtype)
+    return (g * u) @ w_down.astype(x.dtype)
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": normal_init(k1, (d_model, d_ff)),
+        "w_up": normal_init(k2, (d_model, d_ff)),
+        "w_down": normal_init(k3, (d_ff, d_model)),
+    }
+
+
+def apply_mlp(params, x):
+    return swiglu(x, params["w_gate"], params["w_up"], params["w_down"])

@@ -1,0 +1,754 @@
+"""Composable decoder/enc-dec model zoo with VFB² secure VFL frontends.
+
+One code path covers all ten assigned architectures via ``ArchConfig``:
+uniform dense/MoE/SSM stacks are ``lax.scan``-over-layers (stacked params);
+jamba scans its 8-layer period; gemma3 passes per-layer window sizes as
+scan inputs.  Modes: ``train`` (loss), ``prefill`` (next token + KV cache),
+``decode`` (one token against a sequence-sharded cache).
+
+Sharding: see DESIGN §5.  Batch over ("pod","data"); contraction/feature
+dims over "model" (= the party axis); q-heads over "model" when divisible,
+otherwise the *query sequence* is sharded over "model" (gemma3/whisper);
+decode caches shard the sequence dim over ``rt.cache_seq_axes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (ACT_DTYPE, apply_mlp, init_mlp, normal_init,
+                                 rms_norm)
+from repro.models.attention import apply_rope_positions
+from repro.sharding.api import Runtime, shard
+from repro.vfl.embed import secure_feature_project, secure_vocab_embed
+from repro.vfl.heads import vocab_parallel_greedy, vocab_parallel_loss
+
+AUX_LOSS_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# layer kinds
+# ---------------------------------------------------------------------------
+
+def layer_kinds(cfg: ArchConfig) -> Tuple[str, ...]:
+    """Per-layer kind sequence for the decoder stack."""
+    if cfg.arch_type == "ssm":
+        return ("ssm",) * cfg.n_layers
+    if cfg.period is not None:
+        n_per = cfg.n_layers // len(cfg.period)
+        assert cfg.n_layers % len(cfg.period) == 0
+        return cfg.period * n_per
+    ffn = "moe" if cfg.moe is not None else "mlp"
+    return (f"attn_{ffn}",) * cfg.n_layers
+
+
+def layer_windows(cfg: ArchConfig, seq_len: int) -> np.ndarray:
+    """Per-layer attention window (== seq_len ⇒ effectively global)."""
+    n = cfg.n_layers
+    win = np.full(n, seq_len, np.int32)
+    if cfg.window:
+        win[:] = cfg.window
+        if cfg.global_every:
+            win[cfg.global_every - 1::cfg.global_every] = seq_len
+    return win
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ArchConfig):
+    dh, h, hkv, d = cfg.head_dim, cfg.n_heads, cfg.n_kv, cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": normal_init(ks[0], (d, h * dh)),
+        "wk": normal_init(ks[1], (d, hkv * dh)),
+        "wv": normal_init(ks[2], (d, hkv * dh)),
+        "wo": normal_init(ks[3], (h * dh, d), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _init_block(key, cfg: ArchConfig, kind: str):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": jnp.zeros((d,), jnp.float32)}
+    if kind.startswith("attn"):
+        p["attn"] = _init_attn(ks[0], cfg)
+    else:  # ssm mixer
+        s = cfg.ssm
+        p["ssm"] = ssm_lib.init_ssm(ks[0], d, s.d_state, s.d_conv, s.expand)
+    if kind.endswith("mlp"):
+        p["norm2"] = jnp.zeros((d,), jnp.float32)
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff)
+    elif kind.endswith("moe"):
+        p["norm2"] = jnp.zeros((d,), jnp.float32)
+        p["moe"] = moe_lib.init_moe(ks[1], d, cfg.moe.d_expert,
+                                    cfg.moe.n_experts)
+    if kind == "attn_cross":  # whisper decoder block: self + cross + mlp
+        p["norm_x"] = jnp.zeros((d,), jnp.float32)
+        p["xattn"] = _init_attn(ks[2], cfg)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": normal_init(ks[0], (cfg.padded_vocab, cfg.d_model)),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    kinds = layer_kinds(cfg)
+    if cfg.period is not None:
+        n_per = cfg.n_layers // len(cfg.period)
+        periods = []
+        for pos, kind in enumerate(cfg.period):
+            layers = [_init_block(jax.random.fold_in(ks[1], pos * 101 + i),
+                                  cfg, kind) for i in range(n_per)]
+            periods.append(_stack(layers))
+        params["periods"] = periods
+    else:
+        dec_kind = "attn_cross" if cfg.enc_dec else None
+        layers = [_init_block(jax.random.fold_in(ks[1], i), cfg,
+                              dec_kind or kinds[i])
+                  for i in range(cfg.n_layers)]
+        params["stack"] = _stack(layers)
+    if cfg.enc_dec:
+        d_frame = 2 * cfg.d_model
+        params["enc_proj"] = normal_init(ks[2], (d_frame, cfg.d_model))
+        enc_layers = [_init_block(jax.random.fold_in(ks[3], i), cfg,
+                                  "attn_mlp")
+                      for i in range(cfg.enc_layers)]
+        params["enc_stack"] = _stack(enc_layers)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if cfg.arch_type == "vlm":
+        params["patch_proj"] = normal_init(ks[4], (cfg.d_patch, cfg.d_model))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sharding specs for params (mirrors init_params)
+# ---------------------------------------------------------------------------
+
+def _attn_specs():
+    return {"wq": P("data", "model"), "wk": P("data", "model"),
+            "wv": P("data", "model"), "wo": P("model", "data")}
+
+
+def _block_specs(cfg: ArchConfig, kind: str):
+    sp: Dict[str, Any] = {"norm1": P(None)}
+    if kind.startswith("attn"):
+        sp["attn"] = _attn_specs()
+    else:
+        sp["ssm"] = {
+            "w_in": P("data", "model"), "conv_w": P(None, "model"),
+            "conv_b": P("model"), "w_x_dbc": P("model", None),
+            "w_dt": P(None, "model"), "dt_bias": P("model"),
+            "a_log": P("model", None), "d_skip": P("model"),
+            "w_out": P("model", "data"),
+        }
+    if kind.endswith("mlp"):
+        sp["norm2"] = P(None)
+        sp["mlp"] = {"w_gate": P("data", "model"), "w_up": P("data", "model"),
+                     "w_down": P("model", "data")}
+    elif kind.endswith("moe"):
+        sp["norm2"] = P(None)
+        sp["moe"] = {"router": P("data", None),
+                     "w_gate": P("model", "data", None),
+                     "w_up": P("model", "data", None),
+                     "w_down": P("model", None, "data")}
+    if kind == "attn_cross":
+        sp["norm_x"] = P(None)
+        sp["xattn"] = _attn_specs()
+    return sp
+
+
+def serve_param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    """Inference-time param sharding: party ("model") sharding kept — it is
+    the VFL partition — but the FSDP ("data") dimension is replicated:
+    per-token weight all-gathers are ruinous at decode (EXPERIMENTS §Perf
+    hillclimb 2); weights are served in bf16 to fit."""
+    def strip(sp):
+        return P(*(None if a == "data" else a for a in sp))
+    return jax.tree.map(strip, param_specs(cfg),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _prepend_layer_dim(spec_tree):
+    return jax.tree.map(lambda s: P(None, *s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    kinds = layer_kinds(cfg)
+    sp: Dict[str, Any] = {
+        "embed": P("model", None),
+        "final_norm": P(None),
+    }
+    if cfg.period is not None:
+        sp["periods"] = [_prepend_layer_dim(_block_specs(cfg, k))
+                         for k in cfg.period]
+    else:
+        dec_kind = "attn_cross" if cfg.enc_dec else kinds[0]
+        sp["stack"] = _prepend_layer_dim(_block_specs(cfg, dec_kind))
+    if cfg.enc_dec:
+        sp["enc_proj"] = P("model", None)
+        sp["enc_stack"] = _prepend_layer_dim(_block_specs(cfg, "attn_mlp"))
+        sp["enc_norm"] = P(None)
+    if cfg.arch_type == "vlm":
+        sp["patch_proj"] = P("model", None)
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# forward blocks (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _constrain_heads(rt: Runtime, cfg: ArchConfig, x, n_heads: int, bs):
+    """(B, S, H, dh): heads over model if divisible, else q-seq over model."""
+    ha = rt.head_axis(n_heads)
+    if ha is not None:
+        return shard(x, bs, None, ha, None)
+    return shard(x, bs, rt.model_axis, None, None)
+
+
+def _apply_attention(rt: Runtime, cfg: ArchConfig, p, x, *, window,
+                     causal: bool, kv_src=None, positions=None,
+                     return_kv: bool = False):
+    b, s, d = x.shape
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    bs = rt.bspec(b)
+    src = x if kv_src is None else kv_src
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = (src @ p["wk"].astype(x.dtype)).reshape(b, src.shape[1], hkv, dh)
+    v = (src @ p["wv"].astype(x.dtype)).reshape(b, src.shape[1], hkv, dh)
+    q = _constrain_heads(rt, cfg, q, h, bs)
+    k = shard(k, bs, None, rt.head_axis(hkv), None)
+    v = shard(v, bs, None, rt.head_axis(hkv), None)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if kv_src is None:  # self attention: rope both
+        q = apply_rope_positions(q, positions, cfg.rope_theta)
+        k = apply_rope_positions(k, jnp.arange(src.shape[1])[None, :],
+                                 cfg.rope_theta)
+    chunk = _pick_chunk(s, rt.attn_chunk)
+    o = attn_lib.chunked_attention(q, k, v, causal=causal, window=window,
+                                   chunk=chunk)
+    o = _constrain_heads(rt, cfg, o, h, bs)
+    out = o.reshape(b, s, h * dh) @ p["wo"].astype(x.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out, None
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _apply_ffn(rt: Runtime, cfg: ArchConfig, p, x):
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "z_loss": jnp.zeros((), jnp.float32)}
+    if "mlp" in p:
+        h = rms_norm(x, p["norm2"])
+        h = shard(h, rt.bspec(x.shape[0]), None, None)
+        return x + apply_mlp(p["mlp"], h), aux
+    if "moe" in p:
+        h = rms_norm(x, p["norm2"])
+        out, aux = moe_lib.apply_moe_sharded(
+            rt, p["moe"], h, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            dispatch=rt.moe_dispatch)
+        return x + out, aux
+    return x, aux
+
+
+def _seq_shard(rt: Runtime, x):
+    """Sequence-parallel residual/norm segments (Megatron SP, §Perf): the
+    (B, S, D) stream is additionally sharded over the party axis between
+    the matmul blocks; GSPMD inserts the all-gather/reduce-scatter pair
+    around attention/FFN."""
+    if rt.seq_parallel_norms and x.shape[1] % rt.model_size == 0:
+        return shard(x, rt.bspec(x.shape[0]), rt.model_axis, None)
+    return x
+
+
+def _block_fwd(rt: Runtime, cfg: ArchConfig, kind: str, p, x, window,
+               enc_out=None, return_kv: bool = False):
+    """One decoder block, train/prefill.  Returns (x, aux, kv)."""
+    x = _seq_shard(rt, x)
+    h = rms_norm(x, p["norm1"])
+    kv = None
+    if kind.startswith("attn"):
+        o, kv_self = _apply_attention(rt, cfg, p["attn"], h, window=window,
+                                      causal=True, return_kv=return_kv)
+        x = x + o
+        if return_kv:
+            kv = {"k": kv_self[0], "v": kv_self[1]}
+        if "xattn" in p:  # whisper decoder cross-attention
+            hx = rms_norm(x, p["norm_x"])
+            ox, kv_x = _apply_attention(rt, cfg, p["xattn"], hx, window=None,
+                                        causal=False, kv_src=enc_out,
+                                        return_kv=return_kv)
+            x = x + ox
+            if return_kv:
+                kv.update(xk=kv_x[0], xv=kv_x[1])
+    else:
+        x = x + ssm_lib.apply_ssm(p["ssm"], h, scan_impl=rt.scan_impl)
+    x, aux = _apply_ffn(rt, cfg, p, x)
+    return x, aux, kv
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _scan_stack(rt: Runtime, cfg: ArchConfig, stacked, x, windows,
+                kind: str, enc_out=None, collect_kv: bool = False):
+    """Scan a uniform stack.  windows: (L,) int32 per-layer window."""
+    n_layers = windows.shape[0]
+
+    def layer(p, x, w):
+        y, aux, kv = _block_fwd(rt, cfg, kind, p, x, w, enc_out=enc_out,
+                                return_kv=collect_kv)
+        return y, aux, kv
+
+    if rt.remat:
+        layer = jax.checkpoint(layer)
+
+    if rt.unroll_layers is not None:
+        auxes, kvs = [], []
+        for i in range(min(rt.unroll_layers, n_layers)):
+            p_i = jax.tree.map(lambda a: a[i], stacked)
+            x, aux, kv = layer(p_i, x, windows[i])
+            auxes.append(aux)
+            kvs.append(kv)
+        aux = jax.tree.map(lambda *xs: sum(xs), *auxes)
+        kv = (jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+              if collect_kv else None)
+        return x, aux, kv
+
+    def body(carry, xs):
+        p, w = xs
+        y, aux, kv = layer(p, carry, w)
+        return y, (aux, kv)
+
+    x, (auxes, kvs) = jax.lax.scan(body, x, (stacked, jnp.asarray(windows)))
+    aux = jax.tree.map(lambda a: jnp.sum(a, 0), auxes)
+    return x, aux, kvs
+
+
+def _period_stack(rt: Runtime, cfg: ArchConfig, periods, x, seq_len,
+                  collect_kv: bool = False):
+    """Jamba: scan over periods; python loop over the 8 positions inside."""
+    kinds = cfg.period
+
+    def period_fn(period_params, x):
+        auxes, kvs = [], []
+        for pos, kind in enumerate(kinds):
+            y, aux, kv = _block_fwd(rt, cfg, kind, period_params[pos], x,
+                                    seq_len, return_kv=collect_kv)
+            x = y
+            auxes.append(aux)
+            if kind.startswith("attn"):
+                kvs.append(kv)
+        aux = jax.tree.map(lambda *xs: sum(xs), *auxes)
+        kv = (jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+              if collect_kv and kvs else None)
+        return x, aux, kv
+
+    if rt.remat:
+        period_fn = jax.checkpoint(period_fn)
+
+    n_per = cfg.n_layers // len(kinds)
+    if rt.unroll_layers is not None:
+        auxes = []
+        kv_all = []
+        for i in range(min(rt.unroll_layers, n_per)):
+            p_i = jax.tree.map(lambda a: a[i], periods)
+            x, aux, kv = period_fn(tuple(p_i), x)
+            auxes.append(aux)
+            kv_all.append(kv)
+        aux = jax.tree.map(lambda *xs: sum(xs), *auxes)
+        kv = (jax.tree.map(lambda *xs: jnp.stack(xs), *kv_all)
+              if collect_kv else None)
+        return x, aux, kv
+
+    def body(carry, p):
+        y, aux, kv = period_fn(tuple(p), carry)
+        return y, (aux, kv)
+
+    x, (auxes, kvs) = jax.lax.scan(body, x, tuple(periods))
+    aux = jax.tree.map(lambda a: jnp.sum(a, 0), auxes)
+    return x, aux, kvs
+
+
+# ---------------------------------------------------------------------------
+# frontends
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(rt: Runtime, cfg: ArchConfig, params, tokens, key):
+    if rt.secure_embed:
+        return secure_vocab_embed(rt, params["embed"], tokens, key)
+    emb = jnp.take(params["embed"], tokens, axis=0).astype(ACT_DTYPE)
+    return shard(emb, rt.bspec(tokens.shape[0]), None, None)
+
+
+def _encode_frames(rt: Runtime, cfg: ArchConfig, params, frames, key):
+    """Whisper encoder over stub frame embeddings (B, S_enc, 2*D)."""
+    if rt.secure_embed:
+        x = secure_feature_project(rt, params["enc_proj"], frames, key)
+    else:
+        x = frames.astype(ACT_DTYPE) @ params["enc_proj"].astype(ACT_DTYPE)
+    s_enc = x.shape[1]
+    windows = np.full(cfg.enc_layers, s_enc, np.int32)
+
+    def enc_block(p, x, w):
+        h = rms_norm(x, p["norm1"])
+        o, _ = _apply_attention(rt, cfg, p["attn"], h, window=None,
+                                causal=False)
+        x = x + o
+        x, _ = _apply_ffn(rt, cfg, p, x)
+        return x, {"lb_loss": jnp.zeros((), jnp.float32),
+                   "z_loss": jnp.zeros((), jnp.float32)}, None
+
+    x, _, _ = _scan_stack_custom(rt, params["enc_stack"], x,
+                                 jnp.asarray(windows), enc_block)
+    return rms_norm(x, params["enc_norm"])
+
+
+def _scan_stack_custom(rt: Runtime, stacked, x, windows, block_fn):
+    layer = jax.checkpoint(block_fn) if rt.remat else block_fn
+    if rt.unroll_layers is not None:
+        n = min(rt.unroll_layers, int(windows.shape[0]))
+        for i in range(n):
+            p_i = jax.tree.map(lambda a: a[i], stacked)
+            x, _, _ = layer(p_i, x, windows[i])
+        return x, None, None
+
+    def body(carry, xs):
+        p, w = xs
+        y, _, _ = layer(p, carry, w)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, (stacked, windows))
+    return x, None, None
+
+
+def _backbone(rt: Runtime, cfg: ArchConfig, params, x, seq_len,
+              enc_out=None, collect_kv=False):
+    kinds = layer_kinds(cfg)
+    if cfg.period is not None:
+        x, aux, kvs = _period_stack(rt, cfg, params["periods"], x, seq_len,
+                                    collect_kv=collect_kv)
+    else:
+        windows = layer_windows(cfg, seq_len)
+        kind = "attn_cross" if cfg.enc_dec else kinds[0]
+        x, aux, kvs = _scan_stack(rt, cfg, params["stack"], x,
+                                  jnp.asarray(windows), kind,
+                                  enc_out=enc_out, collect_kv=collect_kv)
+    return rms_norm(x, params["final_norm"]), aux, kvs
+
+
+def _prepare_inputs(rt: Runtime, cfg: ArchConfig, params, batch, key):
+    """Embed modality inputs + tokens; returns (x, enc_out, n_prefix)."""
+    k1, k2 = jax.random.split(key)
+    tokens = batch["tokens"]
+    x = _embed_tokens(rt, cfg, params, tokens, k1)
+    enc_out = None
+    n_prefix = 0
+    if cfg.enc_dec:
+        enc_out = _encode_frames(rt, cfg, params, batch["frames"], k2)
+    if cfg.arch_type == "vlm":
+        if rt.secure_embed:
+            patches = secure_feature_project(rt, params["patch_proj"],
+                                             batch["patches"], k2)
+        else:
+            patches = batch["patches"].astype(ACT_DTYPE) \
+                @ params["patch_proj"].astype(ACT_DTYPE)
+        x = jnp.concatenate([patches, x], axis=1)
+        n_prefix = patches.shape[1]
+    return x, enc_out, n_prefix
+
+
+def train_loss(rt: Runtime, cfg: ArchConfig, params, batch, key):
+    """Mean next-token CE (+ MoE aux).  batch: tokens/labels (+frames/patches)."""
+    x, enc_out, n_prefix = _prepare_inputs(rt, cfg, params, batch, key)
+    h, aux, _ = _backbone(rt, cfg, params, x, x.shape[1], enc_out=enc_out)
+    if n_prefix:
+        h = h[:, n_prefix:]
+    loss = vocab_parallel_loss(rt, params["embed"], h, batch["labels"],
+                               cfg.padded_vocab)
+    loss = loss + AUX_LOSS_WEIGHT * aux["lb_loss"] \
+        + Z_LOSS_WEIGHT * aux["z_loss"]
+    return loss
+
+
+def prefill(rt: Runtime, cfg: ArchConfig, params, batch, key):
+    """Forward over the prompt; returns (next_token (B,), cache)."""
+    x, enc_out, n_prefix = _prepare_inputs(rt, cfg, params, batch, key)
+    seq = x.shape[1]
+    collect = cfg.arch_type not in ("ssm",) and cfg.period is None
+    h, _, kvs = _backbone(rt, cfg, params, x, seq, enc_out=enc_out,
+                          collect_kv=collect)
+    next_tok = vocab_parallel_greedy(rt, params["embed"], h[:, -1])
+    cache = None
+    if collect and kvs is not None:
+        bs = rt.bspec(x.shape[0])
+        cache = jax.tree.map(
+            lambda a: shard(a.astype(jnp.bfloat16), None, bs,
+                            rt.cache_seq_axes, None, None), kvs)
+    return next_tok, cache
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against sharded caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(rt: Runtime, cfg: ArchConfig, batch: int, seq_len: int,
+               abstract: bool = False):
+    """Zero (or abstract) KV/SSM cache for ``decode_step``."""
+    dh, hkv = cfg.head_dim, cfg.n_kv
+
+    def mk(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    def attn_entry(n, with_cross=False):
+        d = {"k": mk((n, batch, seq_len, hkv, dh), jnp.bfloat16),
+             "v": mk((n, batch, seq_len, hkv, dh), jnp.bfloat16)}
+        if with_cross:
+            # pad cross length so the party axis divides it evenly
+            m = rt.model_size
+            enc_pad = ((cfg.enc_seq + m - 1) // m) * m
+            d["xk"] = mk((n, batch, enc_pad, hkv, dh), jnp.bfloat16)
+            d["xv"] = mk((n, batch, enc_pad, hkv, dh), jnp.bfloat16)
+        return d
+
+    def ssm_entry(n):
+        s = cfg.ssm
+        ci = s.expand * cfg.d_model
+        return {"conv": mk((n, batch, s.d_conv - 1, ci), jnp.bfloat16),
+                "h": mk((n, batch, ci, s.d_state), jnp.float32)}
+
+    if cfg.period is not None:
+        n_per = cfg.n_layers // len(cfg.period)
+        return [attn_entry(n_per) if k.startswith("attn") else ssm_entry(n_per)
+                for k in cfg.period]
+    if cfg.arch_type == "ssm":
+        return ssm_entry(cfg.n_layers)
+    return attn_entry(cfg.n_layers, with_cross=cfg.enc_dec)
+
+
+def cache_specs(rt: Runtime, cfg: ArchConfig, batch: int):
+    """PartitionSpec tree matching ``init_cache`` output."""
+    bs = rt.bspec(batch)
+    seq = rt.cache_seq_axes
+
+    def attn_entry(with_cross=False):
+        d = {"k": P(None, bs, seq, None, None),
+             "v": P(None, bs, seq, None, None)}
+        if with_cross:
+            d["xk"] = P(None, bs, rt.model_axis, None, None)
+            d["xv"] = P(None, bs, rt.model_axis, None, None)
+        return d
+
+    def ssm_entry():
+        return {"conv": P(None, bs, None, rt.model_axis),
+                "h": P(None, bs, rt.model_axis, None)}
+
+    if cfg.period is not None:
+        return [attn_entry() if k.startswith("attn") else ssm_entry()
+                for k in cfg.period]
+    if cfg.arch_type == "ssm":
+        return ssm_entry()
+    return attn_entry(with_cross=cfg.enc_dec)
+
+
+def _seq_shard_offset(rt: Runtime, axes, s_loc):
+    idx = jnp.zeros((), jnp.int32)
+    for ax in axes:
+        idx = idx * rt.mesh.shape[ax] + jax.lax.axis_index(ax)
+    return idx * s_loc
+
+
+def _decode_attention(rt: Runtime, cfg: ArchConfig, p, x, kc, vc, pos,
+                      window, *, update: bool = True, causal: bool = True):
+    """One-token attention against a sequence-sharded cache shard_map island.
+
+    x: (B, D); kc/vc: (B, S, Hkv, dh).  Returns (attn_out (B,D), kc, vc).
+    The partial-softmax psum-merge over the cache axes mirrors the paper's
+    partial-result aggregation (Algorithm 1, unmasked at serving time).
+    """
+    b, d = x.shape
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    bs = rt.bspec(b)
+    seq_axes = rt.cache_seq_axes if update else (rt.model_axis,)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None], (b, 1))
+
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, 1, h, dh)
+    if causal:
+        q = apply_rope_positions(q, pos_b, cfg.rope_theta)
+    q = q[:, 0]
+    if update:
+        k_new = (x @ p["wk"].astype(x.dtype)).reshape(b, 1, hkv, dh)
+        v_new = (x @ p["wv"].astype(x.dtype)).reshape(b, 1, hkv, dh)
+        k_new = apply_rope_positions(k_new, pos_b, cfg.rope_theta)
+        k_new, v_new = k_new[:, 0], v_new[:, 0]
+    else:  # cross attention: cache holds projected encoder K/V already
+        k_new = jnp.zeros((b, hkv, dh), x.dtype)
+        v_new = jnp.zeros((b, hkv, dh), x.dtype)
+        pos = cfg.enc_seq - 1  # attend to the true encoder length only
+
+    def island(q, k_new, v_new, kc, vc, pos, window):
+        s_loc = kc.shape[1]
+        off = _seq_shard_offset(rt, seq_axes, s_loc)
+        if update:
+            kc = attn_lib.cache_scatter(kc, k_new, pos, off)
+            vc = attn_lib.cache_scatter(vc, v_new, pos, off)
+        o, m, l = attn_lib.local_decode_attention(q, kc, vc, pos, off,
+                                                  window=window)
+        o = attn_lib.merge_partial_attention(o, m, l, seq_axes)
+        return o.astype(x.dtype), kc, vc
+
+    seq_spec = tuple(seq_axes)
+    fn = shard_map(
+        island, mesh=rt.mesh,
+        in_specs=(P(bs, None, None), P(bs, None, None), P(bs, None, None),
+                  P(bs, seq_spec, None, None), P(bs, seq_spec, None, None),
+                  P(), P()),
+        out_specs=(P(bs, None, None), P(bs, seq_spec, None, None),
+                   P(bs, seq_spec, None, None)),
+        check_vma=False)
+    win = jnp.asarray(window if window is not None else 1 << 30, jnp.int32)
+    o, kc, vc = fn(q, k_new, v_new, kc, vc,
+                   jnp.asarray(pos, jnp.int32), win)
+    out = o.reshape(b, h * dh) @ p["wo"].astype(x.dtype)
+    return out, kc, vc
+
+
+def _block_decode(rt: Runtime, cfg: ArchConfig, kind: str, p, x, cache, pos,
+                  window):
+    """x: (B, D).  Returns (x, new_cache, aux)."""
+    h = rms_norm(x, p["norm1"])
+    new_cache = dict(cache) if isinstance(cache, dict) else cache
+    if kind.startswith("attn"):
+        o, kc, vc = _decode_attention(rt, cfg, p["attn"], h, cache["k"],
+                                      cache["v"], pos, window)
+        x = x + o
+        new_cache = dict(cache, k=kc, v=vc)
+        if "xattn" in p:
+            hx = rms_norm(x, p["norm_x"])
+            ox, _, _ = _decode_attention(rt, cfg, p["xattn"], hx,
+                                         cache["xk"], cache["xv"], pos,
+                                         None, update=False, causal=False)
+            x = x + ox
+    else:
+        o, ssm_new = ssm_lib.apply_ssm_decode(
+            p["ssm"], h, {"conv": cache["conv"], "h": cache["h"]})
+        x = x + o
+        new_cache = dict(cache, conv=ssm_new["conv"], h=ssm_new["h"])
+    x3, aux = _apply_ffn(rt, cfg, p, x[:, None])
+    return x3[:, 0], new_cache, aux
+
+
+def _decode_unrolled(rt: Runtime, cfg: ArchConfig, params, x, cache, pos):
+    kinds = layer_kinds(cfg)
+    if cfg.period is not None:
+        n_per = cfg.n_layers // len(cfg.period)
+        new_cache = []
+        for ppos, kind in enumerate(cfg.period):
+            ncs = []
+            for i in range(min(rt.unroll_layers, n_per)):
+                p_i = jax.tree.map(lambda a: a[i], params["periods"][ppos])
+                c_i = jax.tree.map(lambda a: a[i], cache[ppos])
+                x, nc, _ = _block_decode(rt, cfg, kind, p_i, x, c_i, pos,
+                                         None)
+                ncs.append(nc)
+            new_cache.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ncs))
+        return x, new_cache
+    if cfg.arch_type == "ssm":
+        windows = [None] * cfg.n_layers
+        kind = "ssm"
+    else:
+        kind = "attn_cross" if cfg.enc_dec else kinds[0]
+        windows = list(layer_windows(cfg, cache["k"].shape[2]))
+    ncs = []
+    for i in range(min(rt.unroll_layers, cfg.n_layers)):
+        p_i = jax.tree.map(lambda a: a[i], params["stack"])
+        c_i = jax.tree.map(lambda a: a[i], cache)
+        x, nc, _ = _block_decode(rt, cfg, kind, p_i, x, c_i, pos, windows[i])
+        ncs.append(nc)
+    return x, jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+
+
+def decode_step(rt: Runtime, cfg: ArchConfig, params, batch, key):
+    """batch: {"token": (B,), "pos": scalar i32, "cache": pytree}.
+    Returns (next_token (B,), new_cache)."""
+    token, pos, cache = batch["token"], batch["pos"], batch["cache"]
+    x = _embed_tokens(rt, cfg, params, token[:, None], key)[:, 0]
+    kinds = layer_kinds(cfg)
+
+    if rt.unroll_layers is not None:
+        # roofline variant: python-unrolled layer loop (see hlo_analysis)
+        x, new_cache = _decode_unrolled(rt, cfg, params, x, cache, pos)
+        h = rms_norm(x, params["final_norm"])
+        return vocab_parallel_greedy(rt, params["embed"], h), new_cache
+
+    if cfg.period is not None:
+        new_cache = []
+        n_per = cfg.n_layers // len(cfg.period)
+
+        def period_body(carry, xs):
+            x = carry
+            p_list, c_list = xs
+            new_cs = []
+            for i, kind in enumerate(cfg.period):
+                x, nc, _ = _block_decode(rt, cfg, kind, p_list[i], x,
+                                         c_list[i], pos, None)
+                new_cs.append(nc)
+            return x, tuple(new_cs)
+
+        x, new_cache = jax.lax.scan(period_body, x,
+                                    (tuple(params["periods"]), tuple(cache)))
+        new_cache = list(new_cache)
+    elif cfg.arch_type == "ssm":
+        def body(carry, xs):
+            p, c = xs
+            y, nc, _ = _block_decode(rt, cfg, "ssm", p, carry, c, pos, None)
+            return y, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["stack"], cache))
+    else:
+        kind = "attn_cross" if cfg.enc_dec else kinds[0]
+        windows = jnp.asarray(layer_windows(cfg, cache["k"].shape[2]))
+
+        def body(carry, xs):
+            p, c, w = xs
+            y, nc, _ = _block_decode(rt, cfg, kind, p, carry, c, pos, w)
+            return y, nc
+
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["stack"], cache, windows))
+
+    h = rms_norm(x, params["final_norm"])
+    next_tok = vocab_parallel_greedy(rt, params["embed"], h)
+    return next_tok, new_cache

@@ -1,0 +1,151 @@
+"""Mamba-1 selective SSM block (falcon-mamba / jamba mixer).
+
+Channel dimension (d_inner) is sharded over the party ("model") axis — the
+recurrent state is per-channel, so the scan needs *no* cross-party
+communication (noted in DESIGN §Arch-applicability).  The sequential scan
+here is the jnp oracle; the TPU hot path is `repro.kernels.selective_scan`
+(Pallas, sequence-blocked with VMEM-carried state).
+
+Layout follows mamba-1: in-proj → (x, z); depthwise causal conv (d_conv=4)
+on x; data-dependent Δ, B, C; diagonal A; selective scan
+    h_t = exp(Δ_t A) ⊙ h_{t-1} + Δ_t B_t x_t ;  y_t = C_t·h_t + D x_t
+output = (y ⊙ silu(z)) @ W_out.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, silu
+
+
+def init_ssm(key, d_model: int, d_state: int = 16, d_conv: int = 4,
+             expand: int = 2):
+    d_inner = expand * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "w_in": normal_init(ks[0], (d_model, 2 * d_inner)),
+        "conv_w": normal_init(ks[1], (d_conv, d_inner), scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "w_x_dbc": normal_init(ks[2], (d_inner, dt_rank + 2 * d_state)),
+        "w_dt": normal_init(ks[3], (dt_rank, d_inner)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(
+                ks[4], (d_inner,),
+                minval=math.log(1e-3), maxval=math.log(1e-1))), 1e-4, None))),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "w_out": normal_init(ks[5], (d_inner, d_model)),
+    }
+
+
+def _causal_conv(x, conv_w, conv_b, state: Optional[jax.Array] = None):
+    """Depthwise causal conv over sequence.  x: (B, S, C); conv_w: (K, C).
+
+    ``state``: (B, K-1, C) trailing context from previous tokens (decode).
+    Returns (y, new_state).
+    """
+    k = conv_w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * conv_w[i].astype(x.dtype)
+            for i in range(k))
+    y = y + conv_b.astype(x.dtype)
+    new_state = xp[:, -(k - 1):]
+    return y, new_state
+
+
+def _dbc(params, xa):
+    """Data-dependent Δ (B,S,Ci), B/C (B,S,N) from activated conv output."""
+    d_state = params["a_log"].shape[1]
+    dt_rank = params["w_x_dbc"].shape[1] - 2 * d_state
+    dbc = xa @ params["w_x_dbc"].astype(xa.dtype)
+    dt_low, b_ssm, c_ssm = jnp.split(dbc, [dt_rank, dt_rank + d_state],
+                                     axis=-1)
+    dt = jax.nn.softplus(
+        (dt_low @ params["w_dt"].astype(xa.dtype)).astype(jnp.float32)
+        + params["dt_bias"])
+    return dt, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def selective_scan_ref(xa, dt, b_ssm, c_ssm, a_log, d_skip,
+                       h0: Optional[jax.Array] = None):
+    """Sequential oracle.  xa: (B,S,Ci); dt: (B,S,Ci); b/c: (B,S,N).
+
+    Returns (y (B,S,Ci), h_final (B,Ci,N)).
+    """
+    a = -jnp.exp(a_log)                                  # (Ci, N)
+    bsz, s, ci = xa.shape
+    n = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, ci, n), jnp.float32)
+
+    def step(h, inp):
+        xa_t, dt_t, b_t, c_t = inp                        # (B,Ci),(B,Ci),(B,N)
+        da = jnp.exp(dt_t[..., None] * a[None])           # (B,Ci,N)
+        h = da * h + (dt_t * xa_t.astype(jnp.float32))[..., None] \
+            * b_t[:, None, :]
+        y = jnp.einsum("bcn,bn->bc", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(xa, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b_ssm, 1, 0), jnp.moveaxis(c_ssm, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + d_skip * xa.astype(jnp.float32)
+    return y.astype(xa.dtype), h
+
+
+def apply_ssm(params, x, *, scan_impl: str = "reference"):
+    """Full mamba block, training/prefill.  x: (B, S, D)."""
+    d_inner = params["a_log"].shape[0]
+    xz = x @ params["w_in"].astype(x.dtype)
+    xc, z = jnp.split(xz, [d_inner], axis=-1)
+    xc, _ = _causal_conv(xc, params["conv_w"], params["conv_b"])
+    xa = silu(xc)
+    dt, b_ssm, c_ssm = _dbc(params, xa)
+    if scan_impl == "pallas":
+        from repro.kernels import selective_scan as ssk
+        y, _ = ssk.selective_scan(xa, dt, b_ssm, c_ssm, params["a_log"],
+                                  params["d_skip"])
+    else:
+        y, _ = selective_scan_ref(xa, dt, b_ssm, c_ssm, params["a_log"],
+                                  params["d_skip"])
+    out = (y * silu(z)) @ params["w_out"].astype(x.dtype)
+    return out
+
+
+def init_ssm_cache(batch: int, d_model: int, d_state: int = 16,
+                   d_conv: int = 4, expand: int = 2):
+    d_inner = expand * d_model
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), jnp.bfloat16),
+        "h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def apply_ssm_decode(params, x, cache):
+    """One-token step.  x: (B, D) -> (B, D), new cache."""
+    d_inner = params["a_log"].shape[0]
+    xz = x @ params["w_in"].astype(x.dtype)
+    xc, z = jnp.split(xz, [d_inner], axis=-1)
+    xc3, new_conv = _causal_conv(xc[:, None], params["conv_w"],
+                                 params["conv_b"], state=cache["conv"])
+    xa = silu(xc3)[:, 0]                                   # (B, Ci)
+    dt, b_ssm, c_ssm = _dbc(params, xa[:, None])
+    dt, b_ssm, c_ssm = dt[:, 0], b_ssm[:, 0], c_ssm[:, 0]
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt[..., None] * a[None])
+    h = da * cache["h"] + (dt * xa.astype(jnp.float32))[..., None] \
+        * b_ssm[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", h, c_ssm) \
+        + params["d_skip"] * xa.astype(jnp.float32)
+    out = (y.astype(x.dtype) * silu(z[:, 0] if z.ndim == 3 else z)) \
+        @ params["w_out"].astype(x.dtype)
+    return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.delayed import delayed_init, delayed_update
+from repro.optim.svrg import svrg_snapshot

@@ -1,0 +1,34 @@
+"""Dependency-free AdamW (framework-scale default optimizer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    return {
+        "mu": jax.tree.map(jnp.zeros_like, params),
+        "nu": jax.tree.map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, *, lr=3e-4, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+
+    def upd(p, g, m, n):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        n = b2 * n + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t)
+        nhat = n / (1 - b2 ** t)
+        newp = p - lr * (mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p)
+        return newp.astype(p.dtype), m, n
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_n = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"mu": new_m, "nu": new_n, "step": step}

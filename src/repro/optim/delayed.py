@@ -1,0 +1,58 @@
+"""VFB² bounded-staleness optimizer (framework scale).
+
+The SPMD form of BAPA (DESIGN §3): a ring buffer of the last (τ+1)
+gradients is carried in optimizer state; the parameter block owned by
+party ℓ (its shard of the "model" axis) is updated with the gradient from
+step t − d_ℓ, d_ℓ ≤ τ.  Per-party delays are static (drawn once), making
+the run an admissible trajectory of the paper's asynchronous model
+(Assumption 3) — convergence follows from Theorems 4–6.
+
+Delays select per *parameter tree block*: we approximate "party ℓ's block"
+by hashing each leaf path to a delay (every party shard of a leaf shares
+its delay), which preserves the bounded-staleness structure while keeping
+the update a pure SPMD map.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+
+
+def _leaf_delay(path: str, tau: int) -> int:
+    if tau == 0:
+        return 0
+    h = int(hashlib.md5(path.encode()).hexdigest()[:8], 16)
+    return h % (tau + 1)
+
+
+def delayed_init(params, tau: int):
+    buf = jax.tree.map(
+        lambda p: jnp.zeros((tau + 1,) + p.shape, p.dtype), params)
+    return {"buf": buf, "step": jnp.zeros((), jnp.int32), "tau": tau}
+
+
+def delayed_update(params, grads, state, *, lr=1e-2):
+    """SGD with per-block stale gradients (paper Alg. 2/3 + Eq. 4/5)."""
+    tau = state["tau"]
+    step = state["step"]
+    paths = [jax.tree_util.keystr(kp)
+             for kp, _ in jax.tree_util.tree_flatten_with_path(params)[0]]
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_buf = treedef.flatten_up_to(state["buf"])
+
+    new_p, new_buf = [], []
+    slot = step % (tau + 1)
+    for path, p, g, buf in zip(paths, flat_p, flat_g, flat_buf):
+        d = _leaf_delay(path, tau)
+        buf = jax.lax.dynamic_update_index_in_dim(buf, g.astype(buf.dtype),
+                                                  slot, 0)
+        eff = jnp.maximum(step - d, 0) % (tau + 1)
+        stale = jax.lax.dynamic_index_in_dim(buf, eff, 0, keepdims=False)
+        new_p.append((p - lr * stale.astype(jnp.float32)).astype(p.dtype))
+        new_buf.append(buf)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            {"buf": jax.tree_util.tree_unflatten(treedef, new_buf),
+             "step": step + 1, "tau": tau})

@@ -1,0 +1,21 @@
+"""Framework-scale SVRG helper: epoch snapshots + variance-reduced step.
+
+VFB²-SVRG at deep-model scale: the snapshot full gradient is estimated on
+a large reference batch at the start of each outer loop (exact full
+gradients being impractical for stream data), then inner steps use
+    v = g_i(w) − g_i(w̃) + μ̃.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def svrg_snapshot(params, ref_grad):
+    return {"w_snap": jax.tree.map(lambda x: x, params),
+            "mu": ref_grad}
+
+
+def svrg_direction(g_now, g_snap, snapshot):
+    return jax.tree.map(lambda a, b, m: a - b + m, g_now, g_snap,
+                        snapshot["mu"])

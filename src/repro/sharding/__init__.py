@@ -1,0 +1,2 @@
+from repro.sharding.api import (Runtime, shard, current_mesh, use_runtime,
+                                current_runtime, single_device_runtime)

@@ -1,0 +1,106 @@
+"""Runtime context: mesh, axis roles, sharding-constraint helpers.
+
+Axis roles (fixed names across the framework):
+  * "pod"   — inter-pod data parallelism = the paper's *upper-level*
+              (distributed-memory, between active-party groups);
+  * "data"  — intra-pod batch parallelism = the paper's *lower-level*
+              (shared-memory collaborative threads within a party);
+  * "model" — the party axis: vertical feature/vocab partition (q = 16),
+              also used for TP/expert/sequence sharding.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    attn_chunk: int = 1024
+    loss_chunk: int = 512
+    remat: bool = True
+    scan_layers: bool = True
+    unroll_layers: Optional[int] = None   # roofline tool: lower L-layer unrolled
+    secure_embed: bool = True
+    mask_scale: float = 1.0
+    schedule_faithful: bool = False
+    secure_mode: str = "two_tree"   # or "ring_masks" (see §Perf)
+    scan_impl: str = "reference"          # "pallas" on real TPU
+    attn_impl: str = "reference"
+    # axes that shard the decode KV-cache sequence dim (hillclimb lever)
+    cache_seq_axes: Tuple[str, ...] = ("model",)
+    # MoE dispatch: shard capacity dim over data axis as well
+    moe_capacity_data_sharded: bool = True
+    # MoE dispatch strategy: "replicated" (baseline) | "alltoall" (§Perf)
+    moe_dispatch: str = "replicated"
+    # Megatron-style sequence parallelism for norm/residual segments (§Perf)
+    seq_parallel_norms: bool = False
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    def head_axis(self, n_heads: int) -> Optional[str]:
+        return self.model_axis if n_heads % self.model_size == 0 else None
+
+    def batch_size_divisible(self, b: int) -> bool:
+        tot = 1
+        for a in self.batch_axes:
+            tot *= self.mesh.shape[a]
+        return b % tot == 0 and tot > 1
+
+    def bspec(self, b: int):
+        """Batch partition entry (None if batch cannot be sharded)."""
+        return self.batch_axes if (self.batch_axes and
+                                   self.batch_size_divisible(b)) else None
+
+
+def use_runtime(rt: Runtime):
+    @contextlib.contextmanager
+    def cm():
+        prev = getattr(_STATE, "rt", None)
+        _STATE.rt = rt
+        try:
+            yield rt
+        finally:
+            _STATE.rt = prev
+    return cm()
+
+
+def current_runtime() -> Runtime:
+    rt = getattr(_STATE, "rt", None)
+    if rt is None:
+        raise RuntimeError("no Runtime active; wrap with use_runtime(...)")
+    return rt
+
+
+def current_mesh() -> Mesh:
+    return current_runtime().mesh
+
+
+def shard(x, *spec):
+    """with_sharding_constraint against the active runtime's mesh."""
+    rt = getattr(_STATE, "rt", None)
+    if rt is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rt.mesh, P(*spec)))
+
+
+def single_device_runtime(**kw) -> Runtime:
+    """1×1×1 mesh with the canonical axis names (CPU tests/smoke)."""
+    dev = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    mesh = Mesh(dev, ("pod", "data", "model"))
+    kw.setdefault("batch_axes", ("data",))
+    return Runtime(mesh=mesh, **kw)

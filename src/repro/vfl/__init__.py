@@ -1,0 +1,2 @@
+from repro.vfl.embed import secure_vocab_embed, secure_feature_project
+from repro.vfl.heads import vocab_parallel_loss, vocab_parallel_greedy

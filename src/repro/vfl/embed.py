@@ -1,0 +1,79 @@
+"""Secure VFL frontends: the paper's technique inside the deep models.
+
+``secure_vocab_embed`` — the raw input feature space of a token model is
+the vocabulary one-hot space; each *party* (shard of the "model" mesh axis)
+owns a disjoint vocab block of the embedding table.  A lookup is each
+party's partial contribution (its row if it owns the token, zeros
+otherwise), and the fused representation is produced by the paper's
+Algorithm 1 (masked two-tree aggregation) with the BUM backward — i.e. the
+VJP broadcasts ϑ = ∂L/∂(embedding) to every party, which then locally
+accumulates its own table gradient.  Structurally this is Megatron-style
+vocab-parallel embedding; VFB²'s contribution is the security wrapper and
+the backward protocol, which we register explicitly (core/bum.py).
+
+``secure_feature_project`` — the continuous-modality variant (audio frames,
+image patches): the raw feature dimension is vertically partitioned across
+parties; each party projects its feature block with its private weight
+block and the partial projections are securely aggregated — a direct
+generalization of the paper's ``Σ_ℓ w_{G_ℓ}ᵀ(x_i)_{G_ℓ}``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.bum import secure_vfl_reduce
+from repro.sharding.api import Runtime
+
+
+def secure_vocab_embed(rt: Runtime, table: jax.Array, tokens: jax.Array,
+                       key: jax.Array, out_dtype=jnp.bfloat16) -> jax.Array:
+    """tokens: (B, S) int32; table: (V, D) sharded P("model", None).
+
+    Returns (B, S, D) fused embeddings (replicated over the party axis).
+    """
+    v, d = table.shape
+    q = rt.model_size
+    bs = rt.bspec(tokens.shape[0])
+
+    def island(table_l, tok, k):
+        # table_l: (V/q, D) — this party's vocab block
+        idx = jax.lax.axis_index(rt.model_axis)
+        v_loc = table_l.shape[0]
+        lo = idx * v_loc
+        local = tok - lo
+        owns = (local >= 0) & (local < v_loc)
+        rows = jnp.take(table_l, jnp.clip(local, 0, v_loc - 1), axis=0)
+        partial = jnp.where(owns[..., None], rows, 0.0).astype(out_dtype)
+        return secure_vfl_reduce(partial, rt.model_axis, k,
+                                 rt.mask_scale, rt.schedule_faithful,
+                                 rt.secure_mode)
+
+    fn = shard_map(
+        island, mesh=rt.mesh,
+        in_specs=(P(rt.model_axis, None), P(bs, None), P()),
+        out_specs=P(bs, None, None), check_vma=False)
+    return fn(table, tokens, key)
+
+
+def secure_feature_project(rt: Runtime, w: jax.Array, feats: jax.Array,
+                           key: jax.Array, out_dtype=jnp.bfloat16) -> jax.Array:
+    """feats: (B, S, d_in) with d_in vertically partitioned over parties;
+    w: (d_in, D) sharded P("model", None).  Returns (B, S, D)."""
+    bs = rt.bspec(feats.shape[0])
+
+    def island(w_l, f_l, k):
+        partial = (f_l.astype(out_dtype) @ w_l.astype(out_dtype))
+        return secure_vfl_reduce(partial, rt.model_axis, k,
+                                 rt.mask_scale, rt.schedule_faithful,
+                                 rt.secure_mode)
+
+    fn = shard_map(
+        island, mesh=rt.mesh,
+        in_specs=(P(rt.model_axis, None), P(bs, None, rt.model_axis), P()),
+        out_specs=P(bs, None, None), check_vma=False)
+    return fn(w, feats, key)

@@ -1,0 +1,105 @@
+"""Vocab-parallel (party-sharded) loss head and greedy decode head.
+
+The tied embedding table is vocab-sharded over the party axis, so logits
+for each token are computed blockwise per party and never materialized in
+full: the log-sum-exp and the label logit are assembled with ``psum`` over
+the party axis (Megatron-style parallel cross-entropy).  ϑ = softmax − 1̂
+arises in the backward pass exactly on the active parties' loss node and
+flows to every party — the framework-scale incarnation of BUM.
+
+Sequence-chunked (``rt.loss_chunk``) with rematerialization so full f32
+logits for (B, S, V) never exist (gemma3: V = 262144).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.api import Runtime
+
+
+def vocab_parallel_loss(rt: Runtime, table: jax.Array, h: jax.Array,
+                        labels: jax.Array, vocab: int) -> jax.Array:
+    """h: (B, S, D); labels: (B, S) int32 in [0, vocab); table: (V_pad, D)
+    sharded P("model", None).  Returns mean token CE (scalar, f32).
+
+    Labels ≥ ``vocab`` (padding rows) never receive probability mass: padded
+    rows of the table exist but real labels < vocab, and the LSE includes
+    padded logits — harmless since their weights are ~0-init and trained
+    away; standard practice for padded vocabs.
+    """
+    b, s, d = h.shape
+    axis = rt.model_axis
+    bs = rt.bspec(b)
+    chunk = min(rt.loss_chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+
+    def island(table_l, h_l, y_l):
+        idx = jax.lax.axis_index(axis)
+        v_loc = table_l.shape[0]
+        lo = idx * v_loc
+        w = table_l.astype(jnp.bfloat16)
+
+        def chunk_loss(args):
+            hc, yc = args                      # (b_l, c, D), (b_l, c)
+            logits = (hc.astype(jnp.bfloat16) @ w.T).astype(jnp.float32)
+            gmax = jax.lax.pmax(
+                jax.lax.stop_gradient(jnp.max(logits, -1)), axis)
+            lse = jnp.log(jax.lax.psum(
+                jnp.sum(jnp.exp(logits - gmax[..., None]), -1), axis)) + gmax
+            local_y = yc - lo
+            owns = (local_y >= 0) & (local_y < v_loc)
+            ylogit = jnp.take_along_axis(
+                logits, jnp.clip(local_y, 0, v_loc - 1)[..., None], -1)[..., 0]
+            ylogit = jax.lax.psum(jnp.where(owns, ylogit, 0.0), axis)
+            return jnp.sum(lse - ylogit)
+
+        chunk_loss = jax.checkpoint(chunk_loss)
+        hc = h_l.reshape(h_l.shape[0], n_chunks, chunk, d)
+        yc = y_l.reshape(y_l.shape[0], n_chunks, chunk)
+
+        def body(acc, args):
+            return acc + chunk_loss(args), None
+
+        tot, _ = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32),
+            (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(yc, 1, 0)))
+        # mean over *global* tokens: psum over batch axes
+        for ax in rt.batch_axes:
+            if bs is not None:
+                tot = jax.lax.psum(tot, ax)
+        return tot[None]
+
+    fn = shard_map(
+        island, mesh=rt.mesh,
+        in_specs=(P(axis, None), P(bs, None, None), P(bs, None)),
+        out_specs=P(None), check_vma=False)
+    total = fn(table, h, labels)[0]
+    return total / (b * s)
+
+
+def vocab_parallel_greedy(rt: Runtime, table: jax.Array,
+                          h: jax.Array) -> jax.Array:
+    """h: (B, D) last-position hidden → greedy next token (B,) int32."""
+    axis = rt.model_axis
+    bs = rt.bspec(h.shape[0])
+
+    def island(table_l, h_l):
+        idx = jax.lax.axis_index(axis)
+        v_loc = table_l.shape[0]
+        lo = idx * v_loc
+        logits = (h_l.astype(jnp.bfloat16)
+                  @ table_l.astype(jnp.bfloat16).T).astype(jnp.float32)
+        lmax = jnp.max(logits, -1)
+        larg = jnp.argmax(logits, -1).astype(jnp.int32) + lo
+        gmax = jax.lax.pmax(lmax, axis)
+        cand = jnp.where(lmax >= gmax, larg, -1)
+        return jax.lax.pmax(cand, axis)
+
+    fn = shard_map(island, mesh=rt.mesh,
+                   in_specs=(P(axis, None), P(bs, None)),
+                   out_specs=P(bs), check_vma=False)
+    return fn(table, h)

@@ -1,0 +1,19 @@
+import os
+
+# Tests run on the real single CPU device; the dry-run (and only the
+# dry-run) forces 512 host devices.  Do NOT set device-count flags here.
+import jax
+import numpy as np
+import pytest
+
+from repro.sharding.api import Runtime, single_device_runtime
+
+
+@pytest.fixture(scope="session")
+def rt():
+    return single_device_runtime(attn_chunk=32, loss_chunk=16)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

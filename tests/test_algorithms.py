@@ -1,0 +1,84 @@
+"""VFB²-SGD/SVRG/SAGA behaviour: convergence, losslessness, AFSVRG-VP gap."""
+import numpy as np
+import pytest
+
+from repro.core import algorithms, losses
+from repro.data.synthetic import classification_dataset, regression_dataset
+from repro.data.vertical import vertical_split
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return classification_dataset("t", 3000, 64, seed=3, onehot_frac=0.3,
+                                  noise=0.4)
+
+
+@pytest.mark.parametrize("algo", ["sgd", "svrg", "saga"])
+def test_objective_decreases(ds, algo):
+    layout = algorithms.PartyLayout.even(64, 8, 3)
+    prob = losses.logistic_l2()
+    res = algorithms.train(prob, ds.x_train, ds.y_train, layout, algo=algo,
+                           epochs=8, lr=0.5, batch=32)
+    objs = [h["objective"] for h in res.history]
+    assert objs[-1] < objs[0]
+    assert objs[-1] < 0.62  # well below ln 2
+
+
+def test_variance_reduced_beat_sgd(ds):
+    """Paper Figs. 3/4: SVRG/SAGA converge faster per epoch than SGD."""
+    layout = algorithms.PartyLayout.even(64, 8, 3)
+    prob = losses.logistic_l2()
+    out = {}
+    for algo in ["sgd", "svrg", "saga"]:
+        res = algorithms.train(prob, ds.x_train, ds.y_train, layout,
+                               algo=algo, epochs=10, lr=0.2, batch=16)
+        out[algo] = res.history[-1]["objective"]
+    assert out["svrg"] <= out["sgd"] + 1e-3
+    assert out["saga"] <= out["sgd"] + 1e-3
+
+
+def test_losslessness_vs_nonfederated(ds):
+    """Paper Table 2: VFB² == NonF (identical update math ⇒ identical
+    accuracy); AFSVRG-VP (frozen passive blocks) is measurably worse."""
+    d = ds.x_train.shape[1]
+    layout = algorithms.PartyLayout.even(d, 8, 4)
+    prob = losses.logistic_l2()
+    kw = dict(algo="svrg", epochs=12, lr=0.5, batch=32, seed=7)
+    vfb2 = algorithms.train(prob, ds.x_train, ds.y_train, layout, **kw)
+    nonf = algorithms.train(prob, ds.x_train, ds.y_train,
+                            algorithms.PartyLayout.even(d, 1, 1), **kw)
+    vp = algorithms.train(prob, ds.x_train, ds.y_train, layout,
+                          active_only=True, **kw)
+    acc = lambda r: algorithms.accuracy(r.w, ds.x_test, ds.y_test)
+    assert np.allclose(vfb2.w, nonf.w, atol=1e-6)       # lossless, exactly
+    assert acc(vfb2) == acc(nonf)
+    assert acc(vp) < acc(vfb2) - 0.02                    # VP is lossy
+
+
+def test_regression_rmse(ds=None):
+    """Paper Table 3 analogue (ridge + robust regression)."""
+    data = regression_dataset("r", 2000, 48, seed=0, noise=0.05)
+    d = data.x_train.shape[1]
+    layout = algorithms.PartyLayout.even(d, 8, 3)
+    for prob, tol in [(losses.ridge(lam=1e-5), 0.02),
+                      (losses.robust_regression(), 0.02)]:
+        res = algorithms.train(prob, data.x_train, data.y_train, layout,
+                               algo="svrg", epochs=15, lr=0.1, batch=32)
+        rm = algorithms.rmse(res.w, data.x_test, data.y_test)
+        assert rm < tol, (prob.name, rm)
+
+
+def test_nonconvex_problem_trains(ds):
+    layout = algorithms.PartyLayout.even(64, 8, 3)
+    prob = losses.logistic_nonconvex()
+    res = algorithms.train(prob, ds.x_train, ds.y_train, layout,
+                           algo="saga", epochs=8, lr=0.5, batch=32)
+    assert res.history[-1]["objective"] < res.history[0]["objective"]
+
+
+def test_vertical_split_roundtrip():
+    x = np.arange(24, dtype=np.float32).reshape(2, 12)
+    blocks, layout = vertical_split(x, q=4, m=2)
+    assert len(blocks) == 4
+    assert np.allclose(np.concatenate(blocks, 1), x)
+    assert layout.update_mask(12, active_only=True).sum() == 6

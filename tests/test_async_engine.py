@@ -1,0 +1,53 @@
+"""BAPA thread-simulation: functional behaviour (timing claims live in
+benchmarks/bench_async.py where they are measured, not asserted)."""
+import numpy as np
+import pytest
+
+from repro.core import algorithms, async_engine, losses
+from repro.data.synthetic import classification_dataset
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return classification_dataset("as", 600, 24, seed=2, noise=0.4)
+
+
+@pytest.mark.slow
+def test_async_training_decreases_loss(ds):
+    layout = algorithms.PartyLayout.even(24, 4, 2)
+    prob = losses.logistic_l2()
+    res = async_engine.run_async(prob, ds.x_train, ds.y_train, layout,
+                                 lr=0.2, batch=16, total_epochs=4.0,
+                                 threads_per_party=2, base_delay=1e-3)
+    assert res.updates > 0
+    first = res.loss_trace[0][2]
+    last = res.loss_trace[-1][2]
+    assert last < first, (first, last)
+
+
+@pytest.mark.slow
+def test_sync_counterpart_runs(ds):
+    layout = algorithms.PartyLayout.even(24, 4, 2)
+    prob = losses.logistic_l2()
+    res = async_engine.run_sync(prob, ds.x_train, ds.y_train, layout,
+                                lr=0.2, batch=16, total_epochs=2.0,
+                                speed_factors=[1, 1, 1, 1.4],
+                                base_delay=1e-3)
+    assert res.loss_trace[-1][2] < res.loss_trace[0][2]
+
+
+@pytest.mark.slow
+def test_async_faster_than_sync_with_straggler(ds):
+    """Paper Figs. 3/4 qualitative claim, at miniature scale: with a 50%
+    straggler the asynchronous system reaches the epoch budget in less
+    wall-time than the barrier-synchronous one."""
+    layout = algorithms.PartyLayout.even(24, 4, 2)
+    prob = losses.logistic_l2()
+    speeds = [1.0, 1.0, 1.0, 1.5]
+    kw = dict(lr=0.2, batch=16, total_epochs=3.0, base_delay=2e-3,
+              speed_factors=speeds)
+    a = async_engine.run_async(prob, ds.x_train, ds.y_train, layout,
+                               threads_per_party=2, **kw)
+    s = async_engine.run_sync(prob, ds.x_train, ds.y_train, layout, **kw)
+    # generous margin: thread scheduling noise on 1 CPU
+    assert a.wall_time < s.wall_time * 1.2, (a.wall_time, s.wall_time)

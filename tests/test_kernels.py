@@ -1,0 +1,160 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,sq,skv,dh", [
+    (1, 2, 2, 128, 128, 64),
+    (2, 4, 2, 256, 256, 64),
+    (1, 8, 1, 128, 256, 128),    # strong GQA, rectangular
+    (2, 2, 2, 64, 64, 256),      # gemma3-style head dim
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 96),
+                                           (False, None)])
+def test_flash_attention_sweep(dtype, b, h, hkv, sq, skv, dh, causal,
+                               window):
+    if not causal and sq != skv:
+        pytest.skip("cross shape covered elsewhere")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (b, h, sq, dh), dtype)
+    k = _rand(ks[1], (b, hkv, skv, dh), dtype)
+    v = _rand(ks[2], (b, hkv, skv, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@given(bq=st.sampled_from([32, 64, 128]), bk=st.sampled_from([32, 64]),
+       seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_block_shape_invariance(bq, bk, seed):
+    """Output must not depend on the tiling (pure performance knob)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(ks[0], (1, 2, 128, 64), jnp.float32)
+    k = _rand(ks[1], (1, 2, 128, 64), jnp.float32)
+    v = _rand(ks[2], (1, 2, 128, 64), jnp.float32)
+    a = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    b = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,c,n,chunk,bc", [
+    (1, 64, 128, 8, 16, 64),
+    (2, 128, 256, 16, 32, 128),
+    (1, 32, 512, 4, 32, 256),
+])
+def test_selective_scan_sweep(dtype, b, s, c, n, chunk, bc):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    xa = _rand(ks[0], (b, s, c), dtype)
+    dt = jax.nn.softplus(_rand(ks[1], (b, s, c), jnp.float32))
+    b_ssm = _rand(ks[2], (b, s, n), jnp.float32)
+    c_ssm = _rand(ks[3], (b, s, n), jnp.float32)
+    a_log = jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None],
+                             (c, 1)))
+    d_skip = jnp.ones((c,))
+    y = ops.selective_scan(xa, dt, b_ssm, c_ssm, a_log, d_skip,
+                           chunk=chunk, block_c=bc)
+    y_ref, _ = ref.selective_scan_ref(xa, dt, b_ssm, c_ssm, a_log, d_skip)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_selective_scan_chunk_invariance():
+    """State carried across seq chunks must make chunking invisible."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    b, s, c, n = 1, 128, 128, 8
+    xa = _rand(ks[0], (b, s, c), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (b, s, c), jnp.float32))
+    b_ssm = _rand(ks[2], (b, s, n), jnp.float32)
+    c_ssm = _rand(ks[3], (b, s, n), jnp.float32)
+    a_log = jnp.zeros((c, n))
+    d_skip = jnp.zeros((c,))
+    outs = [ops.selective_scan(xa, dt, b_ssm, c_ssm, a_log, d_skip,
+                               chunk=ch, block_c=64) for ch in (16, 32, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-4)
+
+
+@given(b=st.sampled_from([64, 128, 256]), d=st.sampled_from([128, 256, 384]),
+       lam=st.floats(0, 0.1), seed=st.integers(0, 50))
+@settings(max_examples=12, deadline=None)
+def test_vfl_grad_property(b, d, lam, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    xb = _rand(ks[0], (b, d), jnp.float32)
+    w = _rand(ks[1], (d,), jnp.float32)
+    th = _rand(ks[2], (b,), jnp.float32)
+    z, g = ops.vfl_grad(xb, w, th, lam=float(lam))
+    zr, gr = ref.vfl_grad_ref(xb, w, th, float(lam))
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-5,
+                               rtol=1e-4)
+
+
+def test_vfl_grad_partials_are_party_blocks():
+    """The per-feature-tile z partials ARE the per-party partial products
+    (what Algorithm 1 masks): summing any block subset matches a party
+    holding those columns."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    xb = _rand(ks[0], (128, 256), jnp.float32)
+    w = _rand(ks[1], (256,), jnp.float32)
+    th = _rand(ks[2], (128,), jnp.float32)
+    from repro.kernels.vfl_grad import vfl_grad as raw
+    z_partial, _ = raw(xb, w, th, 0.0, block_d=128)
+    party0 = xb[:, :128] @ w[:128]
+    np.testing.assert_allclose(np.asarray(z_partial[0]), np.asarray(party0),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("pos,off,win", [(300, 0, None), (300, 0, 128),
+                                         (700, 512, None)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_kernel(pos, off, win, dtype):
+    """Flash-decoding kernel vs local_decode_attention oracle (normalized
+    outputs + sum-exp agree, so cross-shard LSE merges are identical)."""
+    from repro.models.attention import local_decode_attention
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, H, Hkv, S, dh = 2, 4, 2, 512, 64
+    q = _rand(ks[0], (B, H, dh), dtype)
+    kc = _rand(ks[1], (B, S, Hkv, dh), dtype)
+    vc = _rand(ks[2], (B, S, Hkv, dh), dtype)
+    o1, m1, l1 = ops.decode_attention(q, kc, vc, pos, off, win, block_k=128)
+    o2, m2, l2 = local_decode_attention(
+        q, kc, vc, jnp.asarray(pos), jnp.asarray(off),
+        window=jnp.asarray(win, jnp.int32) if win else None)
+    n1 = np.asarray(o1) / np.maximum(np.asarray(l1)[..., None], 1e-30)
+    n2 = np.asarray(o2) / np.maximum(np.asarray(l2)[..., None], 1e-30)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(n1, n2, atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_fully_masked_shard():
+    """A shard owning only future positions contributes zero mass."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (1, 2, 32), jnp.float32)
+    kc = _rand(ks[1], (1, 128, 2, 32), jnp.float32)
+    vc = _rand(ks[2], (1, 128, 2, 32), jnp.float32)
+    o, m, l = ops.decode_attention(q, kc, vc, pos=10, shard_offset=512,
+                                   block_k=64)
+    assert float(np.abs(np.asarray(l)).max()) == 0.0

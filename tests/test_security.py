@@ -1,0 +1,130 @@
+"""Security properties of Algorithm 1 + BUM (paper §6).
+
+These are *executable* versions of the paper's security arguments:
+  * exactness: masked two-tree aggregation equals the true sum (lossless);
+  * masking: no message transmitted during aggregation equals (or
+    determines) any party's raw partial product under threat model 1;
+  * collusion example (supplementary B): with a shared-subtree (Definition-4
+    violating) pair, a mask *can* be cancelled by colluding parties —
+    demonstrating why T2 must be significantly different;
+  * inference attack (Lemma 1): rank-1 observations admit a continuum of
+    solutions — an orthogonal transform produces distinct (w, x) with the
+    same product.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import trees
+from repro.core.secure_agg import secure_aggregate_host
+
+
+@given(q=st.integers(2, 16), n=st.integers(1, 8), seed=st.integers(0, 999))
+@settings(max_examples=60, deadline=None)
+def test_masked_aggregation_exact(q, n, seed):
+    rng = np.random.default_rng(seed)
+    partials = [rng.standard_normal(n) for _ in range(q)]
+    out, _ = secure_aggregate_host(partials, rng, mask_scale=10.0)
+    assert np.allclose(out, np.sum(partials, axis=0), atol=1e-8)
+
+
+@given(q=st.integers(3, 12), seed=st.integers(0, 999))
+@settings(max_examples=40, deadline=None)
+def test_no_transmitted_value_reveals_partial(q, seed):
+    """Threat model 1: every value any party receives differs from every
+    raw partial product w_{G_ℓ}ᵀx_{G_ℓ} (the mask hides it)."""
+    rng = np.random.default_rng(seed)
+    partials = [rng.standard_normal(4) for _ in range(q)]
+    _, transcript = secure_aggregate_host(partials, rng, mask_scale=1.0)
+    raw = np.stack(partials)
+    for p in range(q):
+        for seen in transcript.seen_by(p):
+            # received values are masked partial sums; none equals a raw
+            # partial of ANOTHER party (own values never transit)
+            diffs = np.abs(raw - seen[None]).min(axis=1)
+            for other in range(q):
+                if other == p:
+                    continue
+                assert diffs[other] > 1e-9, (p, other)
+
+
+def test_collusion_with_shared_subtree_leaks_mask():
+    """Supplementary B: if T2 shares a subtree with T1 (Definition 4
+    violated), two colluding parties can strip a third party's mask."""
+    q = 4
+    t1 = trees.binary_tree(q)                      # rounds (0,1)(2,3); (0,2)
+    t2 = trees.binary_tree(q)                      # same tree => shared subtrees
+    assert not trees.significantly_different(t1, t2)
+    rng = np.random.default_rng(0)
+    partials = [rng.standard_normal(1) for _ in range(q)]
+    _, tr = secure_aggregate_host(partials, rng, t1=t1, t2=t2)
+    # party 2 received (p3 + δ3) in T1 and δ3 in T2 — colluding with itself
+    # (same receiver in both trees) reconstructs p3 exactly:
+    seen2 = tr.seen_by(2)
+    masked_p3 = seen2[0]
+    delta3 = seen2[1]
+    assert np.allclose(masked_p3 - delta3, partials[3])
+
+
+def test_definition4_pair_prevents_single_receiver_unmasking():
+    """With the Definition-4 pair, no single party receives both a masked
+    value and its own mask component (the honest-but-curious guarantee)."""
+    q = 8
+    t1, t2 = trees.default_tree_pair(q)
+    rng = np.random.default_rng(1)
+    partials = [rng.standard_normal(1) for _ in range(q)]
+    _, tr = secure_aggregate_host(partials, rng, t1=t1, t2=t2)
+    raw = np.concatenate(partials)
+    for p in range(q):
+        seen = tr.seen_by(p)
+        # try all pairwise differences of what p saw: none reveals a raw
+        # partial product of another party
+        for i in range(len(seen)):
+            for j in range(len(seen)):
+                if i == j:
+                    continue
+                diff = seen[i] - seen[j]
+                for other in range(q):
+                    if other != p:
+                        assert not np.allclose(diff, raw[other], atol=1e-9)
+
+
+@given(d=st.integers(2, 16), seed=st.integers(0, 999))
+@settings(max_examples=40, deadline=None)
+def test_lemma1_infinite_solutions(d, seed):
+    """Lemma 1: given only o = wᵀx, the solution set is a continuum —
+    rotate (w, x) by any orthogonal U and the product is unchanged."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal(d)
+    x = rng.standard_normal(d)
+    o = w @ x
+    a = rng.standard_normal((d, d))
+    u, _ = np.linalg.qr(a)
+    w2, x2 = u @ w, u @ x
+    assert np.isclose(w2 @ x2, o)
+    assert not np.allclose(w2, w)          # a genuinely different solution
+
+
+def test_theta_does_not_determine_label():
+    """Label security (Lemma 1 second part): the passive party observes only
+    ϑ; both wᵀx and *the loss form* are unknown to it (paper §2: only active
+    parties know the loss).  The same observed ϑ is produced by different
+    (loss, aggregation, label) triples — so ϑ does not identify y."""
+    import jax.numpy as jnp
+    from repro.core.losses import logistic_l2, ridge
+    theta_val = -0.3
+    # explanation 1: logistic loss, y=+1: θ = -σ(-a) = -0.3 ⇒ a = -logit(0.3)
+    a1 = float(-np.log(0.3 / 0.7))
+    th1 = float(logistic_l2().theta(jnp.asarray(a1), jnp.asarray(1.0)))
+    # explanation 2: squared loss, y = a + 0.15 for ANY a (continuum) —
+    # here with label y = -1:
+    a2 = -1.0 + theta_val / 2.0   # θ = 2(a − y) ⇒ a = y + θ/2
+    th2 = float(ridge().theta(jnp.asarray(a2), jnp.asarray(-1.0)))
+    assert np.isclose(th1, theta_val, atol=1e-6)
+    assert np.isclose(th2, theta_val, atol=1e-6)
+    # and within the squared loss alone, infinitely many (a, y): y = a − θ/2
+    for y in (-1.0, 0.0, 1.0, 3.14):
+        a = y + theta_val / 2.0
+        assert np.isclose(float(ridge().theta(jnp.asarray(a),
+                                              jnp.asarray(y))),
+                          theta_val, atol=1e-6)

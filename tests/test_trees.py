@@ -1,0 +1,46 @@
+"""Tree-structured communication + Definition 4 (significant difference)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import trees
+
+
+@pytest.mark.parametrize("q", [2, 3, 4, 5, 8, 13, 16])
+def test_binary_tree_reduces_all(q):
+    t = trees.binary_tree(q)
+    t.validate()
+    vals = [float(i) for i in range(q)]
+    assert t.reduce_host(vals) == sum(vals)
+
+
+@pytest.mark.parametrize("q", [3, 4, 8, 16])
+def test_default_pair_significantly_different(q):
+    t1, t2 = trees.default_tree_pair(q)
+    assert trees.significantly_different(t1, t2)
+
+
+def test_same_tree_not_significantly_different():
+    t1 = trees.binary_tree(8)
+    assert not trees.significantly_different(t1, trees.binary_tree(8))
+
+
+@given(q=st.integers(2, 24), seed=st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_permuted_tree_reduces_exactly(q, seed):
+    """Any leaf permutation still reduces to the exact sum (protocol
+    correctness is schedule-independent)."""
+    rng = np.random.default_rng(seed)
+    order = list(rng.permutation(q))
+    t = trees.binary_tree(q, order=order)
+    t.validate()
+    vals = rng.standard_normal(q)
+    assert np.isclose(t.reduce_host(list(vals)), vals.sum())
+
+
+@given(q=st.integers(4, 16))
+@settings(max_examples=20, deadline=None)
+def test_subtree_leafsets_are_proper(q):
+    t1, _ = trees.default_tree_pair(q)
+    for ls in t1.subtree_leafsets():
+        assert 1 < len(ls) < q

@@ -1,0 +1,91 @@
+"""Framework-scale VFL pieces on a single device (party axis size 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_arch
+from repro.models.attention import (cache_scatter, chunked_attention,
+                                    local_decode_attention,
+                                    merge_partial_attention,
+                                    reference_attention)
+from repro.sharding.api import use_runtime
+from repro.vfl.embed import secure_vocab_embed
+from repro.vfl.heads import vocab_parallel_loss
+
+
+def test_secure_embed_equals_lookup(rt, key):
+    table = 0.05 * jax.random.normal(key, (64, 16))
+    tok = jax.random.randint(key, (2, 8), 0, 64)
+    with use_runtime(rt):
+        emb = jax.jit(lambda t, x: secure_vocab_embed(rt, t, x, key))(table,
+                                                                      tok)
+    expect = jnp.take(table, tok, axis=0)
+    assert np.allclose(np.asarray(emb, np.float32), expect, atol=2e-2)
+
+
+def test_secure_embed_backward_is_bum(rt, key):
+    """d(loss)/d(table) accumulates ϑ at looked-up rows only."""
+    table = 0.05 * jax.random.normal(key, (32, 8))
+    tok = jnp.asarray([[3, 3, 7]], jnp.int32)
+    with use_runtime(rt):
+        def loss(t):
+            e = secure_vocab_embed(rt, t, tok, key)
+            return jnp.sum(e.astype(jnp.float32))
+        g = jax.jit(jax.grad(loss))(table)
+    g = np.asarray(g)
+    assert np.allclose(g[3], 2.0, atol=2e-2)   # row 3 hit twice
+    assert np.allclose(g[7], 1.0, atol=2e-2)
+    mask = np.ones(32, bool); mask[[3, 7]] = False
+    assert np.allclose(g[mask], 0.0, atol=1e-6)
+
+
+@given(sq=st.sampled_from([16, 32, 64]), window=st.sampled_from([None, 8, 16]),
+       chunk=st.sampled_from([8, 16, 64]))
+@settings(max_examples=12, deadline=None)
+def test_chunked_attention_equals_reference(sq, window, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, sq, 4, 16))
+    k = jax.random.normal(ks[1], (2, sq, 2, 16))
+    v = jax.random.normal(ks[2], (2, sq, 2, 16))
+    a = chunked_attention(q, k, v, causal=True, window=window, chunk=chunk)
+    b = reference_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_cache_scatter_ownership():
+    cache = jnp.zeros((2, 8, 2, 4), jnp.float32)
+    new = jnp.ones((2, 2, 4))
+    out = cache_scatter(cache, new, pos=jnp.asarray(5), shard_offset=0)
+    assert float(out[:, 5].sum()) == 16.0 and float(out.sum()) == 16.0
+    # shard that does not own pos 5 is untouched
+    out2 = cache_scatter(cache, new, pos=jnp.asarray(5),
+                         shard_offset=jnp.asarray(8))
+    assert float(out2.sum()) == 0.0
+
+
+def test_lse_merge_single_axis_identity(rt):
+    """Partial attention over one full shard == direct softmax attention."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 4, 16))
+    kc = jax.random.normal(ks[1], (2, 8, 2, 16))
+    vc = jax.random.normal(ks[2], (2, 8, 2, 16))
+    o, m, l = local_decode_attention(q, kc, vc, pos=jnp.asarray(7),
+                                     shard_offset=0)
+    direct = o / np.maximum(np.asarray(l)[..., None], 1e-30)
+    r = reference_attention(q[:, None], kc, vc, causal=False)[:, 0]
+    np.testing.assert_allclose(direct, np.asarray(r, np.float32), atol=2e-5)
+
+
+def test_vocab_loss_equals_plain_ce(rt, key):
+    V, D, B, S = 64, 16, 2, 16
+    table = 0.1 * jax.random.normal(key, (V, D))
+    h = jax.random.normal(key, (B, S, D))
+    y = jax.random.randint(key, (B, S), 0, V)
+    with use_runtime(rt):
+        loss = jax.jit(lambda t: vocab_parallel_loss(rt, t, h, y, V))(table)
+    ce = -jnp.take_along_axis(jax.nn.log_softmax(h @ table.T),
+                              y[..., None], -1).mean()
+    assert np.isclose(float(loss), float(ce), atol=2e-3)  # bf16 head
