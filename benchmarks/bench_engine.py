@@ -1,0 +1,157 @@
+"""Fused step engine vs the seed per-minibatch path: steps/sec + transfers.
+
+Two executions of the *same* VFB²-SGD update sequence:
+
+* ``per_minibatch`` — the pre-engine hot path: one jitted minibatch step,
+  dispatched from Python once per iteration (a host→device round-trip per
+  minibatch, as in the thread simulation's structure);
+* ``fused``         — one compiled program per epoch (`core.engine`).
+
+Also audits the fused epoch's jaxpr: counts host-transfer primitives
+(callbacks/infeed/outfeed/device_put) — the fused program must contain
+**zero** — and reports dispatches/epoch (1 vs ``steps``).
+
+The committed baseline lives in ``benchmarks/BENCH_engine.json``; fresh
+runs are written to ``results/bench/engine.json`` for trajectory tracking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import time
+
+from benchmarks.common import emit, save
+from repro.core import algorithms, losses
+from repro.core.engine import EngineConfig, FusedEngine
+
+
+def best_of(fn, repeat: int, warmup: int = 1) -> float:
+    """Min-of-repeats wall time (robust to scheduler noise on shared CPUs)."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+HOST_TRANSFER_PRIMS = {
+    "callback", "pure_callback", "io_callback", "debug_callback",
+    "infeed", "outfeed", "device_put", "host_local_array_to_global_array",
+}
+
+
+def count_host_transfers(jaxpr) -> int:
+    """Recursively count host-transfer primitives in a (closed) jaxpr.
+
+    Recurses through every param value, including tuples/lists of jaxprs
+    (``lax.cond`` branches, custom-call sub-jaxprs), so a callback hidden
+    anywhere in the epoch program is counted.
+    """
+    def sub(v):
+        inner = getattr(v, "jaxpr", None)
+        if inner is not None:                      # ClosedJaxpr
+            yield inner
+        elif hasattr(v, "eqns"):                   # raw Jaxpr
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                yield from sub(item)
+
+    total = 0
+    for eqn in jaxpr.jaxpr.eqns if hasattr(jaxpr, "jaxpr") else jaxpr.eqns:
+        if eqn.primitive.name in HOST_TRANSFER_PRIMS:
+            total += 1
+        for v in eqn.params.values():
+            for inner in sub(v):
+                total += count_host_transfers(inner)
+    return total
+
+
+def run(quick: bool = False):
+    n, d, q, m = (1024, 128, 8, 3) if quick else (4096, 256, 8, 3)
+    batch = 64
+    steps = n // batch
+    reps = 3 if quick else 5
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = np.sign(rng.standard_normal(n)).astype(np.float32)
+    prob = losses.logistic_l2()
+    layout = algorithms.PartyLayout.even(d, q, m)
+    mask = jnp.asarray(layout.update_mask(d, False))
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    key = jax.random.PRNGKey(0)
+
+    # --- seed per-minibatch path: host dispatch per step ------------------
+    @functools.partial(jax.jit, static_argnames=("batch",))
+    def minibatch_step(w, ib, lr, batch):
+        xb, yb = xj[ib], yj[ib]
+        agg = xb @ w
+        theta = prob.theta(agg, yb)
+        g = xb.T @ theta / batch + prob.lam * prob.reg_grad(w)
+        return w - lr * mask * g
+
+    idx = jax.random.randint(key, (steps, batch), 0, n)
+
+    def per_minibatch_epoch():
+        w = jnp.zeros(d)
+        for t in range(steps):
+            w = minibatch_step(w, idx[t], 0.3, batch=batch)
+        return jax.block_until_ready(w)
+
+    dt_pm = best_of(per_minibatch_epoch, repeat=reps)
+    pm_sps = steps / dt_pm
+    emit("engine/per_minibatch_epoch", dt_pm * 1e6,
+         f"steps_per_sec={pm_sps:.0f}")
+
+    # --- fused engine: one dispatch per epoch -----------------------------
+    eng = FusedEngine(prob, x, y, layout, EngineConfig(secure="off"))
+    wq0 = eng.pack_w(np.zeros(d))
+
+    def fused_epoch():
+        return jax.block_until_ready(
+            eng.sgd_epoch(wq0, 0.3, key, batch, steps))
+
+    dt_f = best_of(fused_epoch, repeat=reps)
+    f_sps = steps / dt_f
+    speedup = f_sps / pm_sps
+    emit("engine/fused_epoch", dt_f * 1e6,
+         f"steps_per_sec={f_sps:.0f} speedup={speedup:.1f}x")
+
+    # --- secure epoch (Algorithm 1 masks inside the program) --------------
+    enc = FusedEngine(prob, x, y, layout, EngineConfig(secure="two_tree"))
+
+    def secure_epoch():
+        return jax.block_until_ready(
+            enc.sgd_epoch(wq0, 0.3, key, batch, steps))
+
+    dt_s = best_of(secure_epoch, repeat=reps)
+    emit("engine/fused_secure_epoch", dt_s * 1e6,
+         f"steps_per_sec={steps / dt_s:.0f}")
+
+    # --- host-transfer audit ----------------------------------------------
+    jaxpr = eng.sgd_epoch_jaxpr(wq0, 0.3, key, batch, steps)
+    transfers = count_host_transfers(jaxpr)
+    emit("engine/host_transfer_prims", 0.0,
+         f"count={transfers} dispatches_per_epoch=1 (vs {steps})")
+    assert transfers == 0, (
+        f"fused epoch contains {transfers} host-transfer primitives")
+
+    rec = {
+        "config": {"n": n, "d": d, "q": q, "m": m, "batch": batch,
+                   "steps": steps, "backend": jax.default_backend()},
+        "per_minibatch_steps_per_sec": pm_sps,
+        "fused_steps_per_sec": f_sps,
+        "fused_secure_steps_per_sec": steps / dt_s,
+        "speedup_fused_over_per_minibatch": speedup,
+        "host_transfer_prims_in_fused_epoch": transfers,
+        "dispatches_per_epoch": {"fused": 1, "per_minibatch": steps},
+    }
+    save("engine", rec)
+    return rec

@@ -39,7 +39,7 @@ def run():
     emit("kernel/selective_scan_256x512", dt * 1e6, "(interpret)")
     rec["scan_us"] = dt * 1e6
 
-    # vfl grad
+    # vfl grad (rank-1)
     xb = jax.random.normal(ks[0], (256, 512), jnp.float32)
     w = jax.random.normal(ks[1], (512,))
     th = jax.random.normal(ks[2], (256,))
@@ -47,6 +47,16 @@ def run():
     dt, _ = time_call(lambda: jax.block_until_ready(h(xb, w, th)))
     emit("kernel/vfl_grad_256x512", dt * 1e6, "(interpret)")
     rec["vfl_us"] = dt * 1e6
+
+    # vfl grad batched rank-2 (SVRG iterate+snapshot in one HBM pass):
+    # should cost far less than 2× the rank-1 call
+    w2 = jax.random.normal(ks[1], (512, 2))
+    th2 = jax.random.normal(ks[2], (256, 2))
+    h2 = jax.jit(lambda *a: ops.vfl_grad(*a, lam=1e-4))
+    dt2, _ = time_call(lambda: jax.block_until_ready(h2(xb, w2, th2)))
+    emit("kernel/vfl_grad_256x512_rank2", dt2 * 1e6,
+         f"vs_2x_rank1={dt2 / (2 * dt):.2f} (interpret)")
+    rec["vfl_rank2_us"] = dt2 * 1e6
 
     save("kernels", rec)
     return rec

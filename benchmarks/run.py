@@ -16,13 +16,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller trials/datasets (CI budget)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (e.g. kernels,engine)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_async, bench_kernels, bench_losslessness,
-                            bench_regression, bench_roofline,
-                            bench_scalability, bench_secure_agg,
-                            bench_staleness)
+    from benchmarks import (bench_async, bench_engine, bench_kernels,
+                            bench_losslessness, bench_regression,
+                            bench_roofline, bench_scalability,
+                            bench_secure_agg, bench_staleness)
 
     suites = {
         "losslessness": lambda: bench_losslessness.run(
@@ -40,12 +41,17 @@ def main() -> None:
             epochs=4 if args.quick else 8),
         "secure_agg": bench_secure_agg.run,
         "kernels": bench_kernels.run,
+        "engine": lambda: bench_engine.run(quick=args.quick),
         "roofline": bench_roofline.run,
     }
+    only = set(args.only.split(",")) if args.only else None
+    if only and not only <= suites.keys():
+        ap.error(f"unknown suite(s) {sorted(only - suites.keys())}; "
+                 f"choose from {sorted(suites)}")
     print("name,us_per_call,derived")
     failed = []
     for name, fn in suites.items():
-        if args.only and name != args.only:
+        if only is not None and name not in only:
             continue
         try:
             fn()

@@ -21,6 +21,12 @@ Baselines:
 The asynchronous execution of these same rules lives in
 ``core.async_engine`` (threads, wall-clock) and ``core.staleness``
 (bounded-delay SPMD emulation).
+
+This module is the *oracle*; the production hot path is the fused
+federated step engine (``core.engine``), which runs the same epochs as one
+party-mapped compiled program per epoch (secure aggregation included) and
+is reachable here via ``train(..., engine="fused")``.  Tests pin the two
+paths together to float tolerance.
 """
 from __future__ import annotations
 
@@ -185,8 +191,15 @@ def train(
     seed: int = 0,
     active_only: bool = False,  # True => AFSVRG-VP-style baseline
     w0: Optional[np.ndarray] = None,
+    engine: str = "reference",  # "fused" => one compiled program per epoch
+    engine_config=None,         # core.engine.EngineConfig when engine="fused"
 ) -> TrainResult:
     n, d = x.shape
+    if engine == "fused":
+        return _train_fused(problem, x, y, layout, algo, epochs, lr, batch,
+                            seed, active_only, w0, engine_config)
+    if engine != "reference":
+        raise ValueError(f"unknown engine {engine}")
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     w = jnp.zeros(d, jnp.float32) if w0 is None else jnp.asarray(w0, jnp.float32)
@@ -217,6 +230,42 @@ def train(
         hist.append({"epoch": ep + 1, "objective": _eval(problem, w, x, y),
                      "algo": algo})
     return TrainResult(w=np.asarray(w), history=hist)
+
+
+def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
+                 active_only, w0, engine_config) -> TrainResult:
+    """Hot-path trainer: every epoch is ONE device dispatch (secure
+    aggregation, ϑ, and BUM updates all inside the compiled program)."""
+    from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
+
+    n, d = x.shape
+    cfg = engine_config if engine_config is not None else EngineConfig()
+    eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
+    wq = eng.pack_w(np.zeros(d, np.float32) if w0 is None else w0)
+    steps = max(1, n // batch)
+    key = jax.random.PRNGKey(seed)
+    hist = []
+
+    if algo == "saga":
+        tabq, avgq = eng.saga_init(wq, key)
+
+    wq_snap, muq = wq, None
+    for ep in range(epochs):
+        key, sub = jax.random.split(key)
+        if algo == "sgd":
+            wq = eng.sgd_epoch(wq, lr, sub, batch, steps)
+        elif algo == "svrg":
+            wq_snap = wq
+            muq = eng.full_gradient(wq_snap, sub)
+            wq = eng.svrg_epoch(wq, wq_snap, muq, lr, sub, batch, steps)
+        elif algo == "saga":
+            wq, tabq, avgq = eng.saga_epoch(wq, tabq, avgq, lr, sub, batch,
+                                            steps)
+        else:
+            raise ValueError(f"unknown algo {algo}")
+        hist.append({"epoch": ep + 1, "objective": eng.objective(wq),
+                     "algo": algo, "engine": "fused"})
+    return TrainResult(w=eng.unpack_w(wq), history=hist)
 
 
 def accuracy(w, x, y) -> float:

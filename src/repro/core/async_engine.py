@@ -17,6 +17,14 @@ handles communication).  Two parallel levels:
 A synchronous counterpart (``run_sync`` = "VFB") performs the same updates
 behind a barrier — with a straggler party this is what Figs. 3/4 compare
 against.  Per-party speed factors simulate unbalanced resources.
+
+Role in the codebase: this thread simulation is the **wall-clock fidelity
+reference** — it exists to reproduce the paper's timing claims (real races,
+inconsistent reads, stragglers), not to be fast.  The performance hot path
+is the fused federated step engine (``core.engine``), which runs whole
+VFB² epochs as a single compiled program; its bounded-delay mode
+(`core.staleness.run_delayed_fused`) realizes the same asynchronous iterate
+sequences deterministically on device.
 """
 from __future__ import annotations
 

@@ -1,0 +1,490 @@
+"""Fused on-device VFB² step engine — the canonical hot path.
+
+One jitted program runs an **entire epoch** on device: minibatch sampling,
+per-party partial products, masked secure aggregation (Algorithm 1), the
+dominator's ϑ, and the BUM backward update (Algorithms 2/3) all live inside
+a party-mapped ``lax.scan`` with **zero host↔device synchronization inside
+the epoch**.  The three previously divergent paths share this one program:
+
+* ``core.algorithms``   — the sequential reference math (oracle; the fused
+                          epochs reproduce it to float tolerance, exactly
+                          for a single party);
+* ``core.async_engine`` — the wall-clock thread simulation (fidelity
+                          reference for BAPA timing claims);
+* ``kernels.vfl_grad``  — the batched rank-k Pallas kernel, which the
+                          engine routes X-block contractions through when
+                          ``use_kernel`` resolves True (default on TPU).
+
+Party-axis realization
+----------------------
+The per-party program is written once against a named axis and bound two
+ways:
+
+* ``shard_map`` over a mesh whose party axis has q devices (true SPMD, one
+  party per chip — production);
+* ``jax.vmap(axis_name=...)`` when the mesh cannot host q parties (CPU
+  tests/CI).  Collectives (``psum``/``ppermute``/``axis_index``) have
+  identical semantics under a vmapped named axis, so the emulation is the
+  same single compiled program — still one dispatch per epoch.
+
+Secure aggregation inside the scan uses the same primitives as the rest of
+the repo: ``secure_psum`` (two-tree masks, Algorithm 1), ``secure_psum_ring``
+(pairwise-cancelling ring masks, §Perf), or a plain ``psum`` (``"off"``,
+the losslessness oracle).  Labels are replicated across parties here — the
+SPMD stand-in for the dominator broadcasting ϑ, numerically identical.
+
+Vertical partitioning packs party blocks to a uniform padded width
+(``PartyLayout.even`` with d % q != 0 works); the pad coordinates are
+masked out of every update.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import PartyLayout, _batch_indices
+from repro.core.losses import Problem
+from repro.core.secure_agg import secure_psum, secure_psum_ring
+from repro.kernels import vfl_grad as _vg
+from repro.sharding.api import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static knobs of the fused engine (hashable: used as a jit static)."""
+
+    secure: str = "off"              # "off" | "two_tree" | "ring"
+    mask_scale: float = 1.0
+    schedule_faithful: bool = False  # replay exact T1/T2 rounds via ppermute
+    use_kernel: Optional[bool] = None   # None = auto (True on TPU backends)
+    interpret: Optional[bool] = None    # None = auto (True off-TPU)
+    block_b: int = 128
+    block_d: int = 128
+    # Kernel routing is for minibatch-sized blocks; the rank-k kernel keeps
+    # its z accumulator (B, M) f32 in VMEM, so full-dataset contractions
+    # (full_gradient / saga_init) beyond this row count fall back to the
+    # XLA matmul rather than risking a VMEM overflow on real TPUs.
+    kernel_max_rows: int = 4096
+    axis: str = "model"              # party axis name (mesh axis for SPMD)
+
+
+# ---------------------------------------------------------------------------
+# vertical packing: (n, d) features -> (q, n, dp) padded party blocks
+# ---------------------------------------------------------------------------
+
+def party_widths(layout: PartyLayout) -> np.ndarray:
+    return np.asarray([hi - lo for lo, hi in layout.bounds], np.int64)
+
+
+def pack_features(x: np.ndarray, layout: PartyLayout) -> jax.Array:
+    """Stack per-party feature blocks, zero-padded to the widest block."""
+    n = x.shape[0]
+    dp = int(party_widths(layout).max())
+    xs = np.zeros((layout.q, n, dp), np.float32)
+    for p, (lo, hi) in enumerate(layout.bounds):
+        xs[p, :, : hi - lo] = x[:, lo:hi]
+    return jnp.asarray(xs)
+
+
+def pack_vec(v: np.ndarray, layout: PartyLayout) -> jax.Array:
+    """(d,) coordinate vector -> (q, dp) party-stacked, zero-padded."""
+    dp = int(party_widths(layout).max())
+    out = np.zeros((layout.q, dp), np.float32)
+    for p, (lo, hi) in enumerate(layout.bounds):
+        out[p, : hi - lo] = np.asarray(v)[lo:hi]
+    return jnp.asarray(out)
+
+
+def unpack_vec(vq, layout: PartyLayout) -> np.ndarray:
+    """(q, dp) party-stacked -> (d,) coordinate vector (drops padding)."""
+    vq = np.asarray(vq)
+    return np.concatenate([vq[p, : hi - lo]
+                           for p, (lo, hi) in enumerate(layout.bounds)])
+
+
+def pack_mask(layout: PartyLayout, active_only: bool = False) -> jax.Array:
+    """(q, dp) update mask: layout's trainable blocks minus the padding."""
+    dp = int(party_widths(layout).max())
+    mask = np.zeros((layout.q, dp), np.float32)
+    parties = range(layout.m) if active_only else range(layout.q)
+    for p in parties:
+        lo, hi = layout.bounds[p]
+        mask[p, : hi - lo] = 1.0
+    return jnp.asarray(mask)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class FusedEngine:
+    """Holds the packed vertical data and the per-algorithm jitted epochs.
+
+    All ``*_epoch`` methods take and return the **party-stacked** iterate
+    ``wq`` of shape (q, dp); use :meth:`pack_w`/:meth:`unpack_w` at the
+    boundary.  Each call is exactly one device dispatch.
+    """
+
+    def __init__(self, problem: Problem, x, y, layout: PartyLayout,
+                 cfg: EngineConfig = EngineConfig(),
+                 mesh=None, active_only: bool = False):
+        if cfg.secure not in ("off", "two_tree", "ring"):
+            raise ValueError(f"unknown secure mode {cfg.secure!r} "
+                             "(expected 'off', 'two_tree' or 'ring')")
+        self.problem = problem
+        self.layout = layout
+        self.cfg = cfg
+        self.q = layout.q
+        self.n = int(np.asarray(x).shape[0])
+        self.xs = pack_features(np.asarray(x), layout)      # (q, n, dp)
+        self.dp = int(self.xs.shape[2])
+        self.y = jnp.asarray(y, jnp.float32)
+        self.maskq = pack_mask(layout, active_only)
+        self.mesh = mesh
+        if mesh is not None:
+            # A supplied mesh states SPMD intent; a silent vmap fallback
+            # would report "multi-chip" numbers that ran on one device.
+            if (cfg.axis not in mesh.axis_names
+                    or mesh.shape[cfg.axis] != layout.q):
+                raise ValueError(
+                    f"mesh must carry a {cfg.axis!r} axis of size q="
+                    f"{layout.q} to host one party per device; got axes "
+                    f"{dict(mesh.shape)}. Pass mesh=None for the "
+                    "single-device vmap emulation.")
+            self._use_shard_map = True
+        else:
+            self._use_shard_map = False
+        kern = cfg.use_kernel
+        self._kernel = (jax.default_backend() == "tpu") if kern is None else kern
+        interp = cfg.interpret
+        self._interpret = (jax.default_backend() != "tpu") if interp is None \
+            else interp
+        self._jitted = {}
+
+    # -- party-axis binding --------------------------------------------------
+
+    def _bind(self, party_fn):
+        """Map ``party_fn(local, shared)`` over the party axis.
+
+        ``local`` is a pytree of party-stacked arrays (leading q axis),
+        ``shared`` a replicated pytree.  shard_map on a q-wide mesh axis,
+        vmap-with-axis-name otherwise; identical collective semantics.
+        """
+        if self._use_shard_map:
+            def island(local, shared):
+                sq = jax.tree_util.tree_map(lambda a: a[0], local)
+                out = party_fn(sq, shared)
+                return jax.tree_util.tree_map(lambda o: o[None], out)
+            return shard_map(island, mesh=self.mesh,
+                             in_specs=(P(self.cfg.axis), P()),
+                             out_specs=P(self.cfg.axis), check_vma=False)
+        return jax.vmap(party_fn, in_axes=(0, None), out_axes=0,
+                        axis_name=self.cfg.axis)
+
+    # -- X-block contractions (kernel-routed or jnp) -------------------------
+
+    def _fwd(self, xb, wcols):
+        """(B, dp) @ (dp, M) -> (B, M) forward partial products."""
+        if self._kernel and xb.shape[0] <= self.cfg.kernel_max_rows:
+            z, _ = _vg.vfl_grad(
+                xb, wcols, None, mode="forward", interpret=self._interpret,
+                block_b=self.cfg.block_b, block_d=self.cfg.block_d)
+            return z
+        return xb @ wcols
+
+    def _bwd(self, xb, thcols, denom: int):
+        """(dp, M) BUM data gradients XᵀΘ/denom (reg term added by caller)."""
+        if self._kernel and xb.shape[0] <= self.cfg.kernel_max_rows:
+            _, g = _vg.vfl_grad(
+                xb, jnp.zeros((xb.shape[1], thcols.shape[1]), xb.dtype),
+                thcols, mode="backward", denom=denom,
+                interpret=self._interpret,
+                block_b=self.cfg.block_b, block_d=self.cfg.block_d)
+            return g
+        return xb.T @ thcols / denom
+
+    def _agg(self, z, kt):
+        """Masked secure aggregation of partials over the party axis."""
+        cfg = self.cfg
+        if cfg.secure == "off":
+            return jax.lax.psum(z, cfg.axis)
+        if cfg.secure == "ring":
+            return secure_psum_ring(z, cfg.axis, kt,
+                                    mask_scale=cfg.mask_scale)
+        return secure_psum(z, cfg.axis, kt, mask_scale=cfg.mask_scale,
+                           schedule_faithful=cfg.schedule_faithful,
+                           q=self.q)
+
+    def _keys(self, key, steps: int):
+        """Per-step mask keys, derived off the sampling key's stream."""
+        return jax.random.split(jax.random.fold_in(key, 0x5ec), steps)
+
+    def _epoch(self, name, builder):
+        """Build-and-cache the jitted epoch function for this instance."""
+        if name not in self._jitted:
+            self._jitted[name] = builder()
+        return self._jitted[name]
+
+    # -- SGD (Algorithms 2/3) ------------------------------------------------
+
+    def sgd_epoch(self, wq, lr, key, batch: int, steps: int):
+        prob, cfg = self.problem, self.cfg
+
+        def build():
+            def party(local, shared):
+                xp, wp, maskp = local
+                y, lr, idx, mkeys = shared
+
+                def body(wp, inp):
+                    ib, kt = inp
+                    xb = xp[ib]
+                    z = self._fwd(xb, wp[:, None])[:, 0]
+                    agg = self._agg(z, kt)
+                    theta = prob.theta(agg, y[ib])
+                    g = self._bwd(xb, theta[:, None], ib.shape[0])[:, 0] \
+                        + prob.lam * prob.reg_grad(wp)
+                    return wp - lr * maskp * g, None
+
+                wp, _ = jax.lax.scan(body, wp, (idx, mkeys))
+                return wp
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, wq, maskq, y, lr, key, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                return mapped((xs, wq, maskq),
+                              (y, lr, idx, self._keys(key, steps)))
+
+            return epoch
+
+        return self._epoch("sgd", build)(self.xs, wq, self.maskq, self.y,
+                                         lr, key, batch, steps)
+
+    # -- SVRG (Algorithms 4/5): rank-2 batched steps -------------------------
+
+    def full_gradient(self, wq, key):
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                xp, wp = local
+                y, kt = shared
+                z = self._fwd(xp, wp[:, None])[:, 0]
+                agg = self._agg(z, kt)
+                theta = prob.theta(agg, y)
+                return self._bwd(xp, theta[:, None], y.shape[0])[:, 0] \
+                    + prob.lam * prob.reg_grad(wp)
+
+            mapped = self._bind(party)
+
+            @jax.jit
+            def full(xs, wq, y, key):
+                return mapped((xs, wq), (y, jax.random.fold_in(key, 0xf)))
+
+            return full
+
+        return self._epoch("full_grad", build)(self.xs, wq, self.y, key)
+
+    def svrg_epoch(self, wq, wq_snap, muq, lr, key, batch: int, steps: int):
+        """Inner loop of VFB²-SVRG; the current iterate and the snapshot
+        ride the same rank-2 kernel pass (M = 2)."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                xp, wp, wsp, mup, maskp = local
+                y, lr, idx, mkeys = shared
+
+                def body(wp, inp):
+                    ib, kt = inp
+                    xb = xp[ib]
+                    z = self._fwd(xb, jnp.stack([wp, wsp], axis=1))  # (B, 2)
+                    agg = self._agg(z, kt)
+                    th1 = prob.theta(agg[:, 0], y[ib])
+                    th0 = prob.theta(agg[:, 1], y[ib])
+                    gg = self._bwd(xb, jnp.stack([th1, th0], axis=1),
+                                   ib.shape[0])                      # (dp, 2)
+                    g1 = gg[:, 0] + prob.lam * prob.reg_grad(wp)
+                    g0 = gg[:, 1] + prob.lam * prob.reg_grad(wsp)
+                    return wp - lr * maskp * (g1 - g0 + mup), None
+
+                wp, _ = jax.lax.scan(body, wp, (idx, mkeys))
+                return wp
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, wq, wq_snap, muq, maskq, y, lr, key, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                return mapped((xs, wq, wq_snap, muq, maskq),
+                              (y, lr, idx, self._keys(key, steps)))
+
+            return epoch
+
+        return self._epoch("svrg", build)(self.xs, wq, wq_snap, muq,
+                                          self.maskq, self.y, lr, key,
+                                          batch, steps)
+
+    # -- SAGA (Algorithms 6/7) -----------------------------------------------
+
+    def saga_init(self, wq, key):
+        """ϑ̃ table + per-party running average (Alg. 6 step 2 init pass)."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                xp, wp = local
+                y, kt = shared
+                z = self._fwd(xp, wp[:, None])[:, 0]
+                agg = self._agg(z, kt)
+                theta = prob.theta(agg, y)
+                avgp = self._bwd(xp, theta[:, None], y.shape[0])[:, 0]
+                return theta, avgp
+
+            mapped = self._bind(party)
+
+            @jax.jit
+            def init(xs, wq, y, key):
+                tab, avgq = mapped((xs, wq), (y, jax.random.fold_in(key, 0xa)))
+                return tab, avgq
+
+            return init
+
+        return self._epoch("saga_init", build)(self.xs, wq, self.y, key)
+
+    def saga_epoch(self, wq, tabq, avgq, lr, key, batch: int, steps: int):
+        """``tabq`` is the replicated per-party copy of the ϑ̃ table
+        ((q, n); every party maintains the same values)."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                xp, wp, tab, avgp, maskp = local
+                y, lr, idx, mkeys = shared
+                n = y.shape[0]
+
+                def body(carry, inp):
+                    wp, tab, avgp = carry
+                    ib, kt = inp
+                    xb = xp[ib]
+                    z = self._fwd(xb, wp[:, None])[:, 0]
+                    agg = self._agg(z, kt)
+                    th_new = prob.theta(agg, y[ib])
+                    th_old = tab[ib]
+                    dth = (th_new - th_old)[:, None]
+                    # one X-block pass for XᵀΔϑ; the 1/B and 1/n scalings
+                    # are scalar (the kernel-path HBM read is the cost)
+                    raw = self._bwd(xb, dth, 1)[:, 0]
+                    v = raw / ib.shape[0] + avgp \
+                        + prob.lam * prob.reg_grad(wp)
+                    wp = wp - lr * maskp * v
+                    avgp = avgp + raw / n
+                    tab = tab.at[ib].set(th_new)
+                    return (wp, tab, avgp), None
+
+                (wp, tab, avgp), _ = jax.lax.scan(body, (wp, tab, avgp),
+                                                  (idx, mkeys))
+                return wp, tab, avgp
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, wq, tabq, avgq, maskq, y, lr, key, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                return mapped((xs, wq, tabq, avgq, maskq),
+                              (y, lr, idx, self._keys(key, steps)))
+
+            return epoch
+
+        return self._epoch("saga", build)(self.xs, wq, tabq, avgq,
+                                          self.maskq, self.y, lr, key,
+                                          batch, steps)
+
+    # -- bounded-delay (τ) emulation (core.staleness, fused) ------------------
+
+    def delayed_sgd_epoch(self, wq, bufq, t0, delays_q, lr, key,
+                          batch: int, steps: int, tau: int):
+        """Stale-gradient VFB²-SGD: party ℓ applies, at step t, the BUM
+        gradient of step t − d_ℓ from a per-party ring buffer carried
+        through the scan — ``core.staleness`` semantics on the fused path.
+
+        ``bufq``: (q, τ+1, dp) gradient ring buffers; ``delays_q``: (q,)
+        int32 per-party delays; ``t0``: scalar int32 global step counter.
+        """
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                xp, wp, buf, delay = local
+                y, lr, idx, mkeys, t0 = shared
+
+                def body(carry, inp):
+                    wp, buf, t = carry
+                    ib, kt = inp
+                    xb = xp[ib]
+                    z = self._fwd(xb, wp[:, None])[:, 0]
+                    agg = self._agg(z, kt)
+                    theta = prob.theta(agg, y[ib])
+                    g = self._bwd(xb, theta[:, None], ib.shape[0])[:, 0] \
+                        + prob.lam * prob.reg_grad(wp)
+                    slot = t % (tau + 1)
+                    buf = jax.lax.dynamic_update_index_in_dim(buf, g, slot, 0)
+                    eff = jnp.maximum(t - delay, 0) % (tau + 1)
+                    stale = jax.lax.dynamic_index_in_dim(buf, eff, 0,
+                                                         keepdims=False)
+                    return (wp - lr * stale, buf, t + 1), None
+
+                (wp, buf, _), _ = jax.lax.scan(body, (wp, buf, t0),
+                                               (idx, mkeys))
+                return wp, buf
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"))
+            def epoch(xs, wq, bufq, delays_q, y, lr, key, t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                return mapped((xs, wq, bufq, delays_q),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        wq, bufq = self._epoch(f"delayed{tau}", build)(
+            self.xs, wq, bufq, delays_q, self.y, lr, key, t0, batch, steps)
+        return wq, bufq, t0 + steps
+
+    # -- introspection -------------------------------------------------------
+
+    def sgd_epoch_jaxpr(self, wq, lr, key, batch: int, steps: int):
+        """The whole-epoch jaxpr (for auditing that no host round-trips —
+        callbacks/infeed/transfers — exist inside the fused program)."""
+        self.sgd_epoch(wq, lr, key, batch, steps)   # ensure built
+        fn = self._jitted["sgd"]
+        return jax.make_jaxpr(
+            lambda xs, w: fn(xs, w, self.maskq, self.y, lr, key,
+                             batch=batch, steps=steps))(self.xs, wq)
+
+    # -- boundary helpers ----------------------------------------------------
+
+    def pack_w(self, w) -> jax.Array:
+        return pack_vec(np.asarray(w), self.layout)
+
+    def unpack_w(self, wq) -> np.ndarray:
+        return unpack_vec(wq, self.layout)
+
+    def objective(self, wq) -> float:
+        """Full objective (one device sync; for per-epoch telemetry).
+
+        The padded coordinates are zero and every shipped regularizer maps
+        0 → 0, so summing ``reg`` over the padded stack is exact."""
+        prob = self.problem
+        agg = jnp.einsum("qnd,qd->n", self.xs, wq)
+        return float(jnp.mean(prob.loss(agg, self.y))
+                     + prob.lam * jnp.sum(prob.reg(wq)))

@@ -80,6 +80,22 @@ def secure_aggregate_host(
 # JAX / mesh-axis forms
 # ---------------------------------------------------------------------------
 
+def _complete_perm(perm, q: int):
+    """Extend a partial (src, dst) permutation to a full one.
+
+    The extra pairs route unscheduled sources to unscheduled destinations;
+    callers mask non-scheduled receivers, so the filler values are never
+    read.  Needed because ``lax.ppermute``'s vmap batching rule (the
+    engine's single-device party emulation) only accepts full permutations,
+    while real meshes also accept partial ones.
+    """
+    srcs = {s for s, _ in perm}
+    dsts = {d for _, d in perm}
+    fill = zip((i for i in range(q) if i not in srcs),
+               (i for i in range(q) if i not in dsts))
+    return list(perm) + list(fill)
+
+
 def tree_psum_collective_permute(x: jax.Array, axis_name: str,
                                  tree: trees_lib.ReductionTree) -> jax.Array:
     """Reduce ``x`` over mesh axis ``axis_name`` replaying ``tree``'s rounds
@@ -93,7 +109,7 @@ def tree_psum_collective_permute(x: jax.Array, axis_name: str,
     idx = jax.lax.axis_index(axis_name)
     acc = x
     for rnd in tree.rounds:
-        perm = [(src, dst) for dst, src in rnd]
+        perm = _complete_perm([(src, dst) for dst, src in rnd], q)
         moved = jax.lax.ppermute(acc, axis_name, perm)
         # parties that are a dst this round accumulate; others keep acc
         is_dst = jnp.zeros((), dtype=bool)
@@ -103,7 +119,7 @@ def tree_psum_collective_permute(x: jax.Array, axis_name: str,
     # distribute the root total back down the tree (reverse rounds; each
     # round is a disjoint pair set, hence a valid partial permutation)
     for rnd in reversed(tree.rounds):
-        perm = [(dst, src) for dst, src in rnd]  # parent -> child
+        perm = _complete_perm([(dst, src) for dst, src in rnd], q)  # parent -> child
         moved = jax.lax.ppermute(acc, axis_name, perm)
         is_child = jnp.zeros((), dtype=bool)
         for _dst, src in rnd:

@@ -10,6 +10,13 @@ inconsistent-read + communication delay), so Theorems 1–6 cover it.
 The state is a ring buffer of the last (τ+1) full gradients carried through
 the training loop — cheap for the linear-model reference and the pattern we
 reuse in the framework optimizer (`repro.optim.delayed`).
+
+``delayed_sgd_epoch`` below is the sequential oracle; the production path
+is ``run_delayed_fused``, which realizes the identical delay schedule on
+the fused federated step engine (``core.engine``) — per-party ring buffers
+carried through the party-mapped scan, one dispatch per epoch, secure
+aggregation included.  Both trajectories are admissible under the same τ,
+and tests pin them together.
 """
 from __future__ import annotations
 
@@ -68,10 +75,41 @@ def delayed_sgd_epoch(problem: Problem, state: DelayedState, x, y, lr,
     return st
 
 
-def party_delays(layout: PartyLayout, d: int, tau: int,
-                 seed: int = 0) -> np.ndarray:
-    """A per-party delay in [0, τ], mapped to coordinates."""
+def party_delay_values(layout: PartyLayout, tau: int,
+                       seed: int = 0) -> np.ndarray:
+    """One delay in [0, τ] per party (the deterministic τ₁/τ₂ schedule)."""
     rng = np.random.default_rng(seed)
     per_party = rng.integers(0, tau + 1, size=layout.q)
     per_party[0] = 0  # the dominator's own block is fresh (Alg. 2 line 6-7)
+    return per_party.astype(np.int32)
+
+
+def party_delays(layout: PartyLayout, d: int, tau: int,
+                 seed: int = 0) -> np.ndarray:
+    """The per-party delays mapped to coordinates (reference-path form)."""
+    per_party = party_delay_values(layout, tau, seed)
     return per_party[layout.party_of_coord(d)].astype(np.int32)
+
+
+def run_delayed_fused(problem: Problem, x, y, layout: PartyLayout,
+                      tau: int, epochs: int, lr: float, batch: int,
+                      seed: int = 0, engine_config=None) -> np.ndarray:
+    """Bounded-delay VFB²-SGD on the fused engine: per-party gradient ring
+    buffers ride the party-mapped scan, so a whole stale-gradient epoch is
+    one compiled dispatch.  Returns the final (d,) iterate."""
+    from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
+
+    n, d = np.asarray(x).shape
+    cfg = engine_config if engine_config is not None else EngineConfig()
+    eng = FusedEngine(problem, x, y, layout, cfg)
+    delays_q = jnp.asarray(party_delay_values(layout, tau, seed))
+    wq = eng.pack_w(np.zeros(d, np.float32))
+    bufq = jnp.zeros((layout.q, tau + 1, eng.dp), jnp.float32)
+    t0 = jnp.zeros((), jnp.int32)
+    steps = max(1, n // batch)
+    key = jax.random.PRNGKey(seed)
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        wq, bufq, t0 = eng.delayed_sgd_epoch(wq, bufq, t0, delays_q, lr,
+                                             sub, batch, steps, tau)
+    return eng.unpack_w(wq)

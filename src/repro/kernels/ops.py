@@ -4,6 +4,13 @@
 executes in Python for correctness validation; on a real TPU backend pass
 ``interpret=False`` (or rely on the default platform detection) to compile
 through Mosaic.
+
+``vfl_grad`` is the batched rank-k fused forward/backward VFL kernel; both
+of its reductions (z across feature tiles, g across batch tiles) complete
+*inside* the kernel, so these wrappers perform no out-of-kernel math.  The
+canonical consumer is the fused federated step engine
+(`repro.core.engine`), which runs whole VFB² epochs as one compiled
+program and routes its X-block contractions here on TPU backends.
 """
 from __future__ import annotations
 
@@ -44,14 +51,20 @@ def selective_scan(xa, dt, b_ssm, c_ssm, a_log, d_skip, *, chunk=128,
 
 
 @functools.partial(jax.jit, static_argnames=("lam", "block_b", "block_d",
-                                             "interpret"))
+                                             "interpret", "mode", "denom"))
 def vfl_grad(xb, w, theta, lam=0.0, *, block_b=128, block_d=128,
-             interpret=None):
+             interpret=None, mode="fused", denom=None):
+    """Batched rank-k fused VFL kernel: z = xb@w, g = xbᵀθ/denom + λw.
+
+    ``w``/``theta`` may carry a trailing M axis (M concurrent iterates /
+    ϑ vectors — multi-dominator or variance-reduced batching); non-tile
+    shapes are padded internally.  Both outputs arrive fully reduced from
+    the kernel.
+    """
     if interpret is None:
         interpret = _default_interpret()
-    z_partial, g = _vg.vfl_grad(xb, w, theta, lam, block_b=block_b,
-                                block_d=block_d, interpret=interpret)
-    return z_partial.sum(0), g
+    return _vg.vfl_grad(xb, w, theta, lam, block_b=block_b, block_d=block_d,
+                        interpret=interpret, mode=mode, denom=denom)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_k",

@@ -33,12 +33,14 @@ def selective_scan_ref(xa, dt, b_ssm, c_ssm, a_log, d_skip):
     return _ref(xa, dt, b_ssm, c_ssm, a_log, d_skip)
 
 
-def vfl_grad_ref(xb, w, theta, lam: float):
+def vfl_grad_ref(xb, w, theta, lam: float, denom=None):
     """Fused VFL forward partial + BUM backward (the paper's hot loop).
 
-    xb: (B, D) minibatch feature block; w: (D,); theta: (B,).
-    Returns (z (B,) partial products, g (D,) block gradient)."""
+    Rank-k oracle: xb (B, D); w (D,) or (D, M); theta (B,) or (B, M).
+    Returns (z = xb @ w, g = xbᵀθ/denom + λw) with the same rank as the
+    inputs; ``denom`` defaults to B."""
+    denom = xb.shape[0] if denom is None else denom
     z = xb.astype(jnp.float32) @ w.astype(jnp.float32)
     g = xb.astype(jnp.float32).T @ theta.astype(jnp.float32) \
-        / xb.shape[0] + lam * w.astype(jnp.float32)
+        / denom + lam * w.astype(jnp.float32)
     return z, g

@@ -1,17 +1,41 @@
-"""Pallas TPU fused VFL partial-product + BUM gradient kernel.
+"""Pallas TPU fused VFL partial-product + BUM gradient kernel (rank-k).
 
 The paper's per-iteration hot loop on a party is two passes over the same
 minibatch feature block: the *forward* partial products
 ``z_i = w_{G_ℓ}ᵀ(x_i)_{G_ℓ}`` (Algorithm 1 step 2) and — after ϑ returns —
 the *backward* rank-k update ``g = X_bᵀϑ/B + λ∇g(w)`` (Algorithm 3 step 3).
 On the paper's CPUs this is cache-line bound; the TPU adaptation fuses both
-passes so the X block is read from HBM once per iteration, tiled
-(B_blk × D_blk = 128×128) through VMEM with both MXU contractions done per
-tile.
+passes so the X block is read from HBM once per invocation, tiled through
+VMEM with both MXU contractions done per tile.
 
-Grid (nD, nB) — batch tiles minor-most (sequential) so the z accumulator
-scratch carries across batch tiles for a fixed feature tile; the g output
-tile is finalized on the last batch tile.
+Batched rank-k form: one invocation processes **M concurrent iterates /
+ϑ vectors** — the multi-dominator case of Algorithms 2/3 (m active parties
+each issue a ϑ), and the variance-reduced algorithms (SVRG evaluates the
+current iterate and the snapshot, M = 2) — in a *single* HBM pass over X:
+
+    z = X @ W        (B, M)   forward partial products, one column per iterate
+    g = XᵀΘ/B + λW   (D, M)   BUM gradients, one column per ϑ
+
+Both reductions complete **in-kernel**: z is accumulated across feature
+tiles in a full-minibatch VMEM scratch (so callers never re-sum partials on
+the host), g across batch tiles in a per-feature-tile scratch.  Inputs may
+be bf16; all accumulation is f32 in VMEM.
+
+Grid (nD, nB) — batch tiles minor-most (sequential) so the g accumulator
+carries across batch tiles for a fixed feature tile; the z accumulator is a
+full (B, M) scratch written through on every visit, so the last feature
+pass (di == nD−1) leaves the completed sum in HBM (the grid is sequential:
+last write wins).
+
+Shapes that do not divide the tile are zero-padded inside the wrapper and
+the outputs sliced back, so odd party widths (``PartyLayout.even`` with
+d % q != 0) work without caller-side ceremony.
+
+``mode`` selects which contraction is materialized:
+  * "fused"    — both (the async hot loop: ϑ from the previous round is
+                 applied while the next round's partials are produced);
+  * "forward"  — z only (pre-aggregation, ϑ not yet known);
+  * "backward" — g only (post-aggregation BUM application).
 """
 from __future__ import annotations
 
@@ -23,61 +47,127 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _vfl_kernel(x_ref, w_ref, theta_ref, z_ref, g_ref, g_acc, *,
-                lam: float, batch: int):
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _vfl_kernel(*refs, lam: float, denom: int, block_b: int, fwd: bool,
+                bwd: bool):
+    # Single-sided modes carry only their own operands/outputs (no HBM
+    # traffic for a dead side); ref order follows the wrapper's specs.
+    if fwd and bwd:
+        x_ref, w_ref, theta_ref, z_ref, g_ref, z_acc, g_acc = refs
+    elif fwd:
+        x_ref, w_ref, z_ref, z_acc = refs
+    else:
+        x_ref, w_ref, theta_ref, g_ref, g_acc = refs
+    di = pl.program_id(0)
     bi = pl.program_id(1)
     nb = pl.num_programs(1)
 
-    @pl.when(bi == 0)
-    def _init():
-        g_acc[...] = jnp.zeros_like(g_acc)
-
     x = x_ref[...].astype(jnp.float32)                    # (Bb, Db)
-    w = w_ref[...].astype(jnp.float32)                    # (Db,)
-    th = theta_ref[...].astype(jnp.float32)               # (Bb,)
+    w = w_ref[...].astype(jnp.float32)                    # (Db, M)
 
-    # forward partials for this (batch tile, feature tile): rank-1 MXU pass
-    z_ref[0] = (x @ w).astype(z_ref.dtype)                # (Bb,)
-    # backward accumulate: Xᵀϑ
-    g_acc[...] += x.T @ th
+    if fwd:
+        # forward partials for this (feature, batch) tile: rank-k MXU pass
+        zt = jnp.dot(x, w, preferred_element_type=jnp.float32)   # (Bb, M)
+        sl = pl.ds(bi * block_b, block_b)
 
-    @pl.when(bi == nb - 1)
-    def _finalize():
-        g_ref[...] = (g_acc[...] / batch + lam * w).astype(g_ref.dtype)
+        @pl.when(di == 0)
+        def _z_init():
+            z_acc[sl, :] = zt
+
+        @pl.when(di > 0)
+        def _z_accum():
+            z_acc[sl, :] += zt
+
+        # Written on every visit; the grid is sequential, so the final
+        # feature pass (di == nD-1) is the last writer and the HBM block
+        # holds the fully reduced z.  No out-of-kernel reduction remains.
+        z_ref[...] = z_acc[sl, :]
+
+    if bwd:
+        @pl.when(bi == 0)
+        def _g_init():
+            g_acc[...] = jnp.zeros_like(g_acc)
+
+        th = theta_ref[...].astype(jnp.float32)           # (Bb, M)
+        # backward accumulate: XᵀΘ, f32 in VMEM
+        g_acc[...] += jnp.dot(x.T, th, preferred_element_type=jnp.float32)
+
+        @pl.when(bi == nb - 1)
+        def _g_finalize():
+            g_ref[...] = (g_acc[...] / denom + lam * w).astype(g_ref.dtype)
 
 
 def vfl_grad(xb, w, theta, lam: float = 0.0, *, block_b: int = 128,
-             block_d: int = 128, interpret: bool = True):
-    """xb: (B, D); w: (D,); theta: (B,).
+             block_d: int = 128, interpret: bool = True, mode: str = "fused",
+             denom: int | None = None):
+    """xb: (B, D); w: (D,) or (D, M); theta: (B,), (B, M) or None.
 
-    Returns (z_partial (nD, B) per-feature-tile partials, g (D,)).
-    ``z_partial.sum(0)`` equals the reference z (the per-tile partials are
-    exactly the per-party partial products the protocol masks & aggregates).
+    Returns ``(z, g)`` with z = xb @ w fully reduced in-kernel (shape (B,)
+    or (B, M)) and g = xbᵀθ/denom + λw (shape (D,) or (D, M)).  ``denom``
+    defaults to B (the minibatch gradient 1/B scaling); SAGA's running
+    average passes n.  Rank-1 inputs get rank-1 outputs.
+
+    Single-sided modes return ``None`` for the inactive side and carry no
+    HBM traffic for it; ``theta=None`` is allowed (and ϑ-free) in
+    ``mode="forward"``.
     """
     b, d = xb.shape
-    block_b = min(block_b, b)
-    block_d = min(block_d, d)
-    assert b % block_b == 0 and d % block_d == 0
-    nb, nd = b // block_b, d // block_d
+    squeeze = (w.ndim == 1)
+    w2 = w[:, None] if w.ndim == 1 else w
+    m = w2.shape[1]
+    assert mode in ("fused", "forward", "backward"), mode
+    if theta is None:
+        assert mode == "forward", "theta required outside mode='forward'"
+        th2 = None
+    else:
+        th2 = theta[:, None] if theta.ndim == 1 else theta
+        assert th2.shape == (b, m), (th2.shape, (b, m))
+    denom = b if denom is None else int(denom)
 
-    kernel = functools.partial(_vfl_kernel, lam=lam, batch=b)
-    z_partial, g = pl.pallas_call(
+    # Pad to tile multiples (sublane 8 for B, lane 128 for D) instead of
+    # rejecting odd shapes; zero rows/cols contribute zero to both products.
+    block_b = min(block_b, _round_up(b, 8))
+    block_d = min(block_d, _round_up(d, 128))
+    bp, dp = _round_up(b, block_b), _round_up(d, block_d)
+    if bp != b or dp != d:
+        xb = jnp.pad(xb, ((0, bp - b), (0, dp - d)))
+        w2 = jnp.pad(w2, ((0, dp - d), (0, 0)))
+        if th2 is not None:
+            th2 = jnp.pad(th2, ((0, bp - b), (0, 0)))
+    nb, nd = bp // block_b, dp // block_d
+
+    fwd = mode in ("fused", "forward")
+    bwd = mode in ("fused", "backward")
+    kernel = functools.partial(_vfl_kernel, lam=lam, denom=denom,
+                               block_b=block_b, fwd=fwd, bwd=bwd)
+    # Mode-specific specs: a single-sided call neither streams the unused
+    # operand into VMEM nor DMAs a dead output back to HBM.
+    th_spec = pl.BlockSpec((block_b, m), lambda di, bi: (bi, 0))
+    z_spec = (pl.BlockSpec((block_b, m), lambda di, bi: (bi, 0)),
+              jax.ShapeDtypeStruct((bp, m), jnp.float32),
+              pltpu.VMEM((bp, m), jnp.float32))
+    g_spec = (pl.BlockSpec((block_d, m), lambda di, bi: (di, 0)),
+              jax.ShapeDtypeStruct((dp, m), jnp.float32),
+              pltpu.VMEM((block_d, m), jnp.float32))
+    sides = ([z_spec] if fwd else []) + ([g_spec] if bwd else [])
+    outs = pl.pallas_call(
         kernel,
         grid=(nd, nb),
         in_specs=[
             pl.BlockSpec((block_b, block_d), lambda di, bi: (bi, di)),
-            pl.BlockSpec((block_d,), lambda di, bi: (di,)),
-            pl.BlockSpec((block_b,), lambda di, bi: (bi,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, block_b), lambda di, bi: (di, bi)),
-            pl.BlockSpec((block_d,), lambda di, bi: (di,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nd, b), jnp.float32),
-            jax.ShapeDtypeStruct((d,), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((block_d,), jnp.float32)],
+            pl.BlockSpec((block_d, m), lambda di, bi: (di, 0)),
+        ] + ([th_spec] if bwd else []),
+        out_specs=[s[0] for s in sides],
+        out_shape=[s[1] for s in sides],
+        scratch_shapes=[s[2] for s in sides],
         interpret=interpret,
-    )(xb, w, theta)
-    return z_partial, g
+    )(xb, w2, *((th2,) if bwd else ()))
+    z = outs[0][:b] if fwd else None
+    g = outs[-1][:d] if bwd else None
+    if squeeze:
+        z = None if z is None else z[:, 0]
+        g = None if g is None else g[:, 0]
+    return z, g

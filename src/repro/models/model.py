@@ -21,7 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.sharding.api import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig

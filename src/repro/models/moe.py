@@ -23,7 +23,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.sharding.api import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import normal_init, silu

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.sharding.api import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.api import Runtime
@@ -64,14 +64,16 @@ def vocab_parallel_loss(rt: Runtime, table: jax.Array, h: jax.Array,
         def body(acc, args):
             return acc + chunk_loss(args), None
 
+        # rank-1 carry: scalar scan carries inside shard_map(check_rep=False)
+        # trip a _SpecError in jax 0.4.x's rewrite machinery
         tot, _ = jax.lax.scan(
-            body, jnp.zeros((), jnp.float32),
+            body, jnp.zeros((1,), jnp.float32),
             (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(yc, 1, 0)))
         # mean over *global* tokens: psum over batch axes
         for ax in rt.batch_axes:
             if bs is not None:
                 tot = jax.lax.psum(tot, ax)
-        return tot[None]
+        return tot
 
     fn = shard_map(
         island, mesh=rt.mesh,

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -110,18 +110,95 @@ def test_vfl_grad_property(b, d, lam, seed):
                                rtol=1e-4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,d,m", [
+    (128, 256, 1),
+    (256, 512, 2),      # SVRG: iterate + snapshot in one pass
+    (128, 384, 3),      # multi-dominator (m active parties)
+    (100, 200, 2),      # non-tile-divisible: pad path
+    (32, 7, 1),         # tiny odd party block (PartyLayout.even remainder)
+    (96, 130, 4),
+])
+def test_vfl_grad_rank_k_sweep(dtype, b, d, m):
+    """Batched rank-k kernel vs oracle across dtypes/shapes; z must arrive
+    fully reduced from the kernel (no host-side partial sum exists)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    xb = _rand(ks[0], (b, d), dtype)
+    w = _rand(ks[1], (d, m), dtype)
+    th = _rand(ks[2], (b, m), dtype)
+    z, g = ops.vfl_grad(xb, w, th, lam=0.01)
+    zr, gr = ref.vfl_grad_ref(xb, w, th, 0.01)
+    assert z.shape == (b, m) and g.shape == (d, m)
+    assert z.dtype == jnp.float32 and g.dtype == jnp.float32  # f32 accum
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("mode", ["forward", "backward"])
+def test_vfl_grad_modes(mode):
+    """Single-sided modes produce the same active output as fused, and
+    the inactive side is absent (no dead HBM traffic), not zero-filled."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    xb = _rand(ks[0], (64, 96), jnp.float32)
+    w = _rand(ks[1], (96, 2), jnp.float32)
+    th = _rand(ks[2], (64, 2), jnp.float32)
+    zf, gf = ops.vfl_grad(xb, w, th, lam=0.02)
+    z, g = ops.vfl_grad(xb, w, th, lam=0.02, mode=mode)
+    if mode == "forward":
+        np.testing.assert_allclose(np.asarray(z), np.asarray(zf), atol=1e-6)
+        assert g is None
+        # theta is not an operand of the forward pass
+        z2, _ = ops.vfl_grad(xb, w, None, lam=0.02, mode="forward")
+        np.testing.assert_allclose(np.asarray(z2), np.asarray(zf),
+                                   atol=1e-6)
+    else:
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gf), atol=1e-6)
+        assert z is None
+
+
+def test_vfl_grad_denom_override():
+    """SAGA's running average divides by n, not the minibatch size."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    xb = _rand(ks[0], (64, 96), jnp.float32)
+    w = jnp.zeros((96,), jnp.float32)
+    th = _rand(ks[2], (64,), jnp.float32)
+    _, g = ops.vfl_grad(xb, w, th, lam=0.0, mode="backward", denom=1000)
+    _, gr = ref.vfl_grad_ref(xb, w, th, 0.0, denom=1000)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-6)
+
+
+def test_vfl_grad_block_shape_invariance():
+    """Tiling is a pure performance knob: output independent of blocks."""
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    xb = _rand(ks[0], (192, 320), jnp.float32)
+    w = _rand(ks[1], (320, 2), jnp.float32)
+    th = _rand(ks[2], (192, 2), jnp.float32)
+    outs = [ops.vfl_grad(xb, w, th, lam=0.01, block_b=bb, block_d=bd)
+            for bb, bd in [(64, 64), (128, 128), (192, 320)]]
+    for z, g in outs[1:]:
+        np.testing.assert_allclose(np.asarray(z), np.asarray(outs[0][0]),
+                                   atol=1e-4, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(outs[0][1]),
+                                   atol=1e-5, rtol=1e-5)
+
+
 def test_vfl_grad_partials_are_party_blocks():
-    """The per-feature-tile z partials ARE the per-party partial products
-    (what Algorithm 1 masks): summing any block subset matches a party
-    holding those columns."""
+    """Per-party kernel invocations on column blocks produce exactly the
+    partial products Algorithm 1 masks and aggregates: their sum equals the
+    pooled-data kernel's (fully in-kernel-reduced) z."""
     ks = jax.random.split(jax.random.PRNGKey(3), 3)
     xb = _rand(ks[0], (128, 256), jnp.float32)
     w = _rand(ks[1], (256,), jnp.float32)
     th = _rand(ks[2], (128,), jnp.float32)
-    from repro.kernels.vfl_grad import vfl_grad as raw
-    z_partial, _ = raw(xb, w, th, 0.0, block_d=128)
-    party0 = xb[:, :128] @ w[:128]
-    np.testing.assert_allclose(np.asarray(z_partial[0]), np.asarray(party0),
+    z_full, _ = ops.vfl_grad(xb, w, th, lam=0.0)
+    z0, _ = ops.vfl_grad(xb[:, :100], w[:100], th, lam=0.0)   # odd widths
+    z1, _ = ops.vfl_grad(xb[:, 100:], w[100:], th, lam=0.0)
+    np.testing.assert_allclose(np.asarray(z0), np.asarray(xb[:, :100] @ w[:100]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(z0 + z1), np.asarray(z_full),
                                atol=1e-4, rtol=1e-4)
 
 

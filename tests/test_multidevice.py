@@ -14,8 +14,8 @@ import pytest
 
 SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import PartitionSpec as P, AxisType
-    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.api import shard_map
     from repro.core.bum import secure_vfl_reduce
     from repro.models import moe as moe_lib
     from repro.models import model as model_lib
@@ -23,8 +23,7 @@ SCRIPT = textwrap.dedent("""
     from repro.vfl.heads import vocab_parallel_loss
     from repro.vfl.embed import secure_vocab_embed
 
-    mesh = jax.make_mesh((1, 2, 4), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = jax.make_mesh((1, 2, 4), ("pod", "data", "model"))
     rt = Runtime(mesh=mesh, batch_axes=("data",), attn_chunk=16,
                  loss_chunk=8)
     key = jax.random.PRNGKey(0)
@@ -110,6 +109,28 @@ SCRIPT = textwrap.dedent("""
     agree = (full_preds == dec_preds).mean()
     assert agree >= 0.95, agree
     print("sharded decode ok")
+
+    # --- fused engine: shard_map party binding == sequential reference ---
+    from repro.core import algorithms as alg
+    from repro.core.engine import EngineConfig, FusedEngine
+    from repro.core.losses import logistic_l2
+    rngd = np.random.default_rng(0)
+    xd = rngd.standard_normal((256, 26)).astype(np.float32)
+    yd = np.sign(rngd.standard_normal(256)).astype(np.float32)
+    layout = alg.PartyLayout.even(26, 4, 2)   # q=4 == model axis, odd widths
+    prob = logistic_l2()
+    kk = jax.random.PRNGKey(0)
+    maskd = jnp.asarray(layout.update_mask(26, False))
+    w_ref = alg.sgd_epoch(prob, jnp.zeros(26), jnp.asarray(xd),
+                          jnp.asarray(yd), 0.3, maskd, kk, 32, 8)
+    eng = FusedEngine(prob, xd, yd, layout,
+                      EngineConfig(secure="two_tree"), mesh=mesh)
+    assert eng._use_shard_map
+    w_eng = eng.unpack_w(eng.sgd_epoch(eng.pack_w(np.zeros(26)), 0.3, kk,
+                                       32, 8))
+    assert np.allclose(w_eng, np.asarray(w_ref), atol=1e-5), \
+        np.abs(w_eng - np.asarray(w_ref)).max()
+    print("fused engine shard_map ok")
     print("ALL-MULTIDEVICE-OK")
 """)
 

@@ -13,7 +13,7 @@ These are *executable* versions of the paper's security arguments:
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import trees
 from repro.core.secure_agg import secure_aggregate_host

@@ -1,7 +1,7 @@
 """Tree-structured communication + Definition 4 (significant difference)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import trees
 
