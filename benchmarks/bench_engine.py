@@ -11,8 +11,15 @@ Also audits the fused epoch's jaxpr: counts host-transfer primitives
 (callbacks/infeed/outfeed/device_put) — the fused program must contain
 **zero** — and reports dispatches/epoch (1 vs ``steps``).
 
-The committed baseline lives in ``benchmarks/BENCH_engine.json``; fresh
-runs are written to ``results/bench/engine.json`` for trajectory tracking.
+The ``multi_dominator`` suite (``run_multi_dominator``) additionally pits
+one fused M = m multi-dominator epoch against m sequential
+single-dominator epochs — the same number of BUM dominator rounds, one
+dispatch instead of m.
+
+The committed baseline lives in ``benchmarks/BENCH_engine.json``
+(``multi_dominator`` key for the second suite); fresh runs are written to
+``results/bench/engine.json`` / ``engine_multi.json`` for trajectory
+tracking.
 """
 from __future__ import annotations
 
@@ -154,4 +161,87 @@ def run(quick: bool = False):
         "dispatches_per_epoch": {"fused": 1, "per_minibatch": steps},
     }
     save("engine", rec)
+    return rec
+
+
+def run_multi_dominator(quick: bool = False):
+    """Fused multi-dominator epochs vs m sequential single-dominator epochs.
+
+    Both sides perform the same number of dominator rounds (m·steps BUM
+    update sets).  The fused side runs ONE M = m dispatch per epoch — every
+    step gathers the m dominators' concatenated minibatch, aggregates all m
+    partial-product sets in one collective, and applies the m BUM gradients
+    from one rank-k contraction; the baseline dispatches m single-dominator
+    epochs back to back (the pre-tentpole way to serve m active parties).
+    The committed CPU baseline lives under the ``multi_dominator`` key of
+    ``benchmarks/BENCH_engine.json``.
+    """
+    n, d, q, m = (1024, 128, 8, 3) if quick else (4096, 256, 8, 3)
+    batch = 64
+    steps = n // batch
+    reps = 3 if quick else 5
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = np.sign(rng.standard_normal(n)).astype(np.float32)
+    prob = losses.logistic_l2()
+    layout = algorithms.PartyLayout.even(d, q, m)
+    key = jax.random.PRNGKey(0)
+
+    eng = FusedEngine(prob, x, y, layout, EngineConfig(secure="off"))
+    wq0 = eng.pack_w(np.zeros(d))
+    rounds = m * steps          # dominator rounds per comparison unit
+
+    def fused_multi_epoch():
+        return jax.block_until_ready(
+            eng.multi_sgd_epoch(wq0, 0.3, key, batch, steps))
+
+    dt_f = best_of(fused_multi_epoch, repeat=reps)
+    f_rps = rounds / dt_f
+    emit("engine/multi_dominator_fused", dt_f * 1e6,
+         f"dominator_rounds_per_sec={f_rps:.0f} m={m} dispatches=1")
+
+    def m_sequential_epochs():
+        out = None
+        for j in range(m):
+            out = eng.sgd_epoch(wq0, 0.3, jax.random.fold_in(key, j),
+                                batch, steps)
+        return jax.block_until_ready(out)
+
+    dt_s = best_of(m_sequential_epochs, repeat=reps)
+    s_rps = rounds / dt_s
+    speedup = s_rps and f_rps / s_rps
+    emit("engine/multi_dominator_m_sequential", dt_s * 1e6,
+         f"dominator_rounds_per_sec={s_rps:.0f} m={m} dispatches={m} "
+         f"fused_speedup={speedup:.2f}x")
+    # Hard perf gate only on the full tier: the quick tier runs on noisy
+    # shared CI runners where a co-tenant can flip a wall-clock comparison;
+    # there the speedup is reported (and tracked via the committed
+    # baseline) rather than asserted.
+    if not quick:
+        assert dt_f < dt_s, (
+            f"fused M={m} dispatch ({dt_f:.4f}s) must beat {m} sequential "
+            f"single-dominator epochs ({dt_s:.4f}s)")
+
+    # secure multi-dominator epoch (all m partial sets, one masked psum)
+    enc = FusedEngine(prob, x, y, layout, EngineConfig(secure="two_tree"))
+
+    def secure_multi_epoch():
+        return jax.block_until_ready(
+            enc.multi_sgd_epoch(wq0, 0.3, key, batch, steps))
+
+    dt_sec = best_of(secure_multi_epoch, repeat=reps)
+    emit("engine/multi_dominator_fused_secure", dt_sec * 1e6,
+         f"dominator_rounds_per_sec={rounds / dt_sec:.0f}")
+
+    rec = {
+        "config": {"n": n, "d": d, "q": q, "m": m, "batch": batch,
+                   "steps": steps, "backend": jax.default_backend()},
+        "fused_dominator_rounds_per_sec": f_rps,
+        "m_sequential_dominator_rounds_per_sec": s_rps,
+        "fused_secure_dominator_rounds_per_sec": rounds / dt_sec,
+        "speedup_fused_over_m_sequential": speedup,
+        "dispatches_per_epoch": {"fused_multi": 1, "m_sequential": m},
+    }
+    save("engine_multi", rec)
     return rec

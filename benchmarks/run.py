@@ -42,6 +42,8 @@ def main() -> None:
         "secure_agg": bench_secure_agg.run,
         "kernels": bench_kernels.run,
         "engine": lambda: bench_engine.run(quick=args.quick),
+        "multi_dominator": lambda: bench_engine.run_multi_dominator(
+            quick=args.quick),
         "roofline": bench_roofline.run,
     }
     only = set(args.only.split(",")) if args.only else None

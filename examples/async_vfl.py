@@ -1,10 +1,17 @@
-"""BAPA in action: bilevel asynchronous VFL vs its synchronous counterpart.
+"""BAPA in action: bilevel asynchronous VFL vs its synchronous counterpart,
+plus the fused multi-dominator engine serving the same m-active-party
+regime as one compiled dispatch per epoch.
 
 Runs the thread-based simulation (the paper's own experimental setup) with
-a 45% straggler party and prints loss-vs-walltime traces for both systems.
+a 45% straggler party and prints loss-vs-walltime traces for both systems;
+then runs the deterministic counterpart of the 3-dominator regime on the
+fused engine (``train(..., multi_dominator=True, engine="fused")``) — all
+three dominators' minibatches ride one rank-k kernel pass per step.
 
     PYTHONPATH=src python examples/async_vfl.py
 """
+import time
+
 from repro.core import algorithms, async_engine, losses
 from repro.data.synthetic import classification_dataset
 
@@ -31,6 +38,17 @@ def main():
         pts = res.loss_trace[:: max(1, len(res.loss_trace) // 6)]
         print(f"  {name}: " + "  ".join(f"({t:.2f}s,{e:.1f}ep,{o:.4f})"
                                         for t, e, o in pts))
+
+    print("\nfused multi-dominator engine (same 3-active-party regime, "
+          "one dispatch per epoch)...")
+    t0 = time.perf_counter()
+    res = algorithms.train(prob, ds.x_train, ds.y_train, layout,
+                           algo="sgd", epochs=5, lr=0.2, batch=16,
+                           engine="fused", multi_dominator=True)
+    dt = time.perf_counter() - t0
+    print(f"  5 epochs in {dt:.2f}s (incl. compile) -> objective "
+          f"{res.history[-1]['objective']:.4f} vs async thread sim "
+          f"{a.loss_trace[-1][2]:.4f}")
 
 
 if __name__ == "__main__":

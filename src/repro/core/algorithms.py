@@ -27,6 +27,12 @@ federated step engine (``core.engine``), which runs the same epochs as one
 party-mapped compiled program per epoch (secure aggregation included) and
 is reachable here via ``train(..., engine="fused")``.  Tests pin the two
 paths together to float tolerance.
+
+``multi_*_epoch`` are the **multi-dominator** oracles: all m active
+parties concurrently launch backward updates each round (independent
+minibatches, ϑ_j all computed from the same read of the iterate, every
+party applying the m BUM updates) — the paper's m-dominator regime,
+reachable via ``train(..., multi_dominator=True)`` on both engines.
 """
 from __future__ import annotations
 
@@ -163,6 +169,105 @@ def saga_epoch(problem: Problem, w, theta_tab, avg, x, y, lr, mask, key,
 
 
 # ---------------------------------------------------------------------------
+# multi-dominator oracle epochs (m active parties concurrently launching
+# backward updates)
+# ---------------------------------------------------------------------------
+#
+# The paper's framework has every active party act as a dominator: at each
+# round the m dominators *concurrently* draw independent minibatches,
+# compute their ϑ_j from the same (inconsistently read) iterate, and every
+# party applies all m BUM updates to its block.  The deterministic
+# realization used as the oracle here: all m reads happen at w_t, so the
+# round's update is the *sum* of the m BUM gradients,
+#
+#     w_{t+1} = w_t − η Σ_{j<m} [ X_{b_j}ᵀ ϑ_j / B + λ∇g(w_t) ],
+#
+# each dominator's data term normalized by its own minibatch size B (the
+# regularizer is applied once per concurrent update, hence the m·λ∇g term
+# in the collapsed form).  The fused engine (`core.engine`) reproduces the
+# same sequence with one rank-k kernel pass per round (the m ϑ vectors ride
+# the kernel's M axis) and is pinned against these epochs in tests.
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps",
+                                             "m"))
+def multi_sgd_epoch(problem: Problem, w, x, y, lr, mask, key, batch: int,
+                    steps: int, m: int):
+    """VFB²-SGD with m concurrent dominators per round (Alg. 2/3, m > 1)."""
+    idx = _batch_indices(key, x.shape[0], m * batch, steps)
+
+    def body(w, ibf):
+        ib = ibf.reshape(m, batch)
+
+        def dom_grad(ibj):           # dominator j's BUM gradient at w_t
+            xb, yb = x[ibj], y[ibj]
+            theta = problem.theta(xb @ w, yb)
+            return _grad_from_theta(problem, xb, w, theta)
+
+        g = jax.vmap(dom_grad)(ib).sum(axis=0)   # m concurrent updates
+        return w - lr * mask * g, None
+
+    w, _ = jax.lax.scan(body, w, idx)
+    return w
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps",
+                                             "m"))
+def multi_svrg_epoch(problem: Problem, w, w_snap, mu, x, y, lr, mask, key,
+                     batch: int, steps: int, m: int):
+    """Multi-dominator VFB²-SVRG inner loop: each dominator evaluates both
+    the current iterate and the snapshot on its own minibatch."""
+    idx = _batch_indices(key, x.shape[0], m * batch, steps)
+
+    def body(w, ibf):
+        ib = ibf.reshape(m, batch)
+
+        def dom_v(ibj):
+            xb, yb = x[ibj], y[ibj]
+            th1 = problem.theta(xb @ w, yb)
+            th0 = problem.theta(xb @ w_snap, yb)
+            g1 = _grad_from_theta(problem, xb, w, th1)
+            g0 = _grad_from_theta(problem, xb, w_snap, th0)
+            return g1 - g0 + mu
+
+        v = jax.vmap(dom_v)(ib).sum(axis=0)
+        return w - lr * mask * v, None
+
+    w, _ = jax.lax.scan(body, w, idx)
+    return w
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps",
+                                             "m"))
+def multi_saga_epoch(problem: Problem, w, theta_tab, avg, x, y, lr, mask,
+                     key, batch: int, steps: int, m: int):
+    """Multi-dominator VFB²-SAGA: all m dominators read (w_t, tab_t, avg_t);
+    the ϑ̃ table takes all m writes per round (last write wins on duplicate
+    sample indices, matching the async execution and the fused engine)."""
+    n = x.shape[0]
+    idx = _batch_indices(key, n, m * batch, steps)
+
+    def body(carry, ibf):
+        w, tab, avg = carry
+        ib = ibf.reshape(m, batch)
+
+        def dom(ibj):
+            xb, yb = x[ibj], y[ibj]
+            th_new = problem.theta(xb @ w, yb)
+            return xb.T @ (th_new - tab[ibj]), th_new
+
+        raws, th_news = jax.vmap(dom)(ib)        # (m, d), (m, batch)
+        v = raws.sum(axis=0) / batch + m * avg \
+            + m * problem.lam * problem.reg_grad(w)
+        w = w - lr * mask * v
+        avg = avg + raws.sum(axis=0) / n
+        tab = tab.at[ibf].set(th_news.reshape(-1))
+        return (w, tab, avg), None
+
+    (w, theta_tab, avg), _ = jax.lax.scan(body, (w, theta_tab, avg), idx)
+    return w, theta_tab, avg
+
+
+# ---------------------------------------------------------------------------
 # top-level trainers
 # ---------------------------------------------------------------------------
 
@@ -193,11 +298,14 @@ def train(
     w0: Optional[np.ndarray] = None,
     engine: str = "reference",  # "fused" => one compiled program per epoch
     engine_config=None,         # core.engine.EngineConfig when engine="fused"
+    multi_dominator: bool = False,  # all m active parties update per round
 ) -> TrainResult:
     n, d = x.shape
+    m = layout.m
     if engine == "fused":
         return _train_fused(problem, x, y, layout, algo, epochs, lr, batch,
-                            seed, active_only, w0, engine_config)
+                            seed, active_only, w0, engine_config,
+                            multi_dominator)
     if engine != "reference":
         raise ValueError(f"unknown engine {engine}")
     x = jnp.asarray(x, jnp.float32)
@@ -216,15 +324,29 @@ def train(
     for ep in range(epochs):
         key, sub = jax.random.split(key)
         if algo == "sgd":
-            w = sgd_epoch(problem, w, x, y, lr, mask, sub, batch, steps)
+            if multi_dominator:
+                w = multi_sgd_epoch(problem, w, x, y, lr, mask, sub, batch,
+                                    steps, m)
+            else:
+                w = sgd_epoch(problem, w, x, y, lr, mask, sub, batch, steps)
         elif algo == "svrg":
             w_snap = w
             mu = full_gradient(problem, w_snap, x, y)
-            w = svrg_epoch(problem, w, w_snap, mu, x, y, lr, mask, sub,
-                           batch, steps)
+            if multi_dominator:
+                w = multi_svrg_epoch(problem, w, w_snap, mu, x, y, lr, mask,
+                                     sub, batch, steps, m)
+            else:
+                w = svrg_epoch(problem, w, w_snap, mu, x, y, lr, mask, sub,
+                               batch, steps)
         elif algo == "saga":
-            w, theta_tab, avg = saga_epoch(problem, w, theta_tab, avg, x, y,
-                                           lr, mask, sub, batch, steps)
+            if multi_dominator:
+                w, theta_tab, avg = multi_saga_epoch(
+                    problem, w, theta_tab, avg, x, y, lr, mask, sub, batch,
+                    steps, m)
+            else:
+                w, theta_tab, avg = saga_epoch(problem, w, theta_tab, avg,
+                                               x, y, lr, mask, sub, batch,
+                                               steps)
         else:
             raise ValueError(f"unknown algo {algo}")
         hist.append({"epoch": ep + 1, "objective": _eval(problem, w, x, y),
@@ -233,9 +355,12 @@ def train(
 
 
 def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
-                 active_only, w0, engine_config) -> TrainResult:
+                 active_only, w0, engine_config,
+                 multi_dominator=False) -> TrainResult:
     """Hot-path trainer: every epoch is ONE device dispatch (secure
-    aggregation, ϑ, and BUM updates all inside the compiled program)."""
+    aggregation, ϑ, and BUM updates all inside the compiled program).
+    ``multi_dominator=True`` routes through the engine's m-active-party
+    epochs (one rank-k kernel pass carries all m dominators' ϑ vectors)."""
     from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
 
     n, d = x.shape
@@ -253,14 +378,24 @@ def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
     for ep in range(epochs):
         key, sub = jax.random.split(key)
         if algo == "sgd":
-            wq = eng.sgd_epoch(wq, lr, sub, batch, steps)
+            wq = (eng.multi_sgd_epoch(wq, lr, sub, batch, steps)
+                  if multi_dominator
+                  else eng.sgd_epoch(wq, lr, sub, batch, steps))
         elif algo == "svrg":
             wq_snap = wq
             muq = eng.full_gradient(wq_snap, sub)
-            wq = eng.svrg_epoch(wq, wq_snap, muq, lr, sub, batch, steps)
+            wq = (eng.multi_svrg_epoch(wq, wq_snap, muq, lr, sub, batch,
+                                       steps)
+                  if multi_dominator
+                  else eng.svrg_epoch(wq, wq_snap, muq, lr, sub, batch,
+                                      steps))
         elif algo == "saga":
-            wq, tabq, avgq = eng.saga_epoch(wq, tabq, avgq, lr, sub, batch,
-                                            steps)
+            if multi_dominator:
+                wq, tabq, avgq = eng.multi_saga_epoch(wq, tabq, avgq, lr,
+                                                      sub, batch, steps)
+            else:
+                wq, tabq, avgq = eng.saga_epoch(wq, tabq, avgq, lr, sub,
+                                                batch, steps)
         else:
             raise ValueError(f"unknown algo {algo}")
         hist.append({"epoch": ep + 1, "objective": eng.objective(wq),

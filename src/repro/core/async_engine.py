@@ -20,11 +20,16 @@ against.  Per-party speed factors simulate unbalanced resources.
 
 Role in the codebase: this thread simulation is the **wall-clock fidelity
 reference** — it exists to reproduce the paper's timing claims (real races,
-inconsistent reads, stragglers), not to be fast.  The performance hot path
-is the fused federated step engine (``core.engine``), which runs whole
-VFB² epochs as a single compiled program; its bounded-delay mode
-(`core.staleness.run_delayed_fused`) realizes the same asynchronous iterate
-sequences deterministically on device.
+inconsistent reads, stragglers), not to be fast.  In particular, the m
+dominator threads here are the live counterpart of the engine's
+**multi-dominator** fused epochs (``core.engine.multi_*_epoch``): what the
+threads do with real concurrency (m active parties drawing independent
+minibatches and pushing m ϑ streams at every party), the engine replays
+deterministically as one compiled program per epoch, and
+`core.staleness.run_delayed_multi_fused` adds the bounded per-(party,
+dominator) delays that make the thread timeline admissible under
+Theorems 1–6.  The performance hot path is always the fused engine; this
+module is for timing claims only.
 """
 from __future__ import annotations
 

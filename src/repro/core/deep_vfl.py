@@ -39,14 +39,16 @@ class DeepVFLParams:
 
 def init_deep_vfl(key, layout: PartyLayout, d: int, hidden: int = 32,
                   d_rep: int = 16) -> DeepVFLParams:
-    ks = jax.random.split(key, 3 * layout.q + 1)
+    # two keys per party (w1, w2; b1 is zero-init) + one for the head —
+    # the split budget matches actual consumption exactly
+    ks = jax.random.split(key, 2 * layout.q + 1)
     enc_w1, enc_b1, enc_w2 = [], [], []
     for p, (lo, hi) in enumerate(layout.bounds):
         d_p = hi - lo
-        enc_w1.append(jax.random.normal(ks[3 * p], (d_p, hidden))
+        enc_w1.append(jax.random.normal(ks[2 * p], (d_p, hidden))
                       * (2.0 / np.sqrt(d_p)))
         enc_b1.append(jnp.zeros((hidden,)))
-        enc_w2.append(jax.random.normal(ks[3 * p + 1], (hidden, d_rep))
+        enc_w2.append(jax.random.normal(ks[2 * p + 1], (hidden, d_rep))
                       / np.sqrt(hidden))
     head = jax.random.normal(ks[-1], (d_rep,)) / np.sqrt(d_rep)
     return DeepVFLParams(enc_w1, enc_b1, enc_w2, head)
@@ -101,7 +103,7 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
     blocks = [xj[:, lo:hi] for lo, hi in layout.bounds]
 
     @jax.jit
-    def step(params_tuple, ib, _key):
+    def step(params_tuple, ib):
         enc_w1, enc_b1, enc_w2, head = params_tuple
         xb = [b[ib] for b in blocks]
         yb = yj[ib]
@@ -143,7 +145,7 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
         key, sub = jax.random.split(key)
         idx = jax.random.randint(sub, (steps, batch), 0, n)
         for i in range(steps):
-            pt = step(pt, idx[i], sub)
+            pt = step(pt, idx[i])
         params = DeepVFLParams(list(pt[0]), list(pt[1]), list(pt[2]), pt[3])
         _, logits = fused_forward(params, blocks)
         obj = float(jnp.mean(problem.loss(logits, yj)))

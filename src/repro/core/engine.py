@@ -33,6 +33,22 @@ the repo: ``secure_psum`` (two-tree masks, Algorithm 1), ``secure_psum_ring``
 the losslessness oracle).  Labels are replicated across parties here — the
 SPMD stand-in for the dominator broadcasting ϑ, numerically identical.
 
+Multi-dominator epochs
+----------------------
+The paper's framework has all m active parties act as dominators
+*concurrently*.  The ``multi_*_epoch`` methods realize that regime on the
+fused path: each step, the m dominators draw independent minibatches, one
+forward pass over the concatenated (m·B, dp) block produces every
+dominator's partial products, the m partial-product sets are
+masked-secure-aggregated together, and the m BUM gradients come back as
+the columns of a single rank-k contraction — dominator j's ϑ occupies
+column j of a block-diagonal Θ, so ``XᵀΘ`` (the kernel's M axis) is
+exactly the per-dominator update set, applied summed (all m reads happen
+at the same iterate; see ``core.algorithms.multi_sgd_epoch`` for the
+update-sequence semantics and the oracle the fused path is pinned
+against).  The bounded-delay variant keeps per-(party, dominator) ring
+buffers so each dominator's column ages under its own delay schedule.
+
 Vertical partitioning packs party blocks to a uniform padded width
 (``PartyLayout.even`` with d % q != 0 works); the pad coordinates are
 masked out of every update.
@@ -106,6 +122,15 @@ def unpack_vec(vq, layout: PartyLayout) -> np.ndarray:
     vq = np.asarray(vq)
     return np.concatenate([vq[p, : hi - lo]
                            for p, (lo, hi) in enumerate(layout.bounds)])
+
+
+def dominator_onehot(m: int, batch: int) -> jax.Array:
+    """(m·B, m) selector: row r of the concatenated minibatch block belongs
+    to dominator r // B.  ``ϑ[:, None] * dominator_onehot(m, B)`` is the
+    block-diagonal Θ whose columns are the m dominators' ϑ vectors — the
+    rank-k kernel's M axis."""
+    seg = jnp.repeat(jnp.arange(m), batch)
+    return (seg[:, None] == jnp.arange(m)[None, :]).astype(jnp.float32)
 
 
 def pack_mask(layout: PartyLayout, active_only: bool = False) -> jax.Array:
@@ -199,15 +224,34 @@ class FusedEngine:
         return xb @ wcols
 
     def _bwd(self, xb, thcols, denom: int):
-        """(dp, M) BUM data gradients XᵀΘ/denom (reg term added by caller)."""
+        """(dp, M) BUM data gradients XᵀΘ/denom (reg term added by caller).
+
+        The kernel path passes ``w=None``: backward-only invocations stream
+        no dead weight block into VMEM (M>1 hot-path routing)."""
         if self._kernel and xb.shape[0] <= self.cfg.kernel_max_rows:
             _, g = _vg.vfl_grad(
-                xb, jnp.zeros((xb.shape[1], thcols.shape[1]), xb.dtype),
-                thcols, mode="backward", denom=denom,
+                xb, None, thcols, mode="backward", denom=denom,
                 interpret=self._interpret,
                 block_b=self.cfg.block_b, block_d=self.cfg.block_d)
             return g
         return xb.T @ thcols / denom
+
+    def _bwd_doms(self, xb, theta, m: int, denom: int):
+        """(dp, m) per-dominator BUM data gradients from the concatenated
+        (m·B, dp) minibatch block: column j = X_{b_j}ᵀϑ_j / denom.
+
+        Kernel path: one M = m rank-k pass with the block-diagonal Θ (the
+        X block is read from HBM once for all m dominators; zero columns
+        cost nothing on the memory-bound MXU pass).  jnp path: the block
+        structure is contracted directly (batched segment matmul), which
+        is the flop-optimal form on CPU.  Identical columns either way.
+        """
+        if self._kernel and xb.shape[0] <= self.cfg.kernel_max_rows:
+            thmat = theta[:, None] * dominator_onehot(m, xb.shape[0] // m)
+            return self._bwd(xb, thmat, denom)
+        b = xb.shape[0] // m
+        return jnp.einsum("jbd,jb->dj", xb.reshape(m, b, xb.shape[1]),
+                          theta.reshape(m, b)) / denom
 
     def _agg(self, z, kt):
         """Masked secure aggregation of partials over the party axis."""
@@ -407,6 +451,144 @@ class FusedEngine:
                                           self.maskq, self.y, lr, key,
                                           batch, steps)
 
+    # -- multi-dominator epochs (m active parties per step) -------------------
+
+    def multi_sgd_epoch(self, wq, lr, key, batch: int, steps: int):
+        """VFB²-SGD with all m = layout.m dominators launching concurrent
+        backward updates per step: one forward over the concatenated
+        (m·B, dp) minibatch block, one secure aggregation of all m
+        partial-product sets, one M = m rank-k backward whose columns are
+        the m BUM gradients (see module docstring).  Pinned against
+        ``algorithms.multi_sgd_epoch``."""
+        prob, m = self.problem, self.layout.m
+
+        def build():
+            def party(local, shared):
+                xp, wp, maskp = local
+                y, lr, idx, mkeys = shared
+
+                def body(wp, inp):
+                    ibf, kt = inp                 # ibf: (m·B,) concatenated
+                    b = ibf.shape[0] // m
+                    xb = xp[ibf]
+                    z = self._fwd(xb, wp[:, None])[:, 0]
+                    agg = self._agg(z, kt)        # all m partials, one pass
+                    theta = prob.theta(agg, y[ibf])
+                    gg = self._bwd_doms(xb, theta, m, b)  # (dp, m) BUM set
+                    g = gg.sum(axis=1) + m * prob.lam * prob.reg_grad(wp)
+                    return wp - lr * maskp * g, None
+
+                wp, _ = jax.lax.scan(body, wp, (idx, mkeys))
+                return wp
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, wq, maskq, y, lr, key, batch, steps):
+                idx = _batch_indices(key, y.shape[0], m * batch, steps)
+                return mapped((xs, wq, maskq),
+                              (y, lr, idx, self._keys(key, steps)))
+
+            return epoch
+
+        return self._epoch("multi_sgd", build)(self.xs, wq, self.maskq,
+                                               self.y, lr, key, batch,
+                                               steps)
+
+    def multi_svrg_epoch(self, wq, wq_snap, muq, lr, key, batch: int,
+                         steps: int):
+        """Multi-dominator VFB²-SVRG inner loop: the m dominators'
+        concatenated minibatches ride one M = 2 kernel pass (current
+        iterate + snapshot), so each step is still a single forward and a
+        single backward contraction."""
+        prob, m = self.problem, self.layout.m
+
+        def build():
+            def party(local, shared):
+                xp, wp, wsp, mup, maskp = local
+                y, lr, idx, mkeys = shared
+
+                def body(wp, inp):
+                    ibf, kt = inp
+                    b = ibf.shape[0] // m
+                    xb = xp[ibf]
+                    z = self._fwd(xb, jnp.stack([wp, wsp], axis=1))
+                    agg = self._agg(z, kt)
+                    th1 = prob.theta(agg[:, 0], y[ibf])
+                    th0 = prob.theta(agg[:, 1], y[ibf])
+                    gg = self._bwd(xb, jnp.stack([th1, th0], axis=1), b)
+                    v = gg[:, 0] - gg[:, 1] + m * (
+                        prob.lam * (prob.reg_grad(wp) - prob.reg_grad(wsp))
+                        + mup)
+                    return wp - lr * maskp * v, None
+
+                wp, _ = jax.lax.scan(body, wp, (idx, mkeys))
+                return wp
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, wq, wq_snap, muq, maskq, y, lr, key, batch, steps):
+                idx = _batch_indices(key, y.shape[0], m * batch, steps)
+                return mapped((xs, wq, wq_snap, muq, maskq),
+                              (y, lr, idx, self._keys(key, steps)))
+
+            return epoch
+
+        return self._epoch("multi_svrg", build)(self.xs, wq, wq_snap, muq,
+                                                self.maskq, self.y, lr,
+                                                key, batch, steps)
+
+    def multi_saga_epoch(self, wq, tabq, avgq, lr, key, batch: int,
+                         steps: int):
+        """Multi-dominator VFB²-SAGA: the m dominators' Δϑ vectors occupy
+        the M = m columns of one rank-k backward; the replicated ϑ̃ table
+        takes all m writes per step (last write wins on duplicates, as in
+        the sequential oracle and the async execution)."""
+        prob, m = self.problem, self.layout.m
+
+        def build():
+            def party(local, shared):
+                xp, wp, tab, avgp, maskp = local
+                y, lr, idx, mkeys = shared
+                n = y.shape[0]
+
+                def body(carry, inp):
+                    wp, tab, avgp = carry
+                    ibf, kt = inp
+                    b = ibf.shape[0] // m
+                    xb = xp[ibf]
+                    z = self._fwd(xb, wp[:, None])[:, 0]
+                    agg = self._agg(z, kt)
+                    th_new = prob.theta(agg, y[ibf])
+                    dth = th_new - tab[ibf]
+                    raws = self._bwd_doms(xb, dth, m, 1)  # (dp, m)
+                    rsum = raws.sum(axis=1)
+                    v = rsum / b + m * avgp \
+                        + m * prob.lam * prob.reg_grad(wp)
+                    wp = wp - lr * maskp * v
+                    avgp = avgp + rsum / n
+                    tab = tab.at[ibf].set(th_new)
+                    return (wp, tab, avgp), None
+
+                (wp, tab, avgp), _ = jax.lax.scan(body, (wp, tab, avgp),
+                                                  (idx, mkeys))
+                return wp, tab, avgp
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, wq, tabq, avgq, maskq, y, lr, key, batch, steps):
+                idx = _batch_indices(key, y.shape[0], m * batch, steps)
+                return mapped((xs, wq, tabq, avgq, maskq),
+                              (y, lr, idx, self._keys(key, steps)))
+
+            return epoch
+
+        return self._epoch("multi_saga", build)(self.xs, wq, tabq, avgq,
+                                                self.maskq, self.y, lr,
+                                                key, batch, steps)
+
     # -- bounded-delay (τ) emulation (core.staleness, fused) ------------------
 
     def delayed_sgd_epoch(self, wq, bufq, t0, delays_q, lr, key,
@@ -422,7 +604,7 @@ class FusedEngine:
 
         def build():
             def party(local, shared):
-                xp, wp, buf, delay = local
+                xp, wp, buf, delay, maskp = local
                 y, lr, idx, mkeys, t0 = shared
 
                 def body(carry, inp):
@@ -439,7 +621,9 @@ class FusedEngine:
                     eff = jnp.maximum(t - delay, 0) % (tau + 1)
                     stale = jax.lax.dynamic_index_in_dim(buf, eff, 0,
                                                          keepdims=False)
-                    return (wp - lr * stale, buf, t + 1), None
+                    # the same update mask as the fresh path: frozen
+                    # (passive) blocks must stay frozen under staleness too
+                    return (wp - lr * maskp * stale, buf, t + 1), None
 
                 (wp, buf, _), _ = jax.lax.scan(body, (wp, buf, t0),
                                                (idx, mkeys))
@@ -449,15 +633,77 @@ class FusedEngine:
 
             @functools.partial(jax.jit,
                                static_argnames=("batch", "steps"))
-            def epoch(xs, wq, bufq, delays_q, y, lr, key, t0, batch, steps):
+            def epoch(xs, wq, bufq, delays_q, maskq, y, lr, key, t0, batch,
+                      steps):
                 idx = _batch_indices(key, y.shape[0], batch, steps)
-                return mapped((xs, wq, bufq, delays_q),
+                return mapped((xs, wq, bufq, delays_q, maskq),
                               (y, lr, idx, self._keys(key, steps), t0))
 
             return epoch
 
         wq, bufq = self._epoch(f"delayed{tau}", build)(
-            self.xs, wq, bufq, delays_q, self.y, lr, key, t0, batch, steps)
+            self.xs, wq, bufq, delays_q, self.maskq, self.y, lr, key, t0,
+            batch, steps)
+        return wq, bufq, t0 + steps
+
+    def multi_delayed_sgd_epoch(self, wq, bufq, t0, delays_qm, lr, key,
+                                batch: int, steps: int, tau: int):
+        """Bounded-delay multi-dominator VFB²-SGD: at step t every party
+        holds m gradient ring buffers — one per dominator — and applies
+        dominator j's BUM gradient of step t − d_{ℓ,j}, so each dominator's
+        update stream ages under its own delay schedule (the per-dominator
+        τ₁/τ₂ realization; `core.staleness.delayed_multi_sgd_epoch` is the
+        sequential oracle).
+
+        ``bufq``: (q, τ+1, dp, m) per-(party, dominator) ring buffers;
+        ``delays_qm``: (q, m) int32 delays d_{ℓ,j}; ``t0``: scalar int32.
+        """
+        prob, m = self.problem, self.layout.m
+
+        def build():
+            def party(local, shared):
+                xp, wp, buf, delay, maskp = local    # delay: (m,)
+                y, lr, idx, mkeys, t0 = shared
+
+                def body(carry, inp):
+                    wp, buf, t = carry
+                    ibf, kt = inp
+                    b = ibf.shape[0] // m
+                    xb = xp[ibf]
+                    z = self._fwd(xb, wp[:, None])[:, 0]
+                    agg = self._agg(z, kt)
+                    theta = prob.theta(agg, y[ibf])
+                    gg = self._bwd_doms(xb, theta, m, b) \
+                        + prob.lam * prob.reg_grad(wp)[:, None]   # (dp, m)
+                    slot = t % (tau + 1)
+                    buf = jax.lax.dynamic_update_index_in_dim(buf, gg,
+                                                              slot, 0)
+                    eff = jnp.maximum(t - delay, 0) % (tau + 1)   # (m,)
+                    stale = jnp.take_along_axis(
+                        buf, jnp.broadcast_to(eff[None, None, :],
+                                              (1,) + gg.shape), axis=0)[0]
+                    wp = wp - lr * maskp * stale.sum(axis=1)
+                    return (wp, buf, t + 1), None
+
+                (wp, buf, _), _ = jax.lax.scan(body, (wp, buf, t0),
+                                               (idx, mkeys))
+                return wp, buf
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"))
+            def epoch(xs, wq, bufq, delays_qm, maskq, y, lr, key, t0,
+                      batch, steps):
+                idx = _batch_indices(key, y.shape[0], m * batch, steps)
+                return mapped((xs, wq, bufq, delays_qm, maskq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        wq, bufq = self._epoch(f"multi_delayed{tau}", build)(
+            self.xs, wq, bufq, delays_qm, self.maskq, self.y, lr, key, t0,
+            batch, steps)
         return wq, bufq, t0 + steps
 
     # -- introspection -------------------------------------------------------

@@ -17,6 +17,17 @@ the fused federated step engine (``core.engine``) — per-party ring buffers
 carried through the party-mapped scan, one dispatch per epoch, secure
 aggregation included.  Both trajectories are admissible under the same τ,
 and tests pin them together.
+
+Multi-dominator staleness: with all m active parties launching backward
+updates concurrently, party ℓ receives m update streams and each stream
+ages independently — delays become a (q, m) matrix d_{ℓ,j} (party ℓ's
+view of dominator j), with d_{j,j} = 0 for every dominator (Alg. 2: a
+dominator's *own* block update uses its fresh gradient; the single-
+dominator (q,) schedule likewise zeros the delay of **all** m active
+parties, since each is the dominator of its own block).
+``delayed_multi_sgd_epoch`` is the sequential oracle for that regime and
+``run_delayed_multi_fused`` the engine realization (per-(party, dominator)
+ring buffers riding the scan, the m ϑ vectors in one rank-k kernel pass).
 """
 from __future__ import annotations
 
@@ -50,14 +61,18 @@ def init_state(d: int, tau: int) -> DelayedState:
 @functools.partial(jax.jit,
                    static_argnames=("problem", "batch", "steps", "tau"))
 def delayed_sgd_epoch(problem: Problem, state: DelayedState, x, y, lr,
-                      delays, key, batch: int, steps: int, tau: int):
+                      delays, key, batch: int, steps: int, tau: int,
+                      mask=None):
     """One epoch of stale-gradient VFB²-SGD.
 
     ``delays``: (d,) int32 — per-coordinate delay d_ℓ (constant per party
     block), the deterministic schedule standing in for τ₁/τ₂ jitter.
+    ``mask``: optional (d,) update mask (``PartyLayout.update_mask``) —
+    frozen blocks stay frozen on the delayed path too.
     """
     n = x.shape[0]
     idx = jax.random.randint(key, (steps, batch), 0, n)
+    upd = jnp.ones(x.shape[1], jnp.float32) if mask is None else mask
 
     def body(st: DelayedState, ib):
         xb, yb = x[ib], y[ib]
@@ -68,7 +83,7 @@ def delayed_sgd_epoch(problem: Problem, state: DelayedState, x, y, lr,
         # party ℓ reads the gradient from step t − d_ℓ (clamped at step 0)
         eff = jnp.maximum(st.t - delays, 0) % (tau + 1)
         stale_g = jnp.take_along_axis(buf, eff[None, :], axis=0)[0]
-        w = st.w - lr * stale_g
+        w = st.w - lr * upd * stale_g
         return DelayedState(w=w, buf=buf, t=st.t + 1), None
 
     st, _ = jax.lax.scan(body, state, idx)
@@ -77,10 +92,15 @@ def delayed_sgd_epoch(problem: Problem, state: DelayedState, x, y, lr,
 
 def party_delay_values(layout: PartyLayout, tau: int,
                        seed: int = 0) -> np.ndarray:
-    """One delay in [0, τ] per party (the deterministic τ₁/τ₂ schedule)."""
+    """One delay in [0, τ] per party (the deterministic τ₁/τ₂ schedule).
+
+    Every *active* party is the dominator of its own block, so all m
+    active-party delays are zero (Alg. 2 line 6-7: the dominator's own
+    block update uses its freshly computed gradient) — not just party 0's.
+    """
     rng = np.random.default_rng(seed)
     per_party = rng.integers(0, tau + 1, size=layout.q)
-    per_party[0] = 0  # the dominator's own block is fresh (Alg. 2 line 6-7)
+    per_party[:layout.m] = 0
     return per_party.astype(np.int32)
 
 
@@ -91,17 +111,96 @@ def party_delays(layout: PartyLayout, d: int, tau: int,
     return per_party[layout.party_of_coord(d)].astype(np.int32)
 
 
+# ---------------------------------------------------------------------------
+# multi-dominator staleness (m concurrent update streams per party)
+# ---------------------------------------------------------------------------
+
+def party_dominator_delays(layout: PartyLayout, tau: int,
+                           seed: int = 0) -> np.ndarray:
+    """(q, m) delay matrix d_{ℓ,j}: party ℓ's staleness for dominator j's
+    update stream.  The diagonal d_{j,j} is zero — dominator j applies its
+    own ϑ to its own block fresh (Alg. 2); every other (party, dominator)
+    pair may lag by up to τ."""
+    rng = np.random.default_rng(seed)
+    dd = rng.integers(0, tau + 1, size=(layout.q, layout.m))
+    for j in range(layout.m):
+        dd[j, j] = 0
+    return dd.astype(np.int32)
+
+
+def dominator_delays_by_coord(layout: PartyLayout, d: int, tau: int,
+                              seed: int = 0) -> np.ndarray:
+    """The (q, m) schedule mapped to coordinates: (d, m) int32."""
+    dd = party_dominator_delays(layout, tau, seed)
+    return dd[layout.party_of_coord(d)].astype(np.int32)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("w", "buf", "t"), meta_fields=())
+@dataclasses.dataclass
+class MultiDelayedState:
+    w: jax.Array            # (d,)
+    buf: jax.Array          # (tau+1, d, m) per-dominator gradient ring
+    t: jax.Array            # scalar int32 step
+
+
+def init_multi_state(d: int, tau: int, m: int) -> MultiDelayedState:
+    return MultiDelayedState(w=jnp.zeros(d, jnp.float32),
+                             buf=jnp.zeros((tau + 1, d, m), jnp.float32),
+                             t=jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("problem", "batch", "steps", "tau", "m"))
+def delayed_multi_sgd_epoch(problem: Problem, state: MultiDelayedState, x,
+                            y, lr, delays, key, batch: int, steps: int,
+                            tau: int, m: int, mask=None):
+    """Sequential oracle for multi-dominator stale-gradient VFB²-SGD.
+
+    Each step, the m dominators draw independent minibatches and compute
+    their BUM gradients from the same read w_t; gradient j enters ring
+    buffer column j; the applied update sums, per coordinate, each
+    dominator's gradient from step t − d_{·,j}.  ``delays``: (d, m) int32.
+    """
+    n = x.shape[0]
+    idx = jax.random.randint(key, (steps, m * batch), 0, n)
+    upd = jnp.ones(x.shape[1], jnp.float32) if mask is None else mask
+
+    def body(st: MultiDelayedState, ibf):
+        ib = ibf.reshape(m, batch)
+
+        def dom_grad(ibj):
+            xb, yb = x[ibj], y[ibj]
+            theta = problem.theta(xb @ st.w, yb)
+            return xb.T @ theta / batch \
+                + problem.lam * problem.reg_grad(st.w)
+
+        gg = jax.vmap(dom_grad, out_axes=1)(ib)          # (d, m)
+        slot = st.t % (tau + 1)
+        buf = jax.lax.dynamic_update_index_in_dim(st.buf, gg, slot, 0)
+        eff = jnp.maximum(st.t - delays, 0) % (tau + 1)  # (d, m)
+        stale = jnp.take_along_axis(buf, eff[None], axis=0)[0]
+        w = st.w - lr * upd * stale.sum(axis=1)
+        return MultiDelayedState(w=w, buf=buf, t=st.t + 1), None
+
+    st, _ = jax.lax.scan(body, state, idx)
+    return st
+
+
 def run_delayed_fused(problem: Problem, x, y, layout: PartyLayout,
                       tau: int, epochs: int, lr: float, batch: int,
-                      seed: int = 0, engine_config=None) -> np.ndarray:
+                      seed: int = 0, engine_config=None,
+                      active_only: bool = False) -> np.ndarray:
     """Bounded-delay VFB²-SGD on the fused engine: per-party gradient ring
     buffers ride the party-mapped scan, so a whole stale-gradient epoch is
-    one compiled dispatch.  Returns the final (d,) iterate."""
+    one compiled dispatch.  ``active_only=True`` freezes passive-party
+    blocks (the AFSVRG-VP baseline) on the delayed path as well.  Returns
+    the final (d,) iterate."""
     from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
 
     n, d = np.asarray(x).shape
     cfg = engine_config if engine_config is not None else EngineConfig()
-    eng = FusedEngine(problem, x, y, layout, cfg)
+    eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
     delays_q = jnp.asarray(party_delay_values(layout, tau, seed))
     wq = eng.pack_w(np.zeros(d, np.float32))
     bufq = jnp.zeros((layout.q, tau + 1, eng.dp), jnp.float32)
@@ -112,4 +211,32 @@ def run_delayed_fused(problem: Problem, x, y, layout: PartyLayout,
         key, sub = jax.random.split(key)
         wq, bufq, t0 = eng.delayed_sgd_epoch(wq, bufq, t0, delays_q, lr,
                                              sub, batch, steps, tau)
+    return eng.unpack_w(wq)
+
+
+def run_delayed_multi_fused(problem: Problem, x, y, layout: PartyLayout,
+                            tau: int, epochs: int, lr: float, batch: int,
+                            seed: int = 0, engine_config=None,
+                            active_only: bool = False) -> np.ndarray:
+    """Multi-dominator bounded-delay VFB²-SGD on the fused engine: each
+    party carries m = layout.m gradient ring buffers through the scan (one
+    per dominator's update stream), each aging under its own (q, m) delay
+    schedule; the m ϑ vectors of every step ride one rank-k kernel pass.
+    Returns the final (d,) iterate."""
+    from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
+
+    n, d = np.asarray(x).shape
+    cfg = engine_config if engine_config is not None else EngineConfig()
+    eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
+    delays_qm = jnp.asarray(party_dominator_delays(layout, tau, seed))
+    wq = eng.pack_w(np.zeros(d, np.float32))
+    bufq = jnp.zeros((layout.q, tau + 1, eng.dp, layout.m), jnp.float32)
+    t0 = jnp.zeros((), jnp.int32)
+    steps = max(1, n // batch)
+    key = jax.random.PRNGKey(seed)
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        wq, bufq, t0 = eng.multi_delayed_sgd_epoch(wq, bufq, t0, delays_qm,
+                                                   lr, sub, batch, steps,
+                                                   tau)
     return eng.unpack_w(wq)

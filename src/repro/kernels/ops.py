@@ -59,7 +59,10 @@ def vfl_grad(xb, w, theta, lam=0.0, *, block_b=128, block_d=128,
     ``w``/``theta`` may carry a trailing M axis (M concurrent iterates /
     ϑ vectors — multi-dominator or variance-reduced batching); non-tile
     shapes are padded internally.  Both outputs arrive fully reduced from
-    the kernel.
+    the kernel.  ``mode="backward"`` additionally accepts ``w=None`` (with
+    ``lam=0``): the pure-XᵀΘ BUM application streams no weight operand —
+    the engine's multi-dominator epochs route their M = m per-dominator
+    backward through this.
     """
     if interpret is None:
         interpret = _default_interpret()

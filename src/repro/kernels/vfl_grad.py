@@ -52,21 +52,27 @@ def _round_up(v: int, m: int) -> int:
 
 
 def _vfl_kernel(*refs, lam: float, denom: int, block_b: int, fwd: bool,
-                bwd: bool):
+                bwd: bool, has_w: bool):
     # Single-sided modes carry only their own operands/outputs (no HBM
     # traffic for a dead side); ref order follows the wrapper's specs.
+    # ``has_w=False`` (backward with ``w=None``) additionally drops the
+    # weight operand — the engine's multi-dominator BUM application only
+    # needs XᵀΘ, so no dead (D, M) block is streamed into VMEM.
     if fwd and bwd:
         x_ref, w_ref, theta_ref, z_ref, g_ref, z_acc, g_acc = refs
     elif fwd:
         x_ref, w_ref, z_ref, z_acc = refs
-    else:
+    elif has_w:
         x_ref, w_ref, theta_ref, g_ref, g_acc = refs
+    else:
+        x_ref, theta_ref, g_ref, g_acc = refs
+        w_ref = None
     di = pl.program_id(0)
     bi = pl.program_id(1)
     nb = pl.num_programs(1)
 
     x = x_ref[...].astype(jnp.float32)                    # (Bb, Db)
-    w = w_ref[...].astype(jnp.float32)                    # (Db, M)
+    w = None if w_ref is None else w_ref[...].astype(jnp.float32)  # (Db, M)
 
     if fwd:
         # forward partials for this (feature, batch) tile: rank-k MXU pass
@@ -97,7 +103,10 @@ def _vfl_kernel(*refs, lam: float, denom: int, block_b: int, fwd: bool,
 
         @pl.when(bi == nb - 1)
         def _g_finalize():
-            g_ref[...] = (g_acc[...] / denom + lam * w).astype(g_ref.dtype)
+            acc = g_acc[...] / denom
+            if has_w:
+                acc = acc + lam * w
+            g_ref[...] = acc.astype(g_ref.dtype)
 
 
 def vfl_grad(xb, w, theta, lam: float = 0.0, *, block_b: int = 128,
@@ -112,13 +121,23 @@ def vfl_grad(xb, w, theta, lam: float = 0.0, *, block_b: int = 128,
 
     Single-sided modes return ``None`` for the inactive side and carry no
     HBM traffic for it; ``theta=None`` is allowed (and ϑ-free) in
-    ``mode="forward"``.
+    ``mode="forward"``, and ``w=None`` is allowed in ``mode="backward"``
+    when ``lam == 0`` (pure XᵀΘ — the multi-dominator BUM application;
+    the dead weight block is then never streamed into VMEM).
     """
     b, d = xb.shape
-    squeeze = (w.ndim == 1)
-    w2 = w[:, None] if w.ndim == 1 else w
-    m = w2.shape[1]
     assert mode in ("fused", "forward", "backward"), mode
+    if w is None:
+        assert mode == "backward", "w=None only valid in mode='backward'"
+        assert lam == 0.0, "the λw term needs w; pass lam=0 with w=None"
+        assert theta is not None
+        squeeze = (theta.ndim == 1)
+        w2 = None
+        m = 1 if squeeze else theta.shape[1]
+    else:
+        squeeze = (w.ndim == 1)
+        w2 = w[:, None] if w.ndim == 1 else w
+        m = w2.shape[1]
     if theta is None:
         assert mode == "forward", "theta required outside mode='forward'"
         th2 = None
@@ -134,15 +153,18 @@ def vfl_grad(xb, w, theta, lam: float = 0.0, *, block_b: int = 128,
     bp, dp = _round_up(b, block_b), _round_up(d, block_d)
     if bp != b or dp != d:
         xb = jnp.pad(xb, ((0, bp - b), (0, dp - d)))
-        w2 = jnp.pad(w2, ((0, dp - d), (0, 0)))
+        if w2 is not None:
+            w2 = jnp.pad(w2, ((0, dp - d), (0, 0)))
         if th2 is not None:
             th2 = jnp.pad(th2, ((0, bp - b), (0, 0)))
     nb, nd = bp // block_b, dp // block_d
 
     fwd = mode in ("fused", "forward")
     bwd = mode in ("fused", "backward")
+    has_w = w2 is not None
     kernel = functools.partial(_vfl_kernel, lam=lam, denom=denom,
-                               block_b=block_b, fwd=fwd, bwd=bwd)
+                               block_b=block_b, fwd=fwd, bwd=bwd,
+                               has_w=has_w)
     # Mode-specific specs: a single-sided call neither streams the unused
     # operand into VMEM nor DMAs a dead output back to HBM.
     th_spec = pl.BlockSpec((block_b, m), lambda di, bi: (bi, 0))
@@ -153,18 +175,18 @@ def vfl_grad(xb, w, theta, lam: float = 0.0, *, block_b: int = 128,
               jax.ShapeDtypeStruct((dp, m), jnp.float32),
               pltpu.VMEM((block_d, m), jnp.float32))
     sides = ([z_spec] if fwd else []) + ([g_spec] if bwd else [])
+    w_spec = pl.BlockSpec((block_d, m), lambda di, bi: (di, 0))
     outs = pl.pallas_call(
         kernel,
         grid=(nd, nb),
         in_specs=[
             pl.BlockSpec((block_b, block_d), lambda di, bi: (bi, di)),
-            pl.BlockSpec((block_d, m), lambda di, bi: (di, 0)),
-        ] + ([th_spec] if bwd else []),
+        ] + ([w_spec] if has_w else []) + ([th_spec] if bwd else []),
         out_specs=[s[0] for s in sides],
         out_shape=[s[1] for s in sides],
         scratch_shapes=[s[2] for s in sides],
         interpret=interpret,
-    )(xb, w2, *((th2,) if bwd else ()))
+    )(xb, *((w2,) if has_w else ()), *((th2,) if bwd else ()))
     z = outs[0][:b] if fwd else None
     g = outs[-1][:d] if bwd else None
     if squeeze:

@@ -202,3 +202,187 @@ def test_train_fused_secure_converges(ds, layout, prob):
                            engine="fused",
                            engine_config=EngineConfig(secure="two_tree"))
     assert res.history[-1]["objective"] < 0.62
+
+
+# ---------------------------------------------------------------------------
+# multi-dominator fused epochs vs the sequential multi-dominator oracle
+# (m active parties concurrently launching backward updates per step)
+# ---------------------------------------------------------------------------
+
+MLAYOUTS = [algorithms.PartyLayout.even(D, 8, 1),
+            algorithms.PartyLayout.even(D, 8, 2)]
+
+
+@pytest.fixture(params=MLAYOUTS, ids=["m1", "m2"])
+def mlayout(request):
+    return request.param
+
+
+def test_multi_sgd_matches_oracle(ds, mlayout, prob):
+    x, y, _ = _ref_inputs(ds, mlayout)
+    mask = jnp.asarray(mlayout.update_mask(D, False))
+    key = jax.random.PRNGKey(10)
+    steps = ds.x_train.shape[0] // BATCH
+    w_ref = algorithms.multi_sgd_epoch(prob, jnp.zeros(D), x, y, 0.5, mask,
+                                       key, BATCH, steps, mlayout.m)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, mlayout,
+                      EngineConfig(secure="off"))
+    wq = eng.multi_sgd_epoch(eng.pack_w(np.zeros(D)), 0.5, key, BATCH,
+                             steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_multi_sgd_m1_degenerates_to_single_dominator(ds, prob):
+    """m = 1: the multi-dominator epoch IS the single-dominator epoch
+    (same sampling stream, same update sequence)."""
+    layout1 = MLAYOUTS[0]
+    key = jax.random.PRNGKey(11)
+    steps = ds.x_train.shape[0] // BATCH
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout1,
+                      EngineConfig(secure="off"))
+    wq0 = eng.pack_w(np.zeros(D))
+    w_multi = eng.unpack_w(eng.multi_sgd_epoch(wq0, 0.5, key, BATCH, steps))
+    w_single = eng.unpack_w(eng.sgd_epoch(wq0, 0.5, key, BATCH, steps))
+    np.testing.assert_allclose(w_multi, w_single, atol=1e-6, rtol=0)
+
+
+def test_multi_svrg_matches_oracle(ds, mlayout, prob):
+    x, y, _ = _ref_inputs(ds, mlayout)
+    mask = jnp.asarray(mlayout.update_mask(D, False))
+    key = jax.random.PRNGKey(12)
+    steps = ds.x_train.shape[0] // BATCH
+    w0 = jnp.zeros(D)
+    mu = algorithms.full_gradient(prob, w0, x, y)
+    w_ref = algorithms.multi_svrg_epoch(prob, w0, w0, mu, x, y, 0.5, mask,
+                                        key, BATCH, steps, mlayout.m)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, mlayout,
+                      EngineConfig(secure="off"))
+    wq0 = eng.pack_w(np.zeros(D))
+    muq = eng.full_gradient(wq0, key)
+    wq = eng.multi_svrg_epoch(wq0, wq0, muq, 0.5, key, BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_multi_saga_matches_oracle(ds, mlayout, prob):
+    x, y, _ = _ref_inputs(ds, mlayout)
+    mask = jnp.asarray(mlayout.update_mask(D, False))
+    key = jax.random.PRNGKey(13)
+    steps = ds.x_train.shape[0] // BATCH
+    tab = prob.theta(x @ jnp.zeros(D), y)
+    avg = x.T @ tab / x.shape[0]
+    w_ref, tab_ref, _ = algorithms.multi_saga_epoch(
+        prob, jnp.zeros(D), tab, avg, x, y, 0.5, mask, key, BATCH, steps,
+        mlayout.m)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, mlayout,
+                      EngineConfig(secure="off"))
+    wq0 = eng.pack_w(np.zeros(D))
+    tabq, avgq = eng.saga_init(wq0, key)
+    wq, tabq, avgq = eng.multi_saga_epoch(wq0, tabq, avgq, 0.5, key, BATCH,
+                                          steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+    # the replicated ϑ̃ table took all m dominators' writes identically
+    np.testing.assert_allclose(np.asarray(tabq[0]), np.asarray(tabq[-1]),
+                               atol=0, rtol=0)
+    np.testing.assert_allclose(np.asarray(tabq[0]), np.asarray(tab_ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_multi_delayed_matches_oracle(ds, mlayout, prob):
+    """Per-(party, dominator) ring buffers on the fused path reproduce the
+    sequential multi-dominator bounded-delay trajectory."""
+    tau, lr, epochs, seed = 4, 0.3, 3, 0
+    m = mlayout.m
+    delays = staleness.dominator_delays_by_coord(mlayout, D, tau, seed=seed)
+    st = staleness.init_multi_state(D, tau, m)
+    x, y, _ = _ref_inputs(ds, mlayout)
+    key = jax.random.PRNGKey(seed)
+    steps = ds.x_train.shape[0] // BATCH
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        st = staleness.delayed_multi_sgd_epoch(prob, st, x, y, lr,
+                                               jnp.asarray(delays), sub,
+                                               BATCH, steps, tau, m)
+    w_fused = staleness.run_delayed_multi_fused(prob, ds.x_train,
+                                                ds.y_train, mlayout, tau,
+                                                epochs, lr, BATCH,
+                                                seed=seed)
+    np.testing.assert_allclose(w_fused, np.asarray(st.w), atol=1e-5,
+                               rtol=0)
+
+
+@pytest.mark.parametrize("secure", ["two_tree", "ring"])
+def test_multi_secure_modes_are_lossless(ds, prob, secure):
+    """All m partial-product sets of a step are masked-aggregated in one
+    collective; Algorithm 1's cancellation must stay exact."""
+    layout2 = MLAYOUTS[1]
+    key = jax.random.PRNGKey(14)
+    steps = ds.x_train.shape[0] // BATCH
+    base = FusedEngine(prob, ds.x_train, ds.y_train, layout2,
+                       EngineConfig(secure="off"))
+    w_base = base.unpack_w(base.multi_sgd_epoch(base.pack_w(np.zeros(D)),
+                                                0.5, key, BATCH, steps))
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout2,
+                      EngineConfig(secure=secure))
+    w_sec = eng.unpack_w(eng.multi_sgd_epoch(eng.pack_w(np.zeros(D)), 0.5,
+                                             key, BATCH, steps))
+    np.testing.assert_allclose(w_sec, w_base, atol=1e-5, rtol=0)
+
+
+def test_multi_kernel_routing_matches_jnp(ds, prob):
+    """The M = m rank-k kernel path (block-diagonal Θ, w=None backward)
+    and the jnp contraction produce the same multi-dominator epoch."""
+    layout2 = MLAYOUTS[1]
+    key = jax.random.PRNGKey(15)
+    jnp_eng = FusedEngine(prob, ds.x_train, ds.y_train, layout2,
+                          EngineConfig(secure="off", use_kernel=False))
+    krn_eng = FusedEngine(prob, ds.x_train, ds.y_train, layout2,
+                          EngineConfig(secure="off", use_kernel=True))
+    w_j = jnp_eng.unpack_w(jnp_eng.multi_sgd_epoch(
+        jnp_eng.pack_w(np.zeros(D)), 0.5, key, BATCH, 4))
+    w_k = krn_eng.unpack_w(krn_eng.multi_sgd_epoch(
+        krn_eng.pack_w(np.zeros(D)), 0.5, key, BATCH, 4))
+    np.testing.assert_allclose(w_k, w_j, atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("algo", ["sgd", "svrg", "saga"])
+def test_train_multi_dominator_fused_matches_reference(ds, prob, algo):
+    layout2 = MLAYOUTS[1]
+    kw = dict(algo=algo, epochs=3, lr=0.3, batch=BATCH, seed=7,
+              multi_dominator=True)
+    ref = algorithms.train(prob, ds.x_train, ds.y_train, layout2, **kw)
+    fused = algorithms.train(prob, ds.x_train, ds.y_train, layout2,
+                             engine="fused", **kw)
+    np.testing.assert_allclose(fused.w, ref.w, atol=1e-5, rtol=0)
+    for hf, hr in zip(fused.history, ref.history):
+        assert abs(hf["objective"] - hr["objective"]) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# delayed-path mask regression (active_only must freeze passive blocks on
+# the stale-gradient path exactly as on the fresh path)
+# ---------------------------------------------------------------------------
+
+def test_delayed_active_only_freezes_passive_blocks(ds, layout, prob):
+    tau = 4
+    w = staleness.run_delayed_fused(prob, ds.x_train, ds.y_train, layout,
+                                    tau, 2, 0.3, BATCH, seed=0,
+                                    active_only=True)
+    active = layout.update_mask(D, True)
+    assert np.abs(w[active == 0]).max() == 0.0     # passive: never updated
+    assert np.abs(w[active == 1]).max() > 0.0      # active: trained
+    # and the masked fused path still matches the masked oracle
+    st = staleness.init_state(D, tau)
+    x, y, _ = _ref_inputs(ds, layout)
+    delays = staleness.party_delays(layout, D, tau, seed=0)
+    key = jax.random.PRNGKey(0)
+    steps = ds.x_train.shape[0] // BATCH
+    for _ in range(2):
+        key, sub = jax.random.split(key)
+        st = staleness.delayed_sgd_epoch(prob, st, x, y, 0.3,
+                                         jnp.asarray(delays), sub, BATCH,
+                                         steps, tau,
+                                         mask=jnp.asarray(active))
+    np.testing.assert_allclose(w, np.asarray(st.w), atol=1e-5, rtol=0)

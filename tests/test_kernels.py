@@ -159,6 +159,23 @@ def test_vfl_grad_modes(mode):
         assert z is None
 
 
+def test_vfl_grad_backward_without_w():
+    """mode='backward' with w=None (the engine's multi-dominator BUM
+    application): pure XᵀΘ/denom, no weight operand streamed at all."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    xb = _rand(ks[0], (100, 96), jnp.float32)      # non-tile B: pad path
+    th = _rand(ks[2], (100, 3), jnp.float32)       # M = 3 dominators
+    _, g = ops.vfl_grad(xb, None, th, lam=0.0, mode="backward")
+    np.testing.assert_allclose(np.asarray(g), np.asarray(xb.T @ th / 100),
+                               atol=1e-5, rtol=1e-5)
+    _, g1 = ops.vfl_grad(xb, None, th[:, 0], lam=0.0, mode="backward",
+                         denom=7)
+    assert g1.shape == (96,)                       # rank-1 in, rank-1 out
+    np.testing.assert_allclose(np.asarray(g1),
+                               np.asarray(xb.T @ th[:, 0] / 7),
+                               atol=1e-4, rtol=1e-5)
+
+
 def test_vfl_grad_denom_override():
     """SAGA's running average divides by n, not the minibatch size."""
     ks = jax.random.split(jax.random.PRNGKey(9), 3)

@@ -50,3 +50,30 @@ def test_large_delay_degrades_or_holds(ds):
     """Sanity: τ=16 still decreases the objective (lr within theory bound)."""
     obj, _ = _run(ds, tau=16, lr=0.15)
     assert obj < 0.69
+
+
+def test_all_active_party_delays_are_zero():
+    """Regression (m = 2): every dominator's own block is fresh (Alg. 2),
+    so the schedule must zero the delay of ALL m active parties — not just
+    party 0's."""
+    layout = algorithms.PartyLayout.even(32, 8, 2)
+    for seed in range(8):
+        delays = staleness.party_delay_values(layout, tau=6, seed=seed)
+        assert delays.shape == (8,)
+        assert (delays[:layout.m] == 0).all(), (seed, delays)
+        assert (delays >= 0).all() and (delays <= 6).all()
+    # with enough seeds some passive party must actually lag (schedule
+    # is not degenerate)
+    any_lag = any(staleness.party_delay_values(layout, 6, s)[layout.m:].max()
+                  for s in range(8))
+    assert any_lag
+
+
+def test_dominator_delay_diagonal_is_zero():
+    """Multi-dominator schedule: d_{j,j} = 0 for every dominator j."""
+    layout = algorithms.PartyLayout.even(32, 8, 3)
+    for seed in range(4):
+        dd = staleness.party_dominator_delays(layout, tau=5, seed=seed)
+        assert dd.shape == (8, 3)
+        assert all(dd[j, j] == 0 for j in range(layout.m)), (seed, dd)
+        assert (dd >= 0).all() and (dd <= 5).all()
