@@ -44,6 +44,7 @@ def main() -> None:
         "engine": lambda: bench_engine.run(quick=args.quick),
         "multi_dominator": lambda: bench_engine.run_multi_dominator(
             quick=args.quick),
+        "pipelined": lambda: bench_engine.run_pipelined(quick=args.quick),
         "roofline": bench_roofline.run,
     }
     only = set(args.only.split(",")) if args.only else None

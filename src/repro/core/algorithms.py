@@ -169,6 +169,189 @@ def saga_epoch(problem: Problem, w, theta_tab, avg, x, y, lr, mask, key,
 
 
 # ---------------------------------------------------------------------------
+# pipelined oracle epochs (τ = 1 stale forward read)
+# ---------------------------------------------------------------------------
+#
+# The fused engine's *pipelined* epochs overlap the backward update of
+# round t with the forward partial products of round t+1 in ONE kernel
+# invocation.  Both halves execute from the same pre-update iterate, so
+# round t+1's ϑ is computed from the iterate that is one update old:
+#
+#     ϑ_t  = ϑ(X_{b_t} w_{t−1}, y_{b_t})          (stale forward read)
+#     w_{t+1} = w_t − η·mask·[X_{b_t}ᵀϑ_t/B + λ∇g(w_t)]
+#
+# with w_{−1} := w_0 (the epoch's prologue forward is fresh, so step 0 is
+# exactly the sequential step).  This is precisely a τ = 1 bounded-delay
+# (inconsistent-read) execution of the paper's model — Eqs. 4–5 with
+# delay ≤ 1 — so Theorems 1–6 cover it.  The epochs below are the exact
+# sequential references the engine's pipelined path is pinned against.
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps"))
+def pipelined_sgd_epoch(problem: Problem, w, x, y, lr, mask, key,
+                        batch: int, steps: int):
+    """Sequential oracle for the engine's pipelined VFB²-SGD schedule."""
+    idx = _batch_indices(key, x.shape[0], batch, steps)
+
+    def body(carry, inp):
+        w, z = carry                    # z: forward of this batch at w_{t-1}
+        ib, ib_next = inp
+        theta = problem.theta(z, y[ib])
+        z_next = x[ib_next] @ w         # forward(t+1) at the pre-update w_t
+        g = x[ib].T @ theta / ib.shape[0] + problem.lam * problem.reg_grad(w)
+        return (w - lr * mask * g, z_next), None
+
+    z0 = x[idx[0]] @ w                  # prologue (fresh)
+    (w, z), _ = jax.lax.scan(body, (w, z0), (idx[:-1], idx[1:]))
+    theta = problem.theta(z, y[idx[-1]])            # epilogue (backward only)
+    g = x[idx[-1]].T @ theta / batch + problem.lam * problem.reg_grad(w)
+    return w - lr * mask * g
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps"))
+def pipelined_svrg_epoch(problem: Problem, w, w_snap, mu, x, y, lr, mask,
+                         key, batch: int, steps: int):
+    """Pipelined VFB²-SVRG inner loop: ϑ₁ rides the stale forward read;
+    the snapshot column is constant, so ϑ₀ is delay-free by construction."""
+    idx = _batch_indices(key, x.shape[0], batch, steps)
+
+    def step(w, z, ib):
+        th1 = problem.theta(z, y[ib])
+        th0 = problem.theta(x[ib] @ w_snap, y[ib])
+        g1 = _grad_from_theta(problem, x[ib], w, th1)
+        g0 = _grad_from_theta(problem, x[ib], w_snap, th0)
+        return w - lr * mask * (g1 - g0 + mu)
+
+    def body(carry, inp):
+        w, z = carry
+        ib, ib_next = inp
+        z_next = x[ib_next] @ w
+        return (step(w, z, ib), z_next), None
+
+    z0 = x[idx[0]] @ w
+    (w, z), _ = jax.lax.scan(body, (w, z0), (idx[:-1], idx[1:]))
+    return step(w, z, idx[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps"))
+def pipelined_saga_epoch(problem: Problem, w, theta_tab, avg, x, y, lr,
+                         mask, key, batch: int, steps: int):
+    """Pipelined VFB²-SAGA: ϑ̃ reads/writes stay at application time (only
+    the forward read of the iterate is one step stale)."""
+    n = x.shape[0]
+    idx = _batch_indices(key, n, batch, steps)
+
+    def step(w, tab, avg, z, ib):
+        th_new = problem.theta(z, y[ib])
+        raw = x[ib].T @ (th_new - tab[ib])
+        v = raw / ib.shape[0] + avg + problem.lam * problem.reg_grad(w)
+        w = w - lr * mask * v
+        avg = avg + raw / n
+        tab = tab.at[ib].set(th_new)
+        return w, tab, avg
+
+    def body(carry, inp):
+        w, tab, avg, z = carry
+        ib, ib_next = inp
+        z_next = x[ib_next] @ w
+        w, tab, avg = step(w, tab, avg, z, ib)
+        return (w, tab, avg, z_next), None
+
+    z0 = x[idx[0]] @ w
+    (w, theta_tab, avg, z), _ = jax.lax.scan(
+        body, (w, theta_tab, avg, z0), (idx[:-1], idx[1:]))
+    w, theta_tab, avg = step(w, theta_tab, avg, z, idx[-1])
+    return w, theta_tab, avg
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps",
+                                             "m"))
+def multi_pipelined_sgd_epoch(problem: Problem, w, x, y, lr, mask, key,
+                              batch: int, steps: int, m: int):
+    """Pipelined multi-dominator VFB²-SGD: all m dominators' ϑ vectors of
+    round t are computed from the same stale read w_{t−1}."""
+    d = x.shape[1]
+    idx = _batch_indices(key, x.shape[0], m * batch, steps)
+
+    def dom_sum(ibf, th):
+        return jnp.einsum("jbd,jb->d", x[ibf].reshape(m, batch, d),
+                          th.reshape(m, batch)) / batch
+
+    def step(w, z, ibf):
+        theta = problem.theta(z, y[ibf])
+        g = dom_sum(ibf, theta) + m * problem.lam * problem.reg_grad(w)
+        return w - lr * mask * g
+
+    def body(carry, inp):
+        w, z = carry
+        ibf, ibf_next = inp
+        z_next = x[ibf_next] @ w
+        return (step(w, z, ibf), z_next), None
+
+    z0 = x[idx[0]] @ w
+    (w, z), _ = jax.lax.scan(body, (w, z0), (idx[:-1], idx[1:]))
+    return step(w, z, idx[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps",
+                                             "m"))
+def multi_pipelined_svrg_epoch(problem: Problem, w, w_snap, mu, x, y, lr,
+                               mask, key, batch: int, steps: int, m: int):
+    """Pipelined multi-dominator VFB²-SVRG inner loop."""
+    idx = _batch_indices(key, x.shape[0], m * batch, steps)
+
+    def step(w, z, ibf):
+        th1 = problem.theta(z, y[ibf])
+        th0 = problem.theta(x[ibf] @ w_snap, y[ibf])
+        v = x[ibf].T @ (th1 - th0) / batch + m * (
+            problem.lam * (problem.reg_grad(w) - problem.reg_grad(w_snap))
+            + mu)
+        return w - lr * mask * v
+
+    def body(carry, inp):
+        w, z = carry
+        ibf, ibf_next = inp
+        z_next = x[ibf_next] @ w
+        return (step(w, z, ibf), z_next), None
+
+    z0 = x[idx[0]] @ w
+    (w, z), _ = jax.lax.scan(body, (w, z0), (idx[:-1], idx[1:]))
+    return step(w, z, idx[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "batch", "steps",
+                                             "m"))
+def multi_pipelined_saga_epoch(problem: Problem, w, theta_tab, avg, x, y,
+                               lr, mask, key, batch: int, steps: int,
+                               m: int):
+    """Pipelined multi-dominator VFB²-SAGA (all m ϑ̃ writes at application
+    time; last write wins on duplicates, as in the fresh-path oracle)."""
+    n = x.shape[0]
+    idx = _batch_indices(key, n, m * batch, steps)
+
+    def step(w, tab, avg, z, ibf):
+        th_new = problem.theta(z, y[ibf])
+        rsum = x[ibf].T @ (th_new - tab[ibf])
+        v = rsum / batch + m * avg + m * problem.lam * problem.reg_grad(w)
+        w = w - lr * mask * v
+        avg = avg + rsum / n
+        tab = tab.at[ibf].set(th_new)
+        return w, tab, avg
+
+    def body(carry, inp):
+        w, tab, avg, z = carry
+        ibf, ibf_next = inp
+        z_next = x[ibf_next] @ w
+        w, tab, avg = step(w, tab, avg, z, ibf)
+        return (w, tab, avg, z_next), None
+
+    z0 = x[idx[0]] @ w
+    (w, theta_tab, avg, z), _ = jax.lax.scan(
+        body, (w, theta_tab, avg, z0), (idx[:-1], idx[1:]))
+    w, theta_tab, avg = step(w, theta_tab, avg, z, idx[-1])
+    return w, theta_tab, avg
+
+
+# ---------------------------------------------------------------------------
 # multi-dominator oracle epochs (m active parties concurrently launching
 # backward updates)
 # ---------------------------------------------------------------------------
@@ -299,13 +482,14 @@ def train(
     engine: str = "reference",  # "fused" => one compiled program per epoch
     engine_config=None,         # core.engine.EngineConfig when engine="fused"
     multi_dominator: bool = False,  # all m active parties update per round
+    pipelined: bool = False,    # τ=1 backward(t) ∥ forward(t+1) schedule
 ) -> TrainResult:
     n, d = x.shape
     m = layout.m
     if engine == "fused":
         return _train_fused(problem, x, y, layout, algo, epochs, lr, batch,
                             seed, active_only, w0, engine_config,
-                            multi_dominator)
+                            multi_dominator, pipelined)
     if engine != "reference":
         raise ValueError(f"unknown engine {engine}")
     x = jnp.asarray(x, jnp.float32)
@@ -325,28 +509,34 @@ def train(
         key, sub = jax.random.split(key)
         if algo == "sgd":
             if multi_dominator:
-                w = multi_sgd_epoch(problem, w, x, y, lr, mask, sub, batch,
-                                    steps, m)
+                fn = multi_pipelined_sgd_epoch if pipelined \
+                    else multi_sgd_epoch
+                w = fn(problem, w, x, y, lr, mask, sub, batch, steps, m)
             else:
-                w = sgd_epoch(problem, w, x, y, lr, mask, sub, batch, steps)
+                fn = pipelined_sgd_epoch if pipelined else sgd_epoch
+                w = fn(problem, w, x, y, lr, mask, sub, batch, steps)
         elif algo == "svrg":
             w_snap = w
             mu = full_gradient(problem, w_snap, x, y)
             if multi_dominator:
-                w = multi_svrg_epoch(problem, w, w_snap, mu, x, y, lr, mask,
-                                     sub, batch, steps, m)
+                fn = multi_pipelined_svrg_epoch if pipelined \
+                    else multi_svrg_epoch
+                w = fn(problem, w, w_snap, mu, x, y, lr, mask, sub, batch,
+                       steps, m)
             else:
-                w = svrg_epoch(problem, w, w_snap, mu, x, y, lr, mask, sub,
-                               batch, steps)
+                fn = pipelined_svrg_epoch if pipelined else svrg_epoch
+                w = fn(problem, w, w_snap, mu, x, y, lr, mask, sub, batch,
+                       steps)
         elif algo == "saga":
             if multi_dominator:
-                w, theta_tab, avg = multi_saga_epoch(
-                    problem, w, theta_tab, avg, x, y, lr, mask, sub, batch,
-                    steps, m)
+                fn = multi_pipelined_saga_epoch if pipelined \
+                    else multi_saga_epoch
+                w, theta_tab, avg = fn(problem, w, theta_tab, avg, x, y,
+                                       lr, mask, sub, batch, steps, m)
             else:
-                w, theta_tab, avg = saga_epoch(problem, w, theta_tab, avg,
-                                               x, y, lr, mask, sub, batch,
-                                               steps)
+                fn = pipelined_saga_epoch if pipelined else saga_epoch
+                w, theta_tab, avg = fn(problem, w, theta_tab, avg, x, y,
+                                       lr, mask, sub, batch, steps)
         else:
             raise ValueError(f"unknown algo {algo}")
         hist.append({"epoch": ep + 1, "objective": _eval(problem, w, x, y),
@@ -356,15 +546,20 @@ def train(
 
 def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
                  active_only, w0, engine_config,
-                 multi_dominator=False) -> TrainResult:
+                 multi_dominator=False, pipelined=False) -> TrainResult:
     """Hot-path trainer: every epoch is ONE device dispatch (secure
     aggregation, ϑ, and BUM updates all inside the compiled program).
     ``multi_dominator=True`` routes through the engine's m-active-party
-    epochs (one rank-k kernel pass carries all m dominators' ϑ vectors)."""
+    epochs (one rank-k kernel pass carries all m dominators' ϑ vectors);
+    ``pipelined=True`` additionally overlaps backward(t) with forward(t+1)
+    in a single kernel invocation per step (τ = 1 schedule).  The default
+    engine config donates the parameter carries, so back-to-back epochs
+    reuse buffers instead of allocating fresh ones."""
     from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
 
     n, d = x.shape
-    cfg = engine_config if engine_config is not None else EngineConfig()
+    cfg = engine_config if engine_config is not None \
+        else EngineConfig(donate=True)
     eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
     wq = eng.pack_w(np.zeros(d, np.float32) if w0 is None else w0)
     steps = max(1, n // batch)
@@ -378,24 +573,30 @@ def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
     for ep in range(epochs):
         key, sub = jax.random.split(key)
         if algo == "sgd":
-            wq = (eng.multi_sgd_epoch(wq, lr, sub, batch, steps)
-                  if multi_dominator
-                  else eng.sgd_epoch(wq, lr, sub, batch, steps))
+            if multi_dominator:
+                fn = eng.multi_pipelined_sgd_epoch if pipelined \
+                    else eng.multi_sgd_epoch
+            else:
+                fn = eng.pipelined_sgd_epoch if pipelined else eng.sgd_epoch
+            wq = fn(wq, lr, sub, batch, steps)
         elif algo == "svrg":
             wq_snap = wq
             muq = eng.full_gradient(wq_snap, sub)
-            wq = (eng.multi_svrg_epoch(wq, wq_snap, muq, lr, sub, batch,
-                                       steps)
-                  if multi_dominator
-                  else eng.svrg_epoch(wq, wq_snap, muq, lr, sub, batch,
-                                      steps))
+            if multi_dominator:
+                fn = eng.multi_pipelined_svrg_epoch if pipelined \
+                    else eng.multi_svrg_epoch
+            else:
+                fn = eng.pipelined_svrg_epoch if pipelined \
+                    else eng.svrg_epoch
+            wq = fn(wq, wq_snap, muq, lr, sub, batch, steps)
         elif algo == "saga":
             if multi_dominator:
-                wq, tabq, avgq = eng.multi_saga_epoch(wq, tabq, avgq, lr,
-                                                      sub, batch, steps)
+                fn = eng.multi_pipelined_saga_epoch if pipelined \
+                    else eng.multi_saga_epoch
             else:
-                wq, tabq, avgq = eng.saga_epoch(wq, tabq, avgq, lr, sub,
-                                                batch, steps)
+                fn = eng.pipelined_saga_epoch if pipelined \
+                    else eng.saga_epoch
+            wq, tabq, avgq = fn(wq, tabq, avgq, lr, sub, batch, steps)
         else:
             raise ValueError(f"unknown algo {algo}")
         hist.append({"epoch": ep + 1, "objective": eng.objective(wq),

@@ -28,6 +28,21 @@ parties, since each is the dominator of its own block).
 ``delayed_multi_sgd_epoch`` is the sequential oracle for that regime and
 ``run_delayed_multi_fused`` the engine realization (per-(party, dominator)
 ring buffers riding the scan, the m ϑ vectors in one rank-k kernel pass).
+
+Pipelined epochs are a τ = 1 schedule of this same model
+---------------------------------------------------------
+The engine's *pipelined* epochs (``core.engine``, ``pipelined=True`` on
+the runners below) overlap round t's BUM application with round t+1's
+forward partial products in ONE kernel invocation.  Because both halves
+execute from the same pre-update iterate, round t+1's ϑ is computed from
+an iterate exactly one update old — i.e. the pipelined schedule IS a
+bounded-delay execution with inconsistent-read delay τ = 1 (Eqs. 4–5),
+and the paper's Theorems 1–6 apply verbatim.  ``pipelined_*`` oracles in
+``core.algorithms`` pin that claim as exact sequential references; the
+``pipelined_delayed_*`` oracles here *compose* the τ = 1 stale forward
+read with the per-party delayed application above (the gradient entering
+party ℓ's ring buffer at step t is already a stale-read gradient), which
+is admissible with total delay τ + 1.
 """
 from __future__ import annotations
 
@@ -88,6 +103,43 @@ def delayed_sgd_epoch(problem: Problem, state: DelayedState, x, y, lr,
 
     st, _ = jax.lax.scan(body, state, idx)
     return st
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("problem", "batch", "steps", "tau"))
+def pipelined_delayed_sgd_epoch(problem: Problem, state: DelayedState, x, y,
+                                lr, delays, key, batch: int, steps: int,
+                                tau: int, mask=None):
+    """Sequential oracle for the *pipelined* stale-gradient epoch: the
+    gradient of step t is computed from the τ = 1 stale forward read
+    (ϑ_t from the iterate one update old; the epoch's first step is fresh)
+    and then ages in the per-party ring buffer exactly as in
+    :func:`delayed_sgd_epoch`.  Prologue/epilogue mirror the engine's
+    pipelined scan."""
+    n = x.shape[0]
+    idx = jax.random.randint(key, (steps, batch), 0, n)
+    upd = jnp.ones(x.shape[1], jnp.float32) if mask is None else mask
+
+    def step(st: DelayedState, z, ib):
+        theta = problem.theta(z, y[ib])
+        g = x[ib].T @ theta / ib.shape[0] \
+            + problem.lam * problem.reg_grad(st.w)
+        slot = st.t % (tau + 1)
+        buf = jax.lax.dynamic_update_index_in_dim(st.buf, g, slot, 0)
+        eff = jnp.maximum(st.t - delays, 0) % (tau + 1)
+        stale_g = jnp.take_along_axis(buf, eff[None, :], axis=0)[0]
+        return DelayedState(w=st.w - lr * upd * stale_g, buf=buf,
+                            t=st.t + 1)
+
+    def body(carry, inp):
+        st, z = carry
+        ib, ib_next = inp
+        z_next = x[ib_next] @ st.w      # forward(t+1) at the pre-update w_t
+        return (step(st, z, ib), z_next), None
+
+    z0 = x[idx[0]] @ state.w            # prologue (fresh)
+    (st, z), _ = jax.lax.scan(body, (state, z0), (idx[:-1], idx[1:]))
+    return step(st, z, idx[-1])         # epilogue (backward only)
 
 
 def party_delay_values(layout: PartyLayout, tau: int,
@@ -187,19 +239,62 @@ def delayed_multi_sgd_epoch(problem: Problem, state: MultiDelayedState, x,
     return st
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("problem", "batch", "steps", "tau", "m"))
+def pipelined_delayed_multi_sgd_epoch(problem: Problem,
+                                      state: MultiDelayedState, x, y, lr,
+                                      delays, key, batch: int, steps: int,
+                                      tau: int, m: int, mask=None):
+    """Pipelined multi-dominator stale-gradient oracle: the m dominators'
+    ϑ vectors of step t are computed from the τ = 1 stale forward read,
+    then each column ages in its own (d, m) ring buffer as in
+    :func:`delayed_multi_sgd_epoch`."""
+    n = x.shape[0]
+    d = x.shape[1]
+    idx = jax.random.randint(key, (steps, m * batch), 0, n)
+    upd = jnp.ones(d, jnp.float32) if mask is None else mask
+
+    def step(st: MultiDelayedState, z, ibf):
+        theta = problem.theta(z, y[ibf])
+        gg = jnp.einsum("jbd,jb->dj", x[ibf].reshape(m, batch, d),
+                        theta.reshape(m, batch)) / batch \
+            + problem.lam * problem.reg_grad(st.w)[:, None]
+        slot = st.t % (tau + 1)
+        buf = jax.lax.dynamic_update_index_in_dim(st.buf, gg, slot, 0)
+        eff = jnp.maximum(st.t - delays, 0) % (tau + 1)
+        stale = jnp.take_along_axis(buf, eff[None], axis=0)[0]
+        return MultiDelayedState(w=st.w - lr * upd * stale.sum(axis=1),
+                                 buf=buf, t=st.t + 1)
+
+    def body(carry, inp):
+        st, z = carry
+        ibf, ibf_next = inp
+        z_next = x[ibf_next] @ st.w
+        return (step(st, z, ibf), z_next), None
+
+    z0 = x[idx[0]] @ state.w
+    (st, z), _ = jax.lax.scan(body, (state, z0), (idx[:-1], idx[1:]))
+    return step(st, z, idx[-1])
+
+
 def run_delayed_fused(problem: Problem, x, y, layout: PartyLayout,
                       tau: int, epochs: int, lr: float, batch: int,
                       seed: int = 0, engine_config=None,
-                      active_only: bool = False) -> np.ndarray:
+                      active_only: bool = False,
+                      pipelined: bool = False) -> np.ndarray:
     """Bounded-delay VFB²-SGD on the fused engine: per-party gradient ring
     buffers ride the party-mapped scan, so a whole stale-gradient epoch is
     one compiled dispatch.  ``active_only=True`` freezes passive-party
-    blocks (the AFSVRG-VP baseline) on the delayed path as well.  Returns
-    the final (d,) iterate."""
+    blocks (the AFSVRG-VP baseline) on the delayed path as well.
+    ``pipelined=True`` routes through the engine's pipelined epoch (one
+    fused kernel invocation per interior step; the τ = 1 stale forward
+    read composes with the delay schedule — ``pipelined_delayed_sgd_epoch``
+    is the oracle).  Returns the final (d,) iterate."""
     from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
 
     n, d = np.asarray(x).shape
-    cfg = engine_config if engine_config is not None else EngineConfig()
+    cfg = engine_config if engine_config is not None \
+        else EngineConfig(donate=True)
     eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
     delays_q = jnp.asarray(party_delay_values(layout, tau, seed))
     wq = eng.pack_w(np.zeros(d, np.float32))
@@ -207,26 +302,31 @@ def run_delayed_fused(problem: Problem, x, y, layout: PartyLayout,
     t0 = jnp.zeros((), jnp.int32)
     steps = max(1, n // batch)
     key = jax.random.PRNGKey(seed)
+    epoch = eng.pipelined_delayed_sgd_epoch if pipelined \
+        else eng.delayed_sgd_epoch
     for _ in range(epochs):
         key, sub = jax.random.split(key)
-        wq, bufq, t0 = eng.delayed_sgd_epoch(wq, bufq, t0, delays_q, lr,
-                                             sub, batch, steps, tau)
+        wq, bufq, t0 = epoch(wq, bufq, t0, delays_q, lr, sub, batch,
+                             steps, tau)
     return eng.unpack_w(wq)
 
 
 def run_delayed_multi_fused(problem: Problem, x, y, layout: PartyLayout,
                             tau: int, epochs: int, lr: float, batch: int,
                             seed: int = 0, engine_config=None,
-                            active_only: bool = False) -> np.ndarray:
+                            active_only: bool = False,
+                            pipelined: bool = False) -> np.ndarray:
     """Multi-dominator bounded-delay VFB²-SGD on the fused engine: each
     party carries m = layout.m gradient ring buffers through the scan (one
     per dominator's update stream), each aging under its own (q, m) delay
-    schedule; the m ϑ vectors of every step ride one rank-k kernel pass.
+    schedule; the m ϑ vectors of every step ride one rank-k kernel pass
+    (``pipelined=True``: the same pass also carries round t+1's forward).
     Returns the final (d,) iterate."""
     from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
 
     n, d = np.asarray(x).shape
-    cfg = engine_config if engine_config is not None else EngineConfig()
+    cfg = engine_config if engine_config is not None \
+        else EngineConfig(donate=True)
     eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
     delays_qm = jnp.asarray(party_dominator_delays(layout, tau, seed))
     wq = eng.pack_w(np.zeros(d, np.float32))
@@ -234,9 +334,10 @@ def run_delayed_multi_fused(problem: Problem, x, y, layout: PartyLayout,
     t0 = jnp.zeros((), jnp.int32)
     steps = max(1, n // batch)
     key = jax.random.PRNGKey(seed)
+    epoch = eng.multi_pipelined_delayed_sgd_epoch if pipelined \
+        else eng.multi_delayed_sgd_epoch
     for _ in range(epochs):
         key, sub = jax.random.split(key)
-        wq, bufq, t0 = eng.multi_delayed_sgd_epoch(wq, bufq, t0, delays_qm,
-                                                   lr, sub, batch, steps,
-                                                   tau)
+        wq, bufq, t0 = epoch(wq, bufq, t0, delays_qm, lr, sub, batch,
+                             steps, tau)
     return eng.unpack_w(wq)

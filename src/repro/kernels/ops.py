@@ -50,10 +50,43 @@ def selective_scan(xa, dt, b_ssm, c_ssm, a_log, d_skip, *, chunk=128,
     return y
 
 
-@functools.partial(jax.jit, static_argnames=("lam", "block_b", "block_d",
-                                             "interpret", "mode", "denom"))
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d",
+                                             "interpret", "mode", "denom",
+                                             "split"))
+def _vfl_grad_jit(xb, w, theta, lam, *, block_b, block_d, interpret, mode,
+                  denom, split):
+    return _vg.vfl_grad(xb, w, theta, lam, block_b=block_b, block_d=block_d,
+                        interpret=interpret, mode=mode, denom=denom,
+                        split=split)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d",
+                                             "interpret", "mode", "denom",
+                                             "split"))
+def _vfl_grad_jit_no_w(xb, theta, *, block_b, block_d, interpret, mode,
+                       denom, split):
+    # w=None requires a concrete lam=0 (no λw term exists), so the no-w
+    # path keeps λ out of the traced signature entirely.
+    return _vg.vfl_grad(xb, None, theta, 0.0, block_b=block_b,
+                        block_d=block_d, interpret=interpret, mode=mode,
+                        denom=denom, split=split)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d",
+                                             "interpret", "mode", "denom",
+                                             "split"))
+def _vfl_grad_jit_lam0(xb, w, theta, *, block_b, block_d, interpret, mode,
+                       denom, split):
+    # Concrete λ=0 skips the λw term (and its SMEM operand) at trace time;
+    # this is also the only legal path when the split-batch sides carry
+    # different column counts (λw is then undefined).
+    return _vg.vfl_grad(xb, w, theta, 0.0, block_b=block_b,
+                        block_d=block_d, interpret=interpret, mode=mode,
+                        denom=denom, split=split)
+
+
 def vfl_grad(xb, w, theta, lam=0.0, *, block_b=128, block_d=128,
-             interpret=None, mode="fused", denom=None):
+             interpret=None, mode="fused", denom=None, split=None):
     """Batched rank-k fused VFL kernel: z = xb@w, g = xbᵀθ/denom + λw.
 
     ``w``/``theta`` may carry a trailing M axis (M concurrent iterates /
@@ -63,11 +96,32 @@ def vfl_grad(xb, w, theta, lam=0.0, *, block_b=128, block_d=128,
     ``lam=0``): the pure-XᵀΘ BUM application streams no weight operand —
     the engine's multi-dominator epochs route their M = m per-dominator
     backward through this.
+
+    ``lam`` is a **traced operand** of the jitted wrapper — sweeping the
+    regularizer (hyperparameter search, per-epoch schedules) reuses one
+    compilation instead of recompiling per value.
+
+    ``split`` activates the split-batch fused form (pipelined epochs):
+    rows [0, split) are the backward block (ϑ rows), rows [split, B) the
+    forward block (returned z rows); see ``repro.kernels.vfl_grad``.
     """
     if interpret is None:
         interpret = _default_interpret()
-    return _vg.vfl_grad(xb, w, theta, lam, block_b=block_b, block_d=block_d,
-                        interpret=interpret, mode=mode, denom=denom)
+    if w is None:
+        if not _vg._concrete_zero(lam):
+            raise ValueError("w=None requires a concrete lam=0 "
+                             "(no λw term exists without w)")
+        return _vfl_grad_jit_no_w(xb, theta, block_b=block_b,
+                                  block_d=block_d, interpret=interpret,
+                                  mode=mode, denom=denom, split=split)
+    if _vg._concrete_zero(lam):
+        return _vfl_grad_jit_lam0(xb, w, theta, block_b=block_b,
+                                  block_d=block_d, interpret=interpret,
+                                  mode=mode, denom=denom, split=split)
+    return _vfl_grad_jit(xb, w, theta, jnp.asarray(lam, jnp.float32),
+                         block_b=block_b, block_d=block_d,
+                         interpret=interpret, mode=mode, denom=denom,
+                         split=split)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_k",

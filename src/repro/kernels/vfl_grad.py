@@ -13,8 +13,8 @@ Batched rank-k form: one invocation processes **M concurrent iterates /
 each issue a ϑ), and the variance-reduced algorithms (SVRG evaluates the
 current iterate and the snapshot, M = 2) — in a *single* HBM pass over X:
 
-    z = X @ W        (B, M)   forward partial products, one column per iterate
-    g = XᵀΘ/B + λW   (D, M)   BUM gradients, one column per ϑ
+    z = X @ W        (B, Mw)   forward partial products, one column per iterate
+    g = XᵀΘ/B + λW   (D, Mθ)   BUM gradients, one column per ϑ
 
 Both reductions complete **in-kernel**: z is accumulated across feature
 tiles in a full-minibatch VMEM scratch (so callers never re-sum partials on
@@ -36,6 +36,23 @@ d % q != 0) work without caller-side ceremony.
                  applied while the next round's partials are produced);
   * "forward"  — z only (pre-aggregation, ϑ not yet known);
   * "backward" — g only (post-aggregation BUM application).
+
+Split-batch fused form (the pipelined-epoch hot path): the two sides of a
+fused invocation may ride **distinct minibatch row-blocks** concatenated
+into one X operand.  ``split=Bb`` declares rows [0, Bb) backward-only
+(round t's BUM application) and rows [Bb, B) forward-only (round t+1's
+partial products): ϑ is supplied for the backward rows alone (the wrapper
+zero-masks the forward rows out of the XᵀΘ contraction, padding-aware) and
+z is returned for the forward rows alone.  The column counts of the two
+sides are then independent — e.g. a single forward iterate next to M = m
+per-dominator ϑ columns (block-diagonal Θ) — so one kernel grid streams
+the w/ϑ tiles once and serves backward(t) ∥ forward(t+1) in a single
+launch instead of two.
+
+λ is a **traced scalar operand** (SMEM), not a compile-time constant, so
+sweeping the regularizer never recompiles the kernel.  It is required to
+be a concrete 0 only where the λW term is undefined (``w=None`` backward,
+or split-batch calls whose side column counts differ).
 """
 from __future__ import annotations
 
@@ -43,6 +60,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -51,145 +69,247 @@ def _round_up(v: int, m: int) -> int:
     return (v + m - 1) // m * m
 
 
-def _vfl_kernel(*refs, lam: float, denom: int, block_b: int, fwd: bool,
-                bwd: bool, has_w: bool):
+def _concrete_zero(lam) -> bool:
+    """True iff ``lam`` is a host scalar equal to 0 (tracers are never)."""
+    if isinstance(lam, (int, float, np.floating, np.integer)):
+        return float(lam) == 0.0
+    if isinstance(lam, (jnp.ndarray, np.ndarray)) \
+            and not isinstance(lam, jax.core.Tracer):
+        return float(lam) == 0.0
+    return False
+
+
+def _vfl_kernel(*refs, denom: int, block_b: int, fwd: bool, bwd: bool,
+                has_w: bool, use_lamw: bool, nsplit: int | None):
     # Single-sided modes carry only their own operands/outputs (no HBM
     # traffic for a dead side); ref order follows the wrapper's specs.
     # ``has_w=False`` (backward with ``w=None``) additionally drops the
     # weight operand — the engine's multi-dominator BUM application only
     # needs XᵀΘ, so no dead (D, M) block is streamed into VMEM.
-    if fwd and bwd:
-        x_ref, w_ref, theta_ref, z_ref, g_ref, z_acc, g_acc = refs
-    elif fwd:
-        x_ref, w_ref, z_ref, z_acc = refs
-    elif has_w:
-        x_ref, w_ref, theta_ref, g_ref, g_acc = refs
-    else:
-        x_ref, theta_ref, g_ref, g_acc = refs
-        w_ref = None
+    # ``nsplit`` (split-batch form) is the number of backward-only row
+    # tiles: tiles bi < nsplit skip the forward dot, tiles bi >= nsplit
+    # skip the backward accumulate — each side's MXU work runs on its own
+    # rows only, so the fused launch does the same flops as two
+    # single-sided launches.
+    it = iter(refs)
+    x_ref = next(it)
+    w_ref = next(it) if has_w else None
+    theta_ref = next(it) if bwd else None
+    lam_ref = next(it) if use_lamw else None
+    z_ref = next(it) if fwd else None
+    g_ref = next(it) if bwd else None
+    z_acc = next(it) if fwd else None
+    g_acc = next(it) if bwd else None
+
     di = pl.program_id(0)
     bi = pl.program_id(1)
     nb = pl.num_programs(1)
 
     x = x_ref[...].astype(jnp.float32)                    # (Bb, Db)
-    w = None if w_ref is None else w_ref[...].astype(jnp.float32)  # (Db, M)
+    w = None if w_ref is None else w_ref[...].astype(jnp.float32)  # (Db, Mw)
 
     if fwd:
-        # forward partials for this (feature, batch) tile: rank-k MXU pass
-        zt = jnp.dot(x, w, preferred_element_type=jnp.float32)   # (Bb, M)
-        sl = pl.ds(bi * block_b, block_b)
+        def _z_work():
+            # forward partials for this (feature, batch) tile: rank-k MXU
+            zt = jnp.dot(x, w, preferred_element_type=jnp.float32)
+            sl = pl.ds(bi * block_b, block_b)
 
-        @pl.when(di == 0)
-        def _z_init():
-            z_acc[sl, :] = zt
+            @pl.when(di == 0)
+            def _z_init():
+                z_acc[sl, :] = zt
 
-        @pl.when(di > 0)
-        def _z_accum():
-            z_acc[sl, :] += zt
+            @pl.when(di > 0)
+            def _z_accum():
+                z_acc[sl, :] += zt
 
-        # Written on every visit; the grid is sequential, so the final
-        # feature pass (di == nD-1) is the last writer and the HBM block
-        # holds the fully reduced z.  No out-of-kernel reduction remains.
-        z_ref[...] = z_acc[sl, :]
+            # Written on every visit; the grid is sequential, so the final
+            # feature pass (di == nD-1) is the last writer and the HBM
+            # block holds the fully reduced z.  No out-of-kernel reduction
+            # remains.  (Split-batch: backward-row tiles never write their
+            # z block — the wrapper slices those rows away.)
+            z_ref[...] = z_acc[sl, :]
+
+        if nsplit is None:
+            _z_work()
+        else:
+            pl.when(bi >= nsplit)(_z_work)
 
     if bwd:
         @pl.when(bi == 0)
         def _g_init():
             g_acc[...] = jnp.zeros_like(g_acc)
 
-        th = theta_ref[...].astype(jnp.float32)           # (Bb, M)
-        # backward accumulate: XᵀΘ, f32 in VMEM
-        g_acc[...] += jnp.dot(x.T, th, preferred_element_type=jnp.float32)
+        def _g_work():
+            th = theta_ref[...].astype(jnp.float32)       # (Bb, Mθ)
+            # backward accumulate: XᵀΘ, f32 in VMEM
+            g_acc[...] += jnp.dot(x.T, th,
+                                  preferred_element_type=jnp.float32)
+
+        if nsplit is None:
+            _g_work()
+        else:
+            pl.when(bi < nsplit)(_g_work)
 
         @pl.when(bi == nb - 1)
         def _g_finalize():
             acc = g_acc[...] / denom
-            if has_w:
-                acc = acc + lam * w
+            if use_lamw:
+                acc = acc + lam_ref[0, 0] * w
             g_ref[...] = acc.astype(g_ref.dtype)
 
 
-def vfl_grad(xb, w, theta, lam: float = 0.0, *, block_b: int = 128,
+def vfl_grad(xb, w, theta, lam=0.0, *, block_b: int = 128,
              block_d: int = 128, interpret: bool = True, mode: str = "fused",
-             denom: int | None = None):
-    """xb: (B, D); w: (D,) or (D, M); theta: (B,), (B, M) or None.
+             denom: int | None = None, split: int | None = None):
+    """xb: (B, D); w: (D,), (D, Mw) or None; theta: (B,), (B, Mθ) or None.
 
     Returns ``(z, g)`` with z = xb @ w fully reduced in-kernel (shape (B,)
-    or (B, M)) and g = xbᵀθ/denom + λw (shape (D,) or (D, M)).  ``denom``
-    defaults to B (the minibatch gradient 1/B scaling); SAGA's running
-    average passes n.  Rank-1 inputs get rank-1 outputs.
+    or (B, Mw)) and g = xbᵀθ/denom + λw (shape (D,) or (D, Mθ)).  ``denom``
+    defaults to the number of backward rows (the minibatch gradient 1/B
+    scaling); SAGA's running average passes n.  Rank-1 inputs get rank-1
+    outputs (per side).  ``lam`` may be a traced scalar — distinct
+    regularizer values share one compilation.
 
     Single-sided modes return ``None`` for the inactive side and carry no
     HBM traffic for it; ``theta=None`` is allowed (and ϑ-free) in
     ``mode="forward"``, and ``w=None`` is allowed in ``mode="backward"``
     when ``lam == 0`` (pure XᵀΘ — the multi-dominator BUM application;
     the dead weight block is then never streamed into VMEM).
+
+    ``split`` (fused mode only) activates the **split-batch** form: xb is
+    the concatenation of a backward row-block (rows [0, split)) and a
+    forward row-block (rows [split, B)).  ``theta`` then has ``split``
+    rows (it is zero-masked over the forward rows before the XᵀΘ pass) and
+    the returned z covers only the forward rows.  The two sides' column
+    counts Mw/Mθ may differ; the λw term requires Mw == Mθ (pass a
+    concrete ``lam=0`` otherwise — the engine adds its regularizer
+    outside the kernel).
     """
     b, d = xb.shape
     assert mode in ("fused", "forward", "backward"), mode
+    if split is not None:
+        assert mode == "fused", "split-batch form is fused-mode only"
+        assert 0 < split < b, (split, b)
     if w is None:
         assert mode == "backward", "w=None only valid in mode='backward'"
-        assert lam == 0.0, "the λw term needs w; pass lam=0 with w=None"
+        if not _concrete_zero(lam):
+            raise ValueError("the λw term needs w; pass a concrete lam=0 "
+                             "with w=None")
         assert theta is not None
-        squeeze = (theta.ndim == 1)
-        w2 = None
-        m = 1 if squeeze else theta.shape[1]
+        w2, mw = None, None
+        squeeze_z = False
     else:
-        squeeze = (w.ndim == 1)
+        squeeze_z = (w.ndim == 1)
         w2 = w[:, None] if w.ndim == 1 else w
-        m = w2.shape[1]
+        mw = w2.shape[1]
     if theta is None:
         assert mode == "forward", "theta required outside mode='forward'"
-        th2 = None
+        th2, mth = None, None
+        squeeze_g = False
     else:
+        squeeze_g = (theta.ndim == 1)
         th2 = theta[:, None] if theta.ndim == 1 else theta
-        assert th2.shape == (b, m), (th2.shape, (b, m))
-    denom = b if denom is None else int(denom)
-
-    # Pad to tile multiples (sublane 8 for B, lane 128 for D) instead of
-    # rejecting odd shapes; zero rows/cols contribute zero to both products.
-    block_b = min(block_b, _round_up(b, 8))
-    block_d = min(block_d, _round_up(d, 128))
-    bp, dp = _round_up(b, block_b), _round_up(d, block_d)
-    if bp != b or dp != d:
-        xb = jnp.pad(xb, ((0, bp - b), (0, dp - d)))
-        if w2 is not None:
-            w2 = jnp.pad(w2, ((0, dp - d), (0, 0)))
-        if th2 is not None:
-            th2 = jnp.pad(th2, ((0, bp - b), (0, 0)))
-    nb, nd = bp // block_b, dp // block_d
+        mth = th2.shape[1]
+        nrows_bwd = b if split is None else split
+        assert th2.shape[0] == nrows_bwd, (th2.shape, nrows_bwd)
+        if split is None and mw is not None:
+            assert mw == mth, (mw, mth)
+    denom = (b if split is None else split) if denom is None else int(denom)
 
     fwd = mode in ("fused", "forward")
     bwd = mode in ("fused", "backward")
     has_w = w2 is not None
-    kernel = functools.partial(_vfl_kernel, lam=lam, denom=denom,
-                               block_b=block_b, fwd=fwd, bwd=bwd,
-                               has_w=has_w)
+    # λw is only defined when both sides share a column count; the traced
+    # operand is skipped entirely for a concrete zero (no dead SMEM read).
+    use_lamw = bwd and has_w and mw == mth and not _concrete_zero(lam)
+    if bwd and not use_lamw and not _concrete_zero(lam):
+        raise ValueError(
+            "nonzero lam requires w with matching column counts "
+            f"(Mw={mw}, Mθ={mth}); pass a concrete lam=0 and apply the "
+            "regularizer outside the kernel")
+
+    # Pad to tile multiples instead of rejecting odd shapes; zero rows/cols
+    # contribute zero to both products.  The 128-lane rounding is a Mosaic
+    # tiling requirement; interpret mode (off-TPU validation) has no tiling
+    # constraint, so it rounds to the 8-sublane granule only and the padded
+    # copy volume stops dominating emulated runs.
+    lane = 128 if not interpret else 8
+    block_d = min(block_d, _round_up(d, lane))
+    dp = _round_up(d, block_d)
+    if split is None:
+        block_b = min(block_b, _round_up(b, 8))
+        bp = _round_up(b, block_b)
+        nsplit = None
+        if bp != b or dp != d:
+            xb = jnp.pad(xb, ((0, bp - b), (0, dp - d)))
+            if th2 is not None:
+                th2 = jnp.pad(th2, ((0, bp - b), (0, 0)))
+    else:
+        # Per-side row padding so every row tile is purely backward or
+        # purely forward — the kernel specializes on the tile index and
+        # each side's MXU pass touches only its own rows.
+        bf = b - split
+        block_b = min(block_b, _round_up(split, 8), _round_up(bf, 8))
+        split_p, bf_p = _round_up(split, block_b), _round_up(bf, block_b)
+        bp = split_p + bf_p
+        nsplit = split_p // block_b
+        if split_p != split or bf_p != bf or dp != d:
+            xb = jnp.concatenate([
+                jnp.pad(xb[:split], ((0, split_p - split), (0, dp - d))),
+                jnp.pad(xb[split:], ((0, bf_p - bf), (0, dp - d)))])
+        # ϑ rows live on the backward tiles; the forward tiles' (never
+        # read) Θ blocks stay zero.
+        th2 = jnp.pad(th2, ((0, bp - split), (0, 0)))
+    if w2 is not None and dp != d:
+        w2 = jnp.pad(w2, ((0, dp - d), (0, 0)))
+    nb, nd = bp // block_b, dp // block_d
+
+    kernel = functools.partial(_vfl_kernel, denom=denom, block_b=block_b,
+                               fwd=fwd, bwd=bwd, has_w=has_w,
+                               use_lamw=use_lamw, nsplit=nsplit)
     # Mode-specific specs: a single-sided call neither streams the unused
-    # operand into VMEM nor DMAs a dead output back to HBM.
-    th_spec = pl.BlockSpec((block_b, m), lambda di, bi: (bi, 0))
-    z_spec = (pl.BlockSpec((block_b, m), lambda di, bi: (bi, 0)),
-              jax.ShapeDtypeStruct((bp, m), jnp.float32),
-              pltpu.VMEM((bp, m), jnp.float32))
-    g_spec = (pl.BlockSpec((block_d, m), lambda di, bi: (di, 0)),
-              jax.ShapeDtypeStruct((dp, m), jnp.float32),
-              pltpu.VMEM((block_d, m), jnp.float32))
-    sides = ([z_spec] if fwd else []) + ([g_spec] if bwd else [])
-    w_spec = pl.BlockSpec((block_d, m), lambda di, bi: (di, 0))
+    # operand into VMEM nor DMAs a dead output back to HBM.  A dead side's
+    # column count is None, so each side's specs are built only under its
+    # own guard.
+    in_specs = [pl.BlockSpec((block_b, block_d), lambda di, bi: (bi, di))]
+    operands = (xb,)
+    if has_w:
+        in_specs.append(pl.BlockSpec((block_d, mw), lambda di, bi: (di, 0)))
+        operands += (w2,)
+    if bwd:
+        in_specs.append(pl.BlockSpec((block_b, mth), lambda di, bi: (bi, 0)))
+        operands += (th2,)
+    if use_lamw:
+        in_specs.append(pl.BlockSpec((1, 1), lambda di, bi: (0, 0),
+                                     memory_space=pltpu.SMEM))
+        operands += (jnp.asarray(lam, jnp.float32).reshape(1, 1),)
+    sides = []
+    if fwd:
+        sides.append((pl.BlockSpec((block_b, mw), lambda di, bi: (bi, 0)),
+                      jax.ShapeDtypeStruct((bp, mw), jnp.float32),
+                      pltpu.VMEM((bp, mw), jnp.float32)))
+    if bwd:
+        sides.append((pl.BlockSpec((block_d, mth), lambda di, bi: (di, 0)),
+                      jax.ShapeDtypeStruct((dp, mth), jnp.float32),
+                      pltpu.VMEM((block_d, mth), jnp.float32)))
     outs = pl.pallas_call(
         kernel,
         grid=(nd, nb),
-        in_specs=[
-            pl.BlockSpec((block_b, block_d), lambda di, bi: (bi, di)),
-        ] + ([w_spec] if has_w else []) + ([th_spec] if bwd else []),
+        in_specs=in_specs,
         out_specs=[s[0] for s in sides],
         out_shape=[s[1] for s in sides],
         scratch_shapes=[s[2] for s in sides],
         interpret=interpret,
-    )(xb, *((w2,) if has_w else ()), *((th2,) if bwd else ()))
-    z = outs[0][:b] if fwd else None
+    )(*operands)
+    if not fwd:
+        z = None
+    elif split is None:
+        z = outs[0][:b]
+    else:
+        z = outs[0][split_p:split_p + (b - split)]   # the forward rows
     g = outs[-1][:d] if bwd else None
-    if squeeze:
-        z = None if z is None else z[:, 0]
-        g = None if g is None else g[:, 0]
+    if squeeze_z and z is not None:
+        z = z[:, 0]
+    if squeeze_g and g is not None:
+        g = g[:, 0]
     return z, g

@@ -11,7 +11,8 @@ import numpy as np
 import pytest
 
 from repro.core import algorithms, losses, staleness
-from repro.core.engine import EngineConfig, FusedEngine, pack_vec, unpack_vec
+from repro.core.engine import (EngineConfig, FusedEngine, pack_vec,
+                               scan_body_primitive_counts, unpack_vec)
 from repro.data.synthetic import classification_dataset
 
 NTOTAL, D, BATCH = 1000, 50, 32
@@ -358,6 +359,314 @@ def test_train_multi_dominator_fused_matches_reference(ds, prob, algo):
     np.testing.assert_allclose(fused.w, ref.w, atol=1e-5, rtol=0)
     for hf, hr in zip(fused.history, ref.history):
         assert abs(hf["objective"] - hr["objective"]) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# pipelined epochs (backward(t) ∥ forward(t+1), ONE kernel invocation per
+# step) vs their τ = 1 sequential oracles
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_sgd_matches_oracle(ds, layout, prob):
+    x, y, mask = _ref_inputs(ds, layout)
+    key = jax.random.PRNGKey(20)
+    steps = ds.x_train.shape[0] // BATCH
+    w_ref = algorithms.pipelined_sgd_epoch(prob, jnp.zeros(D), x, y, 0.5,
+                                           mask, key, BATCH, steps)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off"))
+    wq = eng.pipelined_sgd_epoch(eng.pack_w(np.zeros(D)), 0.5, key, BATCH,
+                                 steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_pipelined_schedule_is_genuinely_stale(ds, layout, prob):
+    """The pipelined trajectory must differ from the fresh sequential one
+    (ϑ reads are one update old) while step 0 stays exactly sequential —
+    a regression against silently collapsing to the unpipelined path."""
+    x, y, mask = _ref_inputs(ds, layout)
+    key = jax.random.PRNGKey(21)
+    steps = ds.x_train.shape[0] // BATCH
+    w_seq = algorithms.sgd_epoch(prob, jnp.zeros(D), x, y, 0.5, mask, key,
+                                 BATCH, steps)
+    w_pipe = algorithms.pipelined_sgd_epoch(prob, jnp.zeros(D), x, y, 0.5,
+                                            mask, key, BATCH, steps)
+    assert float(jnp.abs(w_pipe - w_seq).max()) > 1e-4
+    # a single-step epoch has no interior step: prologue is fresh, so the
+    # two schedules coincide exactly
+    w1_seq = algorithms.sgd_epoch(prob, jnp.zeros(D), x, y, 0.5, mask, key,
+                                  BATCH, 1)
+    w1_pipe = algorithms.pipelined_sgd_epoch(prob, jnp.zeros(D), x, y, 0.5,
+                                             mask, key, BATCH, 1)
+    np.testing.assert_allclose(np.asarray(w1_pipe), np.asarray(w1_seq),
+                               atol=1e-7, rtol=0)
+
+
+def test_pipelined_svrg_matches_oracle(ds, layout, prob):
+    x, y, mask = _ref_inputs(ds, layout)
+    key = jax.random.PRNGKey(22)
+    steps = ds.x_train.shape[0] // BATCH
+    w0 = jnp.zeros(D)
+    mu = algorithms.full_gradient(prob, w0, x, y)
+    w_ref = algorithms.pipelined_svrg_epoch(prob, w0, w0, mu, x, y, 0.5,
+                                            mask, key, BATCH, steps)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off"))
+    wq0 = eng.pack_w(np.zeros(D))
+    muq = eng.full_gradient(wq0, key)
+    wq = eng.pipelined_svrg_epoch(wq0, wq0, muq, 0.5, key, BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_pipelined_saga_matches_oracle(ds, layout, prob):
+    x, y, mask = _ref_inputs(ds, layout)
+    key = jax.random.PRNGKey(23)
+    steps = ds.x_train.shape[0] // BATCH
+    tab = prob.theta(x @ jnp.zeros(D), y)
+    avg = x.T @ tab / x.shape[0]
+    w_ref, tab_ref, _ = algorithms.pipelined_saga_epoch(
+        prob, jnp.zeros(D), tab, avg, x, y, 0.5, mask, key, BATCH, steps)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off"))
+    wq0 = eng.pack_w(np.zeros(D))
+    tabq, avgq = eng.saga_init(wq0, key)
+    wq, tabq, avgq = eng.pipelined_saga_epoch(wq0, tabq, avgq, 0.5, key,
+                                              BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+    np.testing.assert_allclose(np.asarray(tabq[0]), np.asarray(tab_ref),
+                               atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("secure", ["two_tree", "ring"])
+def test_pipelined_secure_modes_are_lossless(ds, layout, prob, secure):
+    key = jax.random.PRNGKey(24)
+    steps = ds.x_train.shape[0] // BATCH
+    base = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                       EngineConfig(secure="off"))
+    w_base = base.unpack_w(base.pipelined_sgd_epoch(
+        base.pack_w(np.zeros(D)), 0.5, key, BATCH, steps))
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure=secure))
+    w_sec = eng.unpack_w(eng.pipelined_sgd_epoch(
+        eng.pack_w(np.zeros(D)), 0.5, key, BATCH, steps))
+    np.testing.assert_allclose(w_sec, w_base, atol=1e-5, rtol=0)
+
+
+def test_pipelined_kernel_routing_matches_jnp(ds, layout, prob):
+    """The split-batch fused kernel invocation and the jnp two-block
+    contraction produce the same pipelined epoch."""
+    key = jax.random.PRNGKey(25)
+    jnp_eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                          EngineConfig(secure="off", use_kernel=False))
+    krn_eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                          EngineConfig(secure="off", use_kernel=True))
+    w_j = jnp_eng.unpack_w(jnp_eng.pipelined_sgd_epoch(
+        jnp_eng.pack_w(np.zeros(D)), 0.5, key, BATCH, 4))
+    w_k = krn_eng.unpack_w(krn_eng.pipelined_sgd_epoch(
+        krn_eng.pack_w(np.zeros(D)), 0.5, key, BATCH, 4))
+    np.testing.assert_allclose(w_k, w_j, atol=1e-5, rtol=0)
+
+
+def test_pipelined_one_kernel_invocation_per_step(ds, layout, prob):
+    """The acceptance audit: on the kernel path the pipelined scan body
+    contains exactly ONE pallas_call (the sequential epoch's two)."""
+    key = jax.random.PRNGKey(26)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off", use_kernel=True))
+    wq = eng.pack_w(np.zeros(D))
+    jx_pipe = eng.pipelined_sgd_epoch_jaxpr(wq, 0.3, key, BATCH, 8)
+    assert scan_body_primitive_counts(jx_pipe, "pallas_call") == [1]
+    jx_seq = eng.sgd_epoch_jaxpr(wq, 0.3, key, BATCH, 8)
+    assert scan_body_primitive_counts(jx_seq, "pallas_call") == [2]
+
+
+def test_pipelined_delayed_matches_oracle(ds, layout, prob):
+    tau, lr, epochs, seed = 4, 0.3, 3, 0
+    delays = staleness.party_delays(layout, D, tau, seed=seed)
+    st = staleness.init_state(D, tau)
+    x, y, _ = _ref_inputs(ds, layout)
+    key = jax.random.PRNGKey(seed)
+    steps = ds.x_train.shape[0] // BATCH
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        st = staleness.pipelined_delayed_sgd_epoch(
+            prob, st, x, y, lr, jnp.asarray(delays), sub, BATCH, steps, tau)
+    w_fused = staleness.run_delayed_fused(prob, ds.x_train, ds.y_train,
+                                          layout, tau, epochs, lr, BATCH,
+                                          seed=seed, pipelined=True)
+    np.testing.assert_allclose(w_fused, np.asarray(st.w), atol=1e-5, rtol=0)
+
+
+def test_pipelined_delayed_active_only_freezes_passive_blocks(ds, layout,
+                                                              prob):
+    tau = 4
+    w = staleness.run_delayed_fused(prob, ds.x_train, ds.y_train, layout,
+                                    tau, 2, 0.3, BATCH, seed=0,
+                                    active_only=True, pipelined=True)
+    active = layout.update_mask(D, True)
+    assert np.abs(w[active == 0]).max() == 0.0
+    assert np.abs(w[active == 1]).max() > 0.0
+    st = staleness.init_state(D, tau)
+    x, y, _ = _ref_inputs(ds, layout)
+    delays = staleness.party_delays(layout, D, tau, seed=0)
+    key = jax.random.PRNGKey(0)
+    steps = ds.x_train.shape[0] // BATCH
+    for _ in range(2):
+        key, sub = jax.random.split(key)
+        st = staleness.pipelined_delayed_sgd_epoch(
+            prob, st, x, y, 0.3, jnp.asarray(delays), sub, BATCH, steps,
+            tau, mask=jnp.asarray(active))
+    np.testing.assert_allclose(w, np.asarray(st.w), atol=1e-5, rtol=0)
+
+
+def test_multi_pipelined_sgd_matches_oracle(ds, mlayout, prob):
+    x, y, _ = _ref_inputs(ds, mlayout)
+    mask = jnp.asarray(mlayout.update_mask(D, False))
+    key = jax.random.PRNGKey(27)
+    steps = ds.x_train.shape[0] // BATCH
+    w_ref = algorithms.multi_pipelined_sgd_epoch(
+        prob, jnp.zeros(D), x, y, 0.5, mask, key, BATCH, steps, mlayout.m)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, mlayout,
+                      EngineConfig(secure="off"))
+    wq = eng.multi_pipelined_sgd_epoch(eng.pack_w(np.zeros(D)), 0.5, key,
+                                       BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_multi_pipelined_svrg_matches_oracle(ds, mlayout, prob):
+    x, y, _ = _ref_inputs(ds, mlayout)
+    mask = jnp.asarray(mlayout.update_mask(D, False))
+    key = jax.random.PRNGKey(28)
+    steps = ds.x_train.shape[0] // BATCH
+    w0 = jnp.zeros(D)
+    mu = algorithms.full_gradient(prob, w0, x, y)
+    w_ref = algorithms.multi_pipelined_svrg_epoch(
+        prob, w0, w0, mu, x, y, 0.5, mask, key, BATCH, steps, mlayout.m)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, mlayout,
+                      EngineConfig(secure="off"))
+    wq0 = eng.pack_w(np.zeros(D))
+    muq = eng.full_gradient(wq0, key)
+    wq = eng.multi_pipelined_svrg_epoch(wq0, wq0, muq, 0.5, key, BATCH,
+                                        steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_multi_pipelined_saga_matches_oracle(ds, mlayout, prob):
+    x, y, _ = _ref_inputs(ds, mlayout)
+    mask = jnp.asarray(mlayout.update_mask(D, False))
+    key = jax.random.PRNGKey(29)
+    steps = ds.x_train.shape[0] // BATCH
+    tab = prob.theta(x @ jnp.zeros(D), y)
+    avg = x.T @ tab / x.shape[0]
+    w_ref, tab_ref, _ = algorithms.multi_pipelined_saga_epoch(
+        prob, jnp.zeros(D), tab, avg, x, y, 0.5, mask, key, BATCH, steps,
+        mlayout.m)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, mlayout,
+                      EngineConfig(secure="off"))
+    wq0 = eng.pack_w(np.zeros(D))
+    tabq, avgq = eng.saga_init(wq0, key)
+    wq, tabq, avgq = eng.multi_pipelined_saga_epoch(wq0, tabq, avgq, 0.5,
+                                                    key, BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+    np.testing.assert_allclose(np.asarray(tabq[0]), np.asarray(tab_ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_multi_pipelined_delayed_matches_oracle(ds, mlayout, prob):
+    tau, lr, epochs, seed = 4, 0.3, 3, 0
+    m = mlayout.m
+    delays = staleness.dominator_delays_by_coord(mlayout, D, tau, seed=seed)
+    st = staleness.init_multi_state(D, tau, m)
+    x, y, _ = _ref_inputs(ds, mlayout)
+    key = jax.random.PRNGKey(seed)
+    steps = ds.x_train.shape[0] // BATCH
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        st = staleness.pipelined_delayed_multi_sgd_epoch(
+            prob, st, x, y, lr, jnp.asarray(delays), sub, BATCH, steps,
+            tau, m)
+    w_fused = staleness.run_delayed_multi_fused(
+        prob, ds.x_train, ds.y_train, mlayout, tau, epochs, lr, BATCH,
+        seed=seed, pipelined=True)
+    np.testing.assert_allclose(w_fused, np.asarray(st.w), atol=1e-5,
+                               rtol=0)
+
+
+@pytest.mark.parametrize("secure", ["two_tree", "ring"])
+def test_multi_pipelined_secure_modes_are_lossless(ds, prob, secure):
+    layout2 = MLAYOUTS[1]
+    key = jax.random.PRNGKey(30)
+    steps = ds.x_train.shape[0] // BATCH
+    base = FusedEngine(prob, ds.x_train, ds.y_train, layout2,
+                       EngineConfig(secure="off"))
+    w_base = base.unpack_w(base.multi_pipelined_sgd_epoch(
+        base.pack_w(np.zeros(D)), 0.5, key, BATCH, steps))
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout2,
+                      EngineConfig(secure=secure))
+    w_sec = eng.unpack_w(eng.multi_pipelined_sgd_epoch(
+        eng.pack_w(np.zeros(D)), 0.5, key, BATCH, steps))
+    np.testing.assert_allclose(w_sec, w_base, atol=1e-5, rtol=0)
+
+
+def test_multi_pipelined_kernel_routing_matches_jnp(ds, prob):
+    """The Mw=1/Mθ=m split-batch kernel invocation and the jnp segment
+    einsum produce the same multi-dominator pipelined epoch."""
+    layout2 = MLAYOUTS[1]
+    key = jax.random.PRNGKey(31)
+    jnp_eng = FusedEngine(prob, ds.x_train, ds.y_train, layout2,
+                          EngineConfig(secure="off", use_kernel=False))
+    krn_eng = FusedEngine(prob, ds.x_train, ds.y_train, layout2,
+                          EngineConfig(secure="off", use_kernel=True))
+    w_j = jnp_eng.unpack_w(jnp_eng.multi_pipelined_sgd_epoch(
+        jnp_eng.pack_w(np.zeros(D)), 0.5, key, BATCH, 4))
+    w_k = krn_eng.unpack_w(krn_eng.multi_pipelined_sgd_epoch(
+        krn_eng.pack_w(np.zeros(D)), 0.5, key, BATCH, 4))
+    np.testing.assert_allclose(w_k, w_j, atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("algo", ["sgd", "svrg", "saga"])
+@pytest.mark.parametrize("multi", [False, True])
+def test_train_pipelined_fused_matches_reference(ds, prob, algo, multi):
+    layout2 = MLAYOUTS[1]
+    kw = dict(algo=algo, epochs=3, lr=0.3, batch=BATCH, seed=7,
+              pipelined=True, multi_dominator=multi)
+    ref = algorithms.train(prob, ds.x_train, ds.y_train, layout2, **kw)
+    fused = algorithms.train(prob, ds.x_train, ds.y_train, layout2,
+                             engine="fused", **kw)
+    np.testing.assert_allclose(fused.w, ref.w, atol=1e-5, rtol=0)
+    for hf, hr in zip(fused.history, ref.history):
+        assert abs(hf["objective"] - hr["objective"]) < 1e-5
+
+
+def test_donated_epochs_chain_without_recompilation(ds, layout, prob):
+    """cfg.donate: back-to-back epochs rebind the parameter carry in place
+    (the donated input is invalidated) and reuse one compilation."""
+    key = jax.random.PRNGKey(32)
+    steps = ds.x_train.shape[0] // BATCH
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off", donate=True))
+    ref = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off"))
+    wq = eng.pack_w(np.zeros(D))
+    wq_ref = ref.pack_w(np.zeros(D))
+    for ep in range(3):
+        sub = jax.random.fold_in(key, ep)
+        wq = eng.pipelined_sgd_epoch(wq, 0.3, sub, BATCH, steps)
+        wq_ref = ref.pipelined_sgd_epoch(wq_ref, 0.3, sub, BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), ref.unpack_w(wq_ref),
+                               atol=0, rtol=0)
+    assert eng._jitted["pipelined_sgd"]._cache_size() == 1
+    # the donated input buffer really was consumed
+    stale_in = eng.pack_w(np.zeros(D))
+    eng.sgd_epoch(stale_in, 0.3, key, BATCH, steps)
+    with pytest.raises(Exception):
+        eng.sgd_epoch(stale_in, 0.3, key, BATCH, steps)
 
 
 # ---------------------------------------------------------------------------

@@ -176,6 +176,88 @@ def test_vfl_grad_backward_without_w():
                                atol=1e-4, rtol=1e-5)
 
 
+@pytest.mark.parametrize("b,d,m", [
+    (128, 256, 1),      # tile-divisible
+    (100, 130, 1),      # non-tile: pad path on both axes
+    (96, 384, 3),       # multi-dominator rank
+    (100, 70, 3),       # non-tile + M = 3
+])
+def test_vfl_grad_fused_equals_separate_calls(b, d, m):
+    """mode='fused' must produce exactly the forward-only z and the
+    backward-only g of two separate invocations (the pipelined engine
+    replaces those two launches with one)."""
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    xb = _rand(ks[0], (b, d), jnp.float32)
+    w = _rand(ks[1], (d, m), jnp.float32)
+    th = _rand(ks[2], (b, m), jnp.float32)
+    zf, gf = ops.vfl_grad(xb, w, th, lam=0.03)
+    z1, _ = ops.vfl_grad(xb, w, None, lam=0.0, mode="forward")
+    _, g1 = ops.vfl_grad(xb, w, th, lam=0.03, mode="backward")
+    np.testing.assert_allclose(np.asarray(zf), np.asarray(z1), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(g1), atol=1e-6)
+    zr, gr = ref.vfl_grad_ref(xb, w, th, 0.03)
+    np.testing.assert_allclose(np.asarray(zf), np.asarray(zr), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(gr), atol=1e-5,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("bb,bf,d,mw,mth", [
+    (64, 64, 128, 1, 1),     # tile-divisible, symmetric sides
+    (60, 40, 70, 1, 3),      # non-tile rows + distinct side column counts
+    (32, 96, 130, 2, 2),     # asymmetric row blocks, SVRG rank
+    (100, 100, 96, 1, 4),
+])
+def test_vfl_grad_split_batch(bb, bf, d, mw, mth):
+    """Split-batch fused form (the pipelined step): rows [0, bb) are the
+    backward block (ϑ rows), rows [bb, bb+bf) the forward block; z covers
+    the forward rows only and g contracts the backward rows only."""
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    xcat = _rand(ks[0], (bb + bf, d), jnp.float32)
+    w = _rand(ks[1], (d, mw), jnp.float32)
+    th = _rand(ks[2], (bb, mth), jnp.float32)
+    z, g = ops.vfl_grad(xcat, w, th, lam=0.0, mode="fused", split=bb,
+                        denom=bb)
+    assert z.shape == (bf, mw) and g.shape == (d, mth)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(xcat[bb:] @ w),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(xcat[:bb].T @ th / bb),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_vfl_grad_split_batch_rank1():
+    """Rank-1 sides squeeze independently in the split-batch form."""
+    ks = jax.random.split(jax.random.PRNGKey(14), 3)
+    xcat = _rand(ks[0], (96, 50), jnp.float32)
+    w = _rand(ks[1], (50,), jnp.float32)
+    th = _rand(ks[2], (64,), jnp.float32)
+    z, g = ops.vfl_grad(xcat, w, th, mode="fused", split=64)
+    assert z.shape == (32,) and g.shape == (50,)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(xcat[64:] @ w),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(xcat[:64].T @ th / 64),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_vfl_grad_lam_is_traced_not_static():
+    """Sweeping λ must reuse ONE compilation (λ is a traced operand of the
+    jit'd wrapper, not a static) — and still produce correct values."""
+    ks = jax.random.split(jax.random.PRNGKey(15), 3)
+    xb = _rand(ks[0], (64, 96), jnp.float32)
+    w = _rand(ks[1], (96, 2), jnp.float32)
+    th = _rand(ks[2], (64, 2), jnp.float32)
+    ops.vfl_grad(xb, w, th, lam=0.011)        # warm the traced-λ cache
+    before = ops._vfl_grad_jit._cache_size()
+    for lam in (0.02, 0.5, 3.0):
+        _, g = ops.vfl_grad(xb, w, th, lam=lam)
+        _, gr = ref.vfl_grad_ref(xb, w, th, lam)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                                   atol=1e-5, rtol=1e-4)
+    assert ops._vfl_grad_jit._cache_size() == before
+
+
 def test_vfl_grad_denom_override():
     """SAGA's running average divides by n, not the minibatch size."""
     ks = jax.random.split(jax.random.PRNGKey(9), 3)

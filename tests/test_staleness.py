@@ -69,6 +69,49 @@ def test_all_active_party_delays_are_zero():
     assert any_lag
 
 
+def test_pipelined_delayed_tau0_degenerates_to_pipelined_oracle(ds):
+    """With τ = 0 and all delays 0, the pipelined stale-gradient oracle IS
+    the pipelined fresh-application oracle (the ring buffer applies the
+    just-written gradient) — tying the two oracle families together."""
+    import jax.numpy as jnp
+    prob = losses.logistic_l2()
+    n, d = ds.x_train.shape
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train)
+    key = jax.random.PRNGKey(3)
+    steps = n // 32
+    st = staleness.init_state(d, tau=0)
+    st = staleness.pipelined_delayed_sgd_epoch(
+        prob, st, x, y, 0.3, jnp.zeros(d, jnp.int32), key, 32, steps, 0)
+    w_pipe = algorithms.pipelined_sgd_epoch(
+        prob, jnp.zeros(d), x, y, 0.3, jnp.ones(d), key, 32, steps)
+    np.testing.assert_allclose(np.asarray(st.w), np.asarray(w_pipe),
+                               atol=1e-6, rtol=0)
+
+
+def test_pipelined_delayed_converges_under_bounded_delay(ds):
+    """The composed schedule (τ = 1 stale read + delayed application) is
+    still an admissible bounded-delay trajectory: the objective decreases
+    about as well as the fresh-read delayed path."""
+    import jax.numpy as jnp
+    prob = losses.logistic_l2()
+    n, d = ds.x_train.shape
+    layout = algorithms.PartyLayout.even(d, 8, 3)
+    delays = staleness.party_delays(layout, d, 4, seed=0)
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train)
+    key = jax.random.PRNGKey(0)
+    steps = n // 32
+    st = staleness.init_state(d, tau=4)
+    for _ in range(6):
+        key, sub = jax.random.split(key)
+        st = staleness.pipelined_delayed_sgd_epoch(
+            prob, st, x, y, 0.3, jnp.asarray(delays), sub, 32, steps, 4)
+    agg = ds.x_train @ np.asarray(st.w)
+    obj = float(np.mean(np.log1p(np.exp(-ds.y_train * agg))))
+    assert obj < 0.67
+
+
 def test_dominator_delay_diagonal_is_zero():
     """Multi-dominator schedule: d_{j,j} = 0 for every dominator j."""
     layout = algorithms.PartyLayout.even(32, 8, 3)
