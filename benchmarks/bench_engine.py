@@ -289,6 +289,116 @@ def run_multi_dominator(quick: bool = False):
     return rec
 
 
+def run_deep(quick: bool = False):
+    """Deep VFB² (nonlinear party-local encoders) on the fused engine vs
+    the ``core.deep_vfl`` per-minibatch Python-loop oracle.
+
+    Both sides run the identical update sequence (encoder forward, secure
+    aggregation of the (B, d_rep) vector partials, ϑ_z = ϑ_logit·head BUM
+    broadcast, Jacobian-transpose updates); the oracle dispatches one
+    jitted BUM step per minibatch from Python, the engine compiles the
+    whole nonlinear epoch into ONE program.  Also audits the deep epoch's
+    jaxpr for zero host-transfer primitives.  The committed CPU baseline
+    lives under the ``deep`` key of ``benchmarks/BENCH_engine.json``.
+    """
+    from repro.core import deep_vfl
+
+    n, d, q, m = (1024, 64, 4, 2) if quick else (2048, 128, 4, 2)
+    hidden, d_rep = 32, 16
+    batch = 64
+    steps = n // batch
+    reps = 3 if quick else 5
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = np.sign(rng.standard_normal(n)).astype(np.float32)
+    prob = losses.logistic_l2()
+    layout = algorithms.PartyLayout.even(d, q, m)
+    key = jax.random.PRNGKey(0)
+    params = deep_vfl.init_deep_vfl(key, layout, d, hidden, d_rep)
+
+    # --- oracle: one jitted BUM step dispatched per minibatch -------------
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    blocks = tuple(xj[:, lo:hi] for lo, hi in layout.bounds)
+    pt0 = (tuple(params.enc_w1), tuple(params.enc_b1),
+           tuple(params.enc_w2), params.head)
+    idx = jax.random.randint(key, (steps, batch), 0, n)
+
+    def oracle_epoch():
+        pt = pt0
+        for i in range(steps):
+            pt = deep_vfl._bum_step(pt, idx[i], blocks, yj, 0.05,
+                                    problem=prob, freeze=False, m=m, q=q)
+        return jax.block_until_ready(pt[3])
+
+    dt_ref = best_of(oracle_epoch, repeat=reps)
+    ref_sps = steps / dt_ref
+    emit("engine/deep_oracle_epoch", dt_ref * 1e6,
+         f"steps_per_sec={ref_sps:.0f} dispatches={steps}")
+
+    # --- fused engine: the whole nonlinear epoch is one dispatch ----------
+    eng = FusedEngine(prob, x, y, layout, EngineConfig(secure="off"))
+    pq0 = eng.pack_deep(params)
+
+    def fused_epoch():
+        return jax.block_until_ready(
+            eng.deep_sgd_epoch(pq0, 0.05, key, batch, steps))
+
+    dt_f = best_of(fused_epoch, repeat=reps)
+    f_sps = steps / dt_f
+    speedup = f_sps / ref_sps
+    emit("engine/deep_fused_epoch", dt_f * 1e6,
+         f"steps_per_sec={f_sps:.0f} speedup={speedup:.1f}x dispatches=1")
+    # quick-tier CI runners are noisy; gate only the full tier (10%
+    # inversion tolerance, same policy as the multi-dominator suite)
+    if not quick:
+        if dt_f >= dt_ref:
+            print(f"WARNING: fused deep epoch ({dt_f:.4f}s) did not beat "
+                  f"the per-minibatch oracle ({dt_ref:.4f}s) this run")
+        assert dt_f < dt_ref * 1.1, (
+            f"fused deep epoch ({dt_f:.4f}s) regressed >10% behind the "
+            f"per-minibatch oracle ({dt_ref:.4f}s)")
+
+    # --- secure deep epoch (vector partials, masked aggregation) ----------
+    enc = FusedEngine(prob, x, y, layout, EngineConfig(secure="two_tree"))
+
+    def secure_epoch():
+        return jax.block_until_ready(
+            enc.deep_sgd_epoch(pq0, 0.05, key, batch, steps))
+
+    dt_s = best_of(secure_epoch, repeat=reps)
+    emit("engine/deep_fused_secure_epoch", dt_s * 1e6,
+         f"steps_per_sec={steps / dt_s:.0f}")
+
+    # --- host-transfer audit ----------------------------------------------
+    jaxpr = eng.deep_sgd_epoch_jaxpr(pq0, 0.05, key, batch, steps)
+    transfers = count_host_transfers(jaxpr)
+    emit("engine/deep_host_transfer_prims", 0.0,
+         f"count={transfers} dispatches_per_epoch=1 (vs {steps})")
+    assert transfers == 0, (
+        f"deep fused epoch contains {transfers} host-transfer primitives")
+
+    dbase = committed_baseline().get("deep", {})
+    cfg = {"n": n, "d": d, "q": q, "m": m, "hidden": hidden, "d_rep": d_rep,
+           "batch": batch, "steps": steps,
+           "backend": jax.default_backend()}
+    warn_on_drift("speedup_deep_fused_over_oracle", speedup,
+                  dbase.get("speedup_deep_fused_over_oracle"),
+                  fresh_config=cfg, committed_config=dbase.get("config"))
+
+    rec = {
+        "config": cfg,
+        "oracle_steps_per_sec": ref_sps,
+        "fused_steps_per_sec": f_sps,
+        "fused_secure_steps_per_sec": steps / dt_s,
+        "speedup_deep_fused_over_oracle": speedup,
+        "host_transfer_prims_in_deep_epoch": transfers,
+        "dispatches_per_epoch": {"fused": 1, "oracle": steps},
+    }
+    save("engine_deep", rec)
+    return rec
+
+
 def run_pipelined(quick: bool = False):
     """Pipelined epochs (one split-batch kernel invocation per interior
     step) vs the two-invocation sequential fused epoch.

@@ -45,6 +45,7 @@ def main() -> None:
         "multi_dominator": lambda: bench_engine.run_multi_dominator(
             quick=args.quick),
         "pipelined": lambda: bench_engine.run_pipelined(quick=args.quick),
+        "deep": lambda: bench_engine.run_deep(quick=args.quick),
         "roofline": bench_roofline.run,
     }
     only = set(args.only.split(",")) if args.only else None

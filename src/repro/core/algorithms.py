@@ -458,6 +458,9 @@ def multi_saga_epoch(problem: Problem, w, theta_tab, avg, x, y, lr, mask,
 class TrainResult:
     w: np.ndarray
     history: List[dict]  # per-epoch: objective, epoch, algo
+    # deep (nonlinear-encoder) runs carry the full DeepVFLParams here;
+    # ``w`` is then the shared head vector (the active parties' model)
+    params: object = None
 
 
 def _eval(problem, w, x, y):
@@ -483,9 +486,21 @@ def train(
     engine_config=None,         # core.engine.EngineConfig when engine="fused"
     multi_dominator: bool = False,  # all m active parties update per round
     pipelined: bool = False,    # τ=1 backward(t) ∥ forward(t+1) schedule
+    deep: bool = False,         # nonlinear party-local encoders (deep VFB²)
+    hidden: int = 32,           # deep: encoder hidden width
+    d_rep: int = 16,            # deep: aggregated representation width
+    deep_params=None,           # deep: DeepVFLParams warm start (w0 analogue)
 ) -> TrainResult:
     n, d = x.shape
     m = layout.m
+    if deep:
+        if w0 is not None:
+            raise ValueError("deep VFB² has no flat w0; pass deep_params="
+                             "(a DeepVFLParams) to warm-start")
+        return _train_deep(problem, x, y, layout, algo, epochs, lr, batch,
+                           seed, active_only, engine, engine_config,
+                           multi_dominator, pipelined, hidden, d_rep,
+                           deep_params)
     if engine == "fused":
         return _train_fused(problem, x, y, layout, algo, epochs, lr, batch,
                             seed, active_only, w0, engine_config,
@@ -542,6 +557,75 @@ def train(
         hist.append({"epoch": ep + 1, "objective": _eval(problem, w, x, y),
                      "algo": algo})
     return TrainResult(w=np.asarray(w), history=hist)
+
+
+def _train_deep(problem, x, y, layout, algo, epochs, lr, batch, seed,
+                active_only, engine, engine_config, multi_dominator,
+                pipelined, hidden, d_rep, deep_params) -> TrainResult:
+    """Deep VFB² routing: nonlinear party-local encoders (``core.deep_vfl``
+    is the sequential oracle; the fused engine's ``deep_*_epoch`` methods
+    the hot path).  ``active_only=True`` freezes passive encoders (the
+    AFSVRG-VP analogue); ``deep_params`` warm-starts either engine from
+    external ``DeepVFLParams``.  ``w`` in the result is the shared head;
+    the full ``DeepVFLParams`` ride ``result.params``."""
+    from repro.core import deep_vfl  # lazy: deep_vfl imports this module
+
+    if multi_dominator or pipelined:
+        raise ValueError("deep VFB² supports neither multi_dominator nor "
+                         "pipelined scheduling yet")
+    if algo not in ("sgd", "svrg"):
+        raise ValueError(f"deep VFB² supports algo in ('sgd', 'svrg'); "
+                         f"got {algo!r}")
+    if engine == "reference":
+        params, objs = deep_vfl.train_deep_vfl(
+            problem, x, y, layout, algo=algo, epochs=epochs, lr=lr,
+            batch=batch, seed=seed, hidden=hidden, d_rep=d_rep,
+            freeze_passive=active_only, params=deep_params)
+        hist = [{"epoch": i + 1, "objective": o, "algo": f"deep_{algo}"}
+                for i, o in enumerate(objs)]
+        return TrainResult(w=np.asarray(params.head), history=hist,
+                           params=params)
+    if engine != "fused":
+        raise ValueError(f"unknown engine {engine}")
+    return _train_deep_fused(problem, x, y, layout, algo, epochs, lr,
+                             batch, seed, active_only, engine_config,
+                             hidden, d_rep, deep_params)
+
+
+def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
+                      active_only, engine_config, hidden, d_rep,
+                      deep_params=None) -> TrainResult:
+    """Deep hot-path trainer: every nonlinear epoch is ONE device dispatch
+    (encoder forward, masked secure aggregation of the (B, d_rep) vector
+    partials, ϑ_z = ϑ_logit·head BUM broadcast, and Jacobian-transpose
+    updates all inside the compiled program).  Key stream and math mirror
+    ``deep_vfl.train_deep_vfl`` exactly (tests pin the histories and final
+    params at 1e-5)."""
+    from repro.core import deep_vfl  # lazy: deep_vfl imports this module
+    from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
+
+    n, d = x.shape
+    cfg = engine_config if engine_config is not None \
+        else EngineConfig(donate=True)
+    eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
+    key = jax.random.PRNGKey(seed)
+    if deep_params is None:
+        deep_params = deep_vfl.init_deep_vfl(key, layout, d, hidden, d_rep)
+    pq = eng.pack_deep(deep_params)
+    steps = max(1, n // batch)
+    hist = []
+    for ep in range(epochs):
+        key, sub = jax.random.split(key)
+        if algo == "sgd":
+            pq = eng.deep_sgd_epoch(pq, lr, sub, batch, steps)
+        else:  # svrg: snapshot aliases the live iterate (no donation there)
+            muq = eng.deep_full_gradient(pq, sub)
+            pq = eng.deep_svrg_epoch(pq, pq, muq, lr, sub, batch, steps)
+        hist.append({"epoch": ep + 1, "objective": eng.deep_objective(pq),
+                     "algo": f"deep_{algo}", "engine": "fused"})
+    params = eng.unpack_deep(pq)
+    return TrainResult(w=np.asarray(params.head), history=hist,
+                       params=params)
 
 
 def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,

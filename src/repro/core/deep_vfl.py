@@ -1,4 +1,5 @@
-"""Deep (nonlinear) VFB²: party-local encoders + secure fused head.
+"""Deep (nonlinear) VFB² **sequential oracle**: party-local encoders +
+secure fused head.
 
 DESIGN §3 notes the generalization the framework relies on: replace the
 paper's scalar partial products ``w_{G_ℓ}ᵀ(x_i)_{G_ℓ}`` with *vector*
@@ -9,11 +10,22 @@ party-local encoders.  The protocol structure is unchanged:
   backward: ϑ = ∂L/∂z is distributed to every party (BUM);
             party ℓ locally computes ∇_{w_ℓ} = J_{f_ℓ}ᵀ ϑ.
 
-This module implements that with 1-hidden-layer party encoders + a shared
-linear head held by the active parties, trained with the same BUM math —
-and shows (tests/test_deep_vfl.py) that it is *lossless* against the
-centralized model with identical initialization, and that frozen passive
-encoders (the AFSVRG-VP analogue) lose accuracy.
+This module is the *oracle*: a per-minibatch Python loop over jitted BUM
+steps (``jax.vjp`` per party makes the message boundary explicit — no
+autodiff across parties).  The **production hot path** is the fused
+federated step engine (``core.engine``): ``FusedEngine.deep_{sgd,svrg,
+delayed_sgd}_epoch`` run the same deep epochs as ONE compiled program
+(encoder forward, masked secure aggregation of the (B, d_rep) partial
+representations, ϑ_z = ϑ_logit·head BUM broadcast, and Jacobian-transpose
+updates inside the party-mapped scan), pinned against this module at 1e-5
+in tests/test_deep_engine.py and reachable via
+``core.algorithms.train(..., deep=True, engine="fused")``.
+
+Losslessness (tests/test_deep_vfl.py): the BUM trajectory matches the
+centralized single-autodiff-graph model exactly under identical
+initialization — including the λ·g(·) regularizer, which both paths apply
+to every parameter (head and encoders) — and frozen passive encoders (the
+AFSVRG-VP analogue) lose accuracy.
 """
 from __future__ import annotations
 
@@ -81,18 +93,175 @@ def fused_forward(params: DeepVFLParams, x_blocks, rng=None,
     return z, logit
 
 
+# ---------------------------------------------------------------------------
+# protocol-way gradients (shared by the SGD / SVRG / delayed oracles)
+# ---------------------------------------------------------------------------
+
+def _bum_grads(pt, xb, yb, problem: Problem, q: int):
+    """One BUM round at ``pt`` on minibatch blocks ``xb`` (list of (B, d_ℓ)).
+
+    The dominator computes ϑ_logit, broadcasts ϑ_z = ϑ_logit·head, and each
+    party applies its local Jacobian (``jax.vjp`` per party — the message
+    boundary is explicit).  Every gradient includes the λ∇g(·) regularizer
+    term (paper Alg. 3 step 3; dropping it was the pre-PR-4 bug).  Returns
+    a pytree shaped like ``pt``: (w1 grads, b1 grads, w2 grads, head grad).
+    """
+    enc_w1, enc_b1, enc_w2, head = pt
+    lam = problem.lam
+    parts, vjps = [], []
+    for p in range(q):
+        def enc(w1, b1, w2, xp=xb[p]):
+            return _party_encode(w1, b1, w2, xp)
+        out, vjp = jax.vjp(enc, enc_w1[p], enc_b1[p], enc_w2[p])
+        parts.append(out)
+        vjps.append(vjp)
+    z = sum(parts)                       # == Algorithm-1 aggregate
+    logit = z @ head
+
+    theta_logit = problem.theta(logit, yb) / yb.shape[0]   # (B,)
+    theta_z = theta_logit[:, None] * head                  # ∂L/∂z (BUM)
+    g_head = z.T @ theta_logit + lam * problem.reg_grad(head)
+
+    gw1, gb1, gw2 = [], [], []
+    for p in range(q):
+        g1, g2, g3 = vjps[p](theta_z)
+        gw1.append(g1 + lam * problem.reg_grad(enc_w1[p]))
+        gb1.append(g2 + lam * problem.reg_grad(enc_b1[p]))
+        gw2.append(g3 + lam * problem.reg_grad(enc_w2[p]))
+    return tuple(gw1), tuple(gb1), tuple(gw2), g_head
+
+
+def _apply_update(pt, g, lr, freeze: bool, m: int, q: int):
+    """w ← w − lr·g with frozen passive parties (p ≥ m) skipped; the head
+    (the active parties' model) always trains."""
+    w1, b1, w2, head = pt
+    gw1, gb1, gw2, gh = g
+    live = [0.0 if (freeze and p >= m) else 1.0 for p in range(q)]
+    return (tuple(w1[p] - lr * live[p] * gw1[p] for p in range(q)),
+            tuple(b1[p] - lr * live[p] * gb1[p] for p in range(q)),
+            tuple(w2[p] - lr * live[p] * gw2[p] for p in range(q)),
+            head - lr * gh)
+
+
+# Module-level jitted steps: chained ``train_*`` calls with the same
+# problem/shapes reuse ONE compilation (the pre-PR-4 closures re-jit per
+# call).  ``problem``/``freeze``/``m``/``q`` are static; data is traced.
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q"))
+def _bum_step(pt, ib, blocks, y, lr, problem: Problem, freeze: bool,
+              m: int, q: int):
+    xb = [b[ib] for b in blocks]
+    g = _bum_grads(pt, xb, y[ib], problem, q)
+    return _apply_update(pt, g, lr, freeze, m, q)
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "q"))
+def _bum_full_grad(pt, blocks, y, problem: Problem, q: int):
+    """Full-dataset BUM gradient pytree (deep SVRG's μ; Alg. 4 step 3)."""
+    return _bum_grads(pt, list(blocks), y, problem, q)
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q"))
+def _bum_svrg_step(pt, pt_snap, mu, ib, blocks, y, lr, problem: Problem,
+                   freeze: bool, m: int, q: int):
+    """v = g_i(w) − g_i(w̃) + μ per parameter leaf (Alg. 4/5, deep form)."""
+    xb = [b[ib] for b in blocks]
+    g1 = _bum_grads(pt, xb, y[ib], problem, q)
+    g0 = _bum_grads(pt_snap, xb, y[ib], problem, q)
+    v = jax.tree.map(lambda a, b, c: a - b + c, g1, g0, mu)
+    return _apply_update(pt, v, lr, freeze, m, q)
+
+
+def _objective(problem: Problem, params: DeepVFLParams, blocks, yj) -> float:
+    """Full objective: data loss + λ·Σ g(·) over every parameter (head and
+    encoders) — the regularizer the training paths now actually descend."""
+    _, logits = fused_forward(params, blocks)
+    regv = sum(jnp.sum(problem.reg(a)) for a in
+               (*params.enc_w1, *params.enc_b1, *params.enc_w2, params.head))
+    return float(jnp.mean(problem.loss(logits, yj)) + problem.lam * regv)
+
+
+def _to_params(pt) -> DeepVFLParams:
+    return DeepVFLParams(list(pt[0]), list(pt[1]), list(pt[2]), pt[3])
+
+
+def _to_tuple(params: DeepVFLParams):
+    return (tuple(params.enc_w1), tuple(params.enc_b1),
+            tuple(params.enc_w2), params.head)
+
+
 def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
                    layout: PartyLayout, epochs: int = 20, lr: float = 0.05,
                    batch: int = 32, seed: int = 0, hidden: int = 32,
                    d_rep: int = 16, freeze_passive: bool = False,
-                   params: DeepVFLParams | None = None):
-    """BUM training of the deep VFL model.
+                   params: DeepVFLParams | None = None, algo: str = "sgd"):
+    """BUM training of the deep VFL model (the sequential oracle).
 
     Gradients are computed the protocol way: ϑ_logit at the active party,
     ϑ_z = ϑ_logit·head broadcast to parties (BUM), each party applying its
-    local Jacobian — implemented with jax.vjp per party to make the
-    message boundary explicit (no autodiff across parties).
+    local Jacobian — with the λ∇g regularizer on every update.
+    ``algo="svrg"`` runs the variance-reduced inner loop (snapshot + full
+    gradient per epoch, Alg. 4/5).  The fused engine's ``deep_*_epoch``
+    methods are pinned against this function at 1e-5.
     """
+    if algo not in ("sgd", "svrg"):
+        raise ValueError(f"unknown deep algo {algo!r}")
+    n, d = x.shape
+    q, m = layout.q, layout.m
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = init_deep_vfl(key, layout, d, hidden, d_rep)
+    xj = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    blocks = tuple(xj[:, lo:hi] for lo, hi in layout.bounds)
+
+    pt = _to_tuple(params)
+    steps = max(1, n // batch)
+    hist = []
+    for ep in range(epochs):
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (steps, batch), 0, n)
+        if algo == "svrg":
+            snap = pt
+            mu = _bum_full_grad(snap, blocks, yj, problem=problem, q=q)
+            for i in range(steps):
+                pt = _bum_svrg_step(pt, snap, mu, idx[i], blocks, yj, lr,
+                                    problem=problem, freeze=freeze_passive,
+                                    m=m, q=q)
+        else:
+            for i in range(steps):
+                pt = _bum_step(pt, idx[i], blocks, yj, lr, problem=problem,
+                               freeze=freeze_passive, m=m, q=q)
+        params = _to_params(pt)
+        hist.append(_objective(problem, params, blocks, yj))
+    return params, hist
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "q"))
+def _centralized_step(pt, ib, blocks, y, lr, problem: Problem, q: int):
+    def loss_fn(pt):
+        w1, b1, w2, head = pt
+        parts = [_party_encode(w1[p], b1[p], w2[p], blocks[p][ib])
+                 for p in range(q)]
+        logit = sum(parts) @ head
+        regv = sum(jnp.sum(problem.reg(a)) for a in jax.tree.leaves(pt))
+        return jnp.mean(problem.loss(logit, y[ib])) + problem.lam * regv
+
+    g = jax.grad(loss_fn)(pt)
+    return jax.tree.map(lambda p, gg: p - lr * gg, pt, g)
+
+
+def train_centralized(problem: Problem, x, y, layout: PartyLayout,
+                      epochs: int = 20, lr: float = 0.05, batch: int = 32,
+                      seed: int = 0, hidden: int = 32, d_rep: int = 16,
+                      params: DeepVFLParams | None = None):
+    """Same architecture trained with ONE autodiff graph (no protocol) —
+    the losslessness oracle: must match ``train_deep_vfl`` exactly when
+    initialized identically (tests assert it).  The objective includes the
+    λ·g(·) regularizer over every parameter, matching the BUM path.
+    ``params=`` seeds shared-init comparisons from external parameters —
+    same contract as ``train_deep_vfl``; the jitted step is module-level,
+    so chained calls reuse one compilation."""
     n, d = x.shape
     q = layout.q
     key = jax.random.PRNGKey(seed)
@@ -100,95 +269,17 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
         params = init_deep_vfl(key, layout, d, hidden, d_rep)
     xj = jnp.asarray(x, jnp.float32)
     yj = jnp.asarray(y, jnp.float32)
-    blocks = [xj[:, lo:hi] for lo, hi in layout.bounds]
+    blocks = tuple(xj[:, lo:hi] for lo, hi in layout.bounds)
 
-    @jax.jit
-    def step(params_tuple, ib):
-        enc_w1, enc_b1, enc_w2, head = params_tuple
-        xb = [b[ib] for b in blocks]
-        yb = yj[ib]
-
-        # --- forward: party partials + (secure) aggregation --------------
-        parts, vjps = [], []
-        for p in range(q):
-            def enc(w1, b1, w2, xp=xb[p]):
-                return _party_encode(w1, b1, w2, xp)
-            out, vjp = jax.vjp(enc, enc_w1[p], enc_b1[p], enc_w2[p])
-            parts.append(out)
-            vjps.append(vjp)
-        z = sum(parts)                       # == Algorithm-1 aggregate
-        logit = z @ head
-
-        # --- dominator computes ϑ; BUM distributes it --------------------
-        theta_logit = problem.theta(logit, yb) / ib.shape[0]   # (B,)
-        theta_z = theta_logit[:, None] * head[None, :]         # ∂L/∂z
-        g_head = z.T @ theta_logit                             # active party
-
-        # --- collaborative updates: local Jacobians only ------------------
-        new_w1, new_b1, new_w2 = [], [], []
-        for p in range(q):
-            gw1, gb1, gw2 = vjps[p](theta_z)
-            if freeze_passive and p >= layout.m:
-                gw1, gb1, gw2 = (jnp.zeros_like(gw1), jnp.zeros_like(gb1),
-                                 jnp.zeros_like(gw2))
-            new_w1.append(enc_w1[p] - lr * gw1)
-            new_b1.append(enc_b1[p] - lr * gb1)
-            new_w2.append(enc_w2[p] - lr * gw2)
-        head2 = head - lr * g_head
-        return (tuple(new_w1), tuple(new_b1), tuple(new_w2), head2)
-
-    pt = (tuple(params.enc_w1), tuple(params.enc_b1),
-          tuple(params.enc_w2), params.head)
+    pt = _to_tuple(params)
     steps = max(1, n // batch)
     hist = []
     for ep in range(epochs):
         key, sub = jax.random.split(key)
         idx = jax.random.randint(sub, (steps, batch), 0, n)
         for i in range(steps):
-            pt = step(pt, idx[i])
-        params = DeepVFLParams(list(pt[0]), list(pt[1]), list(pt[2]), pt[3])
-        _, logits = fused_forward(params, blocks)
-        obj = float(jnp.mean(problem.loss(logits, yj)))
-        hist.append(obj)
-    return params, hist
-
-
-def train_centralized(problem: Problem, x, y, layout, **kw):
-    """Same architecture trained with ONE autodiff graph (no protocol) —
-    the losslessness oracle: must match ``train_deep_vfl`` exactly when
-    initialized identically (tests assert it)."""
-    n, d = x.shape
-    key = jax.random.PRNGKey(kw.get("seed", 0))
-    hidden, d_rep = kw.get("hidden", 32), kw.get("d_rep", 16)
-    lr, batch, epochs = kw.get("lr", 0.05), kw.get("batch", 32), \
-        kw.get("epochs", 20)
-    params = init_deep_vfl(key, layout, d, hidden, d_rep)
-    xj = jnp.asarray(x, jnp.float32)
-    yj = jnp.asarray(y, jnp.float32)
-    blocks = [xj[:, lo:hi] for lo, hi in layout.bounds]
-
-    def loss_fn(pt, ib):
-        w1, b1, w2, head = pt
-        parts = [_party_encode(w1[p], b1[p], w2[p], blocks[p][ib])
-                 for p in range(layout.q)]
-        logit = sum(parts) @ head
-        return jnp.mean(problem.loss(logit, yj[ib]))
-
-    @jax.jit
-    def step(pt, ib):
-        g = jax.grad(loss_fn)(pt, ib)
-        return jax.tree.map(lambda p, gg: p - lr * gg, pt, g)
-
-    pt = (tuple(params.enc_w1), tuple(params.enc_b1),
-          tuple(params.enc_w2), params.head)
-    steps = max(1, n // batch)
-    hist = []
-    for ep in range(epochs):
-        key, sub = jax.random.split(key)
-        idx = jax.random.randint(sub, (steps, batch), 0, n)
-        for i in range(steps):
-            pt = step(pt, idx[i])
-        params = DeepVFLParams(list(pt[0]), list(pt[1]), list(pt[2]), pt[3])
-        _, logits = fused_forward(params, blocks)
-        hist.append(float(jnp.mean(problem.loss(logits, yj))))
+            pt = _centralized_step(pt, idx[i], blocks, yj, lr,
+                                   problem=problem, q=q)
+        params = _to_params(pt)
+        hist.append(_objective(problem, params, blocks, yj))
     return params, hist

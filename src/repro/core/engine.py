@@ -64,6 +64,16 @@ one update late: the schedule is exactly a τ = 1 bounded-delay execution
 (see ``core.staleness``), pinned against the ``core.algorithms``
 ``pipelined_*`` sequential oracles.
 
+Deep epochs
+-----------
+``deep_{sgd,svrg,delayed_sgd}_epoch`` run the nonlinear generalization —
+private party-local encoders producing (B, d_rep) vector partial
+representations instead of scalar partial products (``core.deep_vfl`` is
+the sequential oracle) — as the same one-dispatch compiled programs: the
+encoder layers' X-block contractions ride the rank-k kernel with the
+hidden/d_rep widths as the M axis, the vector partials take one masked
+secure aggregation per step, and ϑ_z = ϑ_logit·head is the BUM payload.
+
 Vertical partitioning packs party blocks to a uniform padded width
 (``PartyLayout.even`` with d % q != 0 works); the pad coordinates are
 masked out of every update.
@@ -161,6 +171,43 @@ def dominator_onehot(m: int, batch: int) -> jax.Array:
     rank-k kernel's M axis."""
     seg = jnp.repeat(jnp.arange(m), batch)
     return (seg[:, None] == jnp.arange(m)[None, :]).astype(jnp.float32)
+
+
+def pack_deep_params(params, layout: PartyLayout):
+    """``DeepVFLParams`` -> party-stacked ``(w1q, b1q, w2q, headq)``.
+
+    ``w1q`` (q, dp, hidden) zero-pads each party's first encoder layer to
+    the widest feature block (padded rows start zero and every shipped
+    regularizer maps 0 → 0, so they stay zero under the masked updates);
+    ``headq`` (q, d_rep) replicates the active parties' head — the SPMD
+    stand-in for the dominator broadcasting ϑ_z, and every party's copy
+    takes the identical (post-aggregation) head update, so replicas stay
+    bitwise equal."""
+    q = layout.q
+    dp = int(party_widths(layout).max())
+    hidden = int(np.asarray(params.enc_w1[0]).shape[1])
+    w1q = np.zeros((q, dp, hidden), np.float32)
+    for p, (lo, hi) in enumerate(layout.bounds):
+        w1q[p, : hi - lo] = np.asarray(params.enc_w1[p])
+    b1q = np.stack([np.asarray(b, np.float32) for b in params.enc_b1])
+    w2q = np.stack([np.asarray(w, np.float32) for w in params.enc_w2])
+    head = np.asarray(params.head, np.float32)
+    headq = np.tile(head[None, :], (q, 1))
+    return (jnp.asarray(w1q), jnp.asarray(b1q), jnp.asarray(w2q),
+            jnp.asarray(headq))
+
+
+def unpack_deep_params(pq, layout: PartyLayout):
+    """Party-stacked deep params -> ``DeepVFLParams`` (drops padding)."""
+    from repro.core.deep_vfl import DeepVFLParams
+
+    w1q, b1q, w2q, headq = (np.asarray(a) for a in pq)
+    enc_w1 = [jnp.asarray(w1q[p, : hi - lo])
+              for p, (lo, hi) in enumerate(layout.bounds)]
+    return DeepVFLParams(enc_w1,
+                         [jnp.asarray(b) for b in b1q],
+                         [jnp.asarray(w) for w in w2q],
+                         jnp.asarray(headq[0]))
 
 
 def pack_mask(layout: PartyLayout, active_only: bool = False) -> jax.Array:
@@ -261,6 +308,13 @@ class FusedEngine:
         self.dp = int(self.xs.shape[2])
         self.y = jnp.asarray(y, jnp.float32)
         self.maskq = pack_mask(layout, active_only)
+        # (q,) per-party trainability flag for the deep epochs' non-feature
+        # parameters (b1/w2 have no coordinate rows for maskq to act on):
+        # active_only freezes passive parties' encoders, the AFSVRG-VP
+        # analogue (deep_vfl's freeze_passive).
+        self.trainq = jnp.asarray(
+            [1.0 if (not active_only or p < layout.m) else 0.0
+             for p in range(layout.q)], jnp.float32)
         self.mesh = mesh
         if mesh is not None:
             # A supplied mesh states SPMD intent; a silent vmap fallback
@@ -1337,6 +1391,258 @@ class FusedEngine:
             batch, steps)
         return wq, bufq, t0 + steps
 
+    # -- deep VFB² epochs (nonlinear party-local encoders) --------------------
+    #
+    # The first nonlinear workload on the hot path: party ℓ holds a private
+    # 1-hidden-layer encoder f_ℓ and the protocol aggregates the (B, d_rep)
+    # partial representations h_ℓ instead of scalar partial products
+    # (core.deep_vfl module docstring; that module is the sequential
+    # oracle).  Per scan step: party-local encoder forward, ONE masked
+    # secure aggregation of the vector partials, ϑ_z = ϑ_logit·head BUM
+    # broadcast, and Jacobian-transpose updates — the encoder layers'
+    # X-block contractions (x@W1, h@W2, xᵀ∂u, hᵀϑ_z) route through the
+    # rank-k kernel with hidden/d_rep as the M axis.  The head is
+    # replicated per party (the dominator's ϑ broadcast stand-in) and
+    # takes the identical post-aggregation update everywhere.
+
+    def _deep_grads(self, xb, yb, w1, b1, w2, head, kt):
+        """One deep BUM round at the given party-local params: returns the
+        (g_w1, g_b1, g_w2, g_head) gradient pytree with the λ∇g(·)
+        regularizer included on every leaf (matching the regularizer-fixed
+        ``deep_vfl._bum_grads`` oracle)."""
+        prob = self.problem
+        bsz = yb.shape[0]
+        h = jnp.tanh(self._fwd(xb, w1) + b1)          # (B, hidden)
+        hr = self._fwd(h, w2)                         # (B, d_rep) partials
+        z = self._agg(hr, kt)                         # Algorithm-1 aggregate
+        logit = z @ head
+        th_l = prob.theta(logit, yb) / bsz            # dominator's ϑ
+        th_z = th_l[:, None] * head                   # BUM payload ∂L/∂z
+        g_head = z.T @ th_l + prob.lam * prob.reg_grad(head)
+        g_w2 = self._bwd(h, th_z, 1) + prob.lam * prob.reg_grad(w2)
+        du = (th_z @ w2.T) * (1.0 - h * h)            # tanh'
+        g_w1 = self._bwd(xb, du, 1) + prob.lam * prob.reg_grad(w1)
+        g_b1 = du.sum(axis=0) + prob.lam * prob.reg_grad(b1)
+        return g_w1, g_b1, g_w2, g_head
+
+    def deep_sgd_epoch(self, pq, lr, key, batch: int, steps: int):
+        """Deep VFB²-SGD epoch as ONE compiled program; pinned against
+        ``deep_vfl.train_deep_vfl`` at 1e-5.  ``pq`` is the party-stacked
+        ``(w1q, b1q, w2q, headq)`` from :meth:`pack_deep`."""
+        def build():
+            def party(local, shared):
+                xp, w1, b1, w2, head, maskp, trainp = local
+                y, lr, idx, mkeys = shared
+
+                def body(carry, inp):
+                    w1, b1, w2, head = carry
+                    ib, kt = inp
+                    g_w1, g_b1, g_w2, g_head = self._deep_grads(
+                        xp[ib], y[ib], w1, b1, w2, head, kt)
+                    w1 = w1 - lr * maskp[:, None] * g_w1
+                    b1 = b1 - lr * trainp * g_b1
+                    w2 = w2 - lr * trainp * g_w2
+                    head = head - lr * g_head
+                    return (w1, b1, w2, head), None
+
+                carry, _ = jax.lax.scan(body, (w1, b1, w2, head),
+                                        (idx, mkeys))
+                return carry
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate("pq"))
+            def epoch(xs, pq, maskq, trainq, y, lr, key, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                w1q, b1q, w2q, headq = pq
+                return mapped((xs, w1q, b1q, w2q, headq, maskq, trainq),
+                              (y, lr, idx, self._keys(key, steps)))
+
+            return epoch
+
+        return self._epoch("deep_sgd", build)(self.xs, pq, self.maskq,
+                                              self.trainq, self.y, lr,
+                                              key, batch, steps)
+
+    def deep_full_gradient(self, pq, key):
+        """Full-dataset deep BUM gradient pytree at ``pq`` (SVRG's μ)."""
+        def build():
+            def party(local, shared):
+                xp, w1, b1, w2, head = local
+                y, kt = shared
+                return self._deep_grads(xp, y, w1, b1, w2, head, kt)
+
+            mapped = self._bind(party)
+
+            @jax.jit
+            def full(xs, pq, y, key):
+                w1q, b1q, w2q, headq = pq
+                return mapped((xs, w1q, b1q, w2q, headq),
+                              (y, jax.random.fold_in(key, 0xf)))
+
+            return full
+
+        return self._epoch("deep_full_grad", build)(self.xs, pq, self.y,
+                                                    key)
+
+    def deep_svrg_epoch(self, pq, pq_snap, muq, lr, key, batch: int,
+                        steps: int):
+        """Deep VFB²-SVRG inner loop: v = g(w) − g(w̃) + μ per parameter
+        leaf.  The iterate's and snapshot's encoder passes share the
+        X-block kernel invocations where the left operand coincides (layer
+        1 forward and its backward ride one M = 2·hidden pass), and both
+        (B, d_rep) partial sets aggregate in ONE masked collective."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, w1, b1, w2, head, w1s, b1s, w2s, heads, mu, maskp,
+                 trainp) = local
+                y, lr, idx, mkeys = shared
+                mu_w1, mu_b1, mu_w2, mu_head = mu
+                hid = w1.shape[1]
+                dr = head.shape[0]
+
+                def body(carry, inp):
+                    w1, b1, w2, head = carry
+                    ib, kt = inp
+                    xb = xp[ib]
+                    yb = y[ib]
+                    bsz = yb.shape[0]
+                    uu = self._fwd(xb, jnp.concatenate([w1, w1s], axis=1))
+                    h = jnp.tanh(uu[:, :hid] + b1)
+                    hs = jnp.tanh(uu[:, hid:] + b1s)
+                    zz = self._agg(jnp.concatenate(
+                        [self._fwd(h, w2), self._fwd(hs, w2s)], axis=1), kt)
+                    z, zs = zz[:, :dr], zz[:, dr:]
+                    th1 = prob.theta(z @ head, yb) / bsz
+                    th0 = prob.theta(zs @ heads, yb) / bsz
+                    thz1 = th1[:, None] * head
+                    thz0 = th0[:, None] * heads
+                    v_head = (z.T @ th1 + prob.lam * prob.reg_grad(head)
+                              - zs.T @ th0 - prob.lam * prob.reg_grad(heads)
+                              + mu_head)
+                    v_w2 = (self._bwd(h, thz1, 1) - self._bwd(hs, thz0, 1)
+                            + prob.lam * (prob.reg_grad(w2)
+                                          - prob.reg_grad(w2s)) + mu_w2)
+                    du1 = (thz1 @ w2.T) * (1.0 - h * h)
+                    du0 = (thz0 @ w2s.T) * (1.0 - hs * hs)
+                    duu = self._bwd(xb, jnp.concatenate([du1, du0], axis=1),
+                                    1)
+                    v_w1 = (duu[:, :hid] - duu[:, hid:]
+                            + prob.lam * (prob.reg_grad(w1)
+                                          - prob.reg_grad(w1s)) + mu_w1)
+                    v_b1 = (du1.sum(axis=0) - du0.sum(axis=0)
+                            + prob.lam * (prob.reg_grad(b1)
+                                          - prob.reg_grad(b1s)) + mu_b1)
+                    w1 = w1 - lr * maskp[:, None] * v_w1
+                    b1 = b1 - lr * trainp * v_b1
+                    w2 = w2 - lr * trainp * v_w2
+                    head = head - lr * v_head
+                    return (w1, b1, w2, head), None
+
+                carry, _ = jax.lax.scan(body, (w1, b1, w2, head),
+                                        (idx, mkeys))
+                return carry
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, pq, pq_snap, muq, maskq, trainq, y, lr, key,
+                      batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                w1q, b1q, w2q, headq = pq
+                w1s, b1s, w2s, headsq = pq_snap
+                return mapped((xs, w1q, b1q, w2q, headq, w1s, b1s, w2s,
+                               headsq, muq, maskq, trainq),
+                              (y, lr, idx, self._keys(key, steps)))
+
+            return epoch
+
+        return self._epoch("deep_svrg", build)(self.xs, pq, pq_snap, muq,
+                                               self.maskq, self.trainq,
+                                               self.y, lr, key, batch,
+                                               steps)
+
+    def deep_delay_buffers(self, pq, tau: int):
+        """Zero-initialized per-party encoder gradient ring buffers for
+        :meth:`deep_delayed_sgd_epoch`: ``(q, τ+1, ...)`` per leaf."""
+        w1q, b1q, w2q, _ = pq
+
+        def ring(a):
+            return jnp.zeros((a.shape[0], tau + 1) + a.shape[1:],
+                             jnp.float32)
+
+        return (ring(w1q), ring(b1q), ring(w2q))
+
+    def deep_delayed_sgd_epoch(self, pq, bufq, t0, delays_q, lr, key,
+                               batch: int, steps: int, tau: int):
+        """Bounded-delay deep VFB²-SGD: party ℓ applies, at step t, its
+        *encoder* gradients of step t − d_ℓ from per-party ring buffers
+        carried through the scan; the dominator-held head applies its
+        gradient fresh (d = 0 — active parties are the dominators of the
+        head, and delaying a replicated parameter would fork the
+        replicas).  ``staleness.train_deep_delayed`` is the sequential
+        oracle.  ``bufq``: pytree from :meth:`deep_delay_buffers`;
+        ``delays_q``: (q,) int32."""
+        def build():
+            def party(local, shared):
+                (xp, w1, b1, w2, head, bw1, bb1, bw2, delay, maskp,
+                 trainp) = local
+                y, lr, idx, mkeys, t0 = shared
+
+                def body(carry, inp):
+                    w1, b1, w2, head, bw1, bb1, bw2, t = carry
+                    ib, kt = inp
+                    g_w1, g_b1, g_w2, g_head = self._deep_grads(
+                        xp[ib], y[ib], w1, b1, w2, head, kt)
+                    slot = t % (tau + 1)
+                    bw1 = jax.lax.dynamic_update_index_in_dim(bw1, g_w1,
+                                                              slot, 0)
+                    bb1 = jax.lax.dynamic_update_index_in_dim(bb1, g_b1,
+                                                              slot, 0)
+                    bw2 = jax.lax.dynamic_update_index_in_dim(bw2, g_w2,
+                                                              slot, 0)
+                    eff = jnp.maximum(t - delay, 0) % (tau + 1)
+                    s_w1 = jax.lax.dynamic_index_in_dim(bw1, eff, 0,
+                                                        keepdims=False)
+                    s_b1 = jax.lax.dynamic_index_in_dim(bb1, eff, 0,
+                                                        keepdims=False)
+                    s_w2 = jax.lax.dynamic_index_in_dim(bw2, eff, 0,
+                                                        keepdims=False)
+                    w1 = w1 - lr * maskp[:, None] * s_w1
+                    b1 = b1 - lr * trainp * s_b1
+                    w2 = w2 - lr * trainp * s_w2
+                    head = head - lr * g_head         # dominator-fresh
+                    return (w1, b1, w2, head, bw1, bb1, bw2, t + 1), None
+
+                (w1, b1, w2, head, bw1, bb1, bw2, _), _ = jax.lax.scan(
+                    body, (w1, b1, w2, head, bw1, bb1, bw2, t0),
+                    (idx, mkeys))
+                return (w1, b1, w2, head), (bw1, bb1, bw2)
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate("pq", "bufq"))
+            def epoch(xs, pq, bufq, delays_q, maskq, trainq, y, lr, key,
+                      t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                w1q, b1q, w2q, headq = pq
+                bw1q, bb1q, bw2q = bufq
+                return mapped((xs, w1q, b1q, w2q, headq, bw1q, bb1q, bw2q,
+                               delays_q, maskq, trainq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        pq, bufq = self._epoch(f"deep_delayed{tau}", build)(
+            self.xs, pq, bufq, delays_q, self.maskq, self.trainq, self.y,
+            lr, key, t0, batch, steps)
+        return pq, bufq, t0 + steps
+
     # -- introspection -------------------------------------------------------
 
     def sgd_epoch_jaxpr(self, wq, lr, key, batch: int, steps: int):
@@ -1359,6 +1665,15 @@ class FusedEngine:
             lambda xs, w: fn(xs, w, self.maskq, self.y, lr, key,
                              batch=batch, steps=steps))(self.xs, wq)
 
+    def deep_sgd_epoch_jaxpr(self, pq, lr, key, batch: int, steps: int):
+        """The deep epoch's jaxpr — audited for zero host-transfer
+        primitives (the whole nonlinear epoch must stay on device)."""
+        self.deep_sgd_epoch(pq, lr, key, batch, steps)   # ensure built
+        fn = self._jitted["deep_sgd"]
+        return jax.make_jaxpr(
+            lambda xs, p: fn(xs, p, self.maskq, self.trainq, self.y, lr,
+                             key, batch=batch, steps=steps))(self.xs, pq)
+
     # -- boundary helpers ----------------------------------------------------
 
     def pack_w(self, w) -> jax.Array:
@@ -1366,6 +1681,28 @@ class FusedEngine:
 
     def unpack_w(self, wq) -> np.ndarray:
         return unpack_vec(wq, self.layout)
+
+    def pack_deep(self, params):
+        return pack_deep_params(params, self.layout)
+
+    def unpack_deep(self, pq):
+        return unpack_deep_params(pq, self.layout)
+
+    def deep_objective(self, pq) -> float:
+        """Full deep objective (one device sync; per-epoch telemetry).
+
+        The padded w1 rows are zero and every shipped regularizer maps
+        0 → 0, so summing ``reg`` over the padded stack is exact; the
+        replicated head is counted once."""
+        prob = self.problem
+        w1q, b1q, w2q, headq = pq
+        h = jnp.tanh(jnp.einsum("qnd,qdh->qnh", self.xs, w1q)
+                     + b1q[:, None, :])
+        z = jnp.einsum("qnh,qhr->nr", h, w2q)
+        logit = z @ headq[0]
+        regv = (jnp.sum(prob.reg(w1q)) + jnp.sum(prob.reg(b1q))
+                + jnp.sum(prob.reg(w2q)) + jnp.sum(prob.reg(headq[0])))
+        return float(jnp.mean(prob.loss(logit, self.y)) + prob.lam * regv)
 
     def objective(self, wq) -> float:
         """Full objective (one device sync; for per-epoch telemetry).

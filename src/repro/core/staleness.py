@@ -277,6 +277,117 @@ def pipelined_delayed_multi_sgd_epoch(problem: Problem,
     return step(st, z, idx[-1])
 
 
+# ---------------------------------------------------------------------------
+# deep (nonlinear-encoder) staleness: per-party encoder gradients age, the
+# dominator-held head stays fresh
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "tau"))
+def _deep_delayed_step(pt, bufs, t, ib, blocks, y, lr, delays,
+                       problem: Problem, freeze: bool, m: int, q: int,
+                       tau: int):
+    """One stale deep BUM step (sequential oracle for the engine's
+    ``deep_delayed_sgd_epoch``): party ℓ's fresh encoder gradients enter
+    its ring buffers at slot t and the applied update reads slot
+    t − d_ℓ; the head (dominator-held, replicated on the engine path)
+    applies its gradient fresh — delaying it would fork the replicas."""
+    from repro.core.deep_vfl import _bum_grads
+
+    gw1, gb1, gw2, gh = _bum_grads(pt, [b[ib] for b in blocks], y[ib],
+                                   problem, q)
+    bw1, bb1, bw2 = bufs
+    slot = t % (tau + 1)
+    w1, b1, w2, head = pt
+    new_w1, new_b1, new_w2 = [], [], []
+    nbw1, nbb1, nbw2 = [], [], []
+    for p in range(q):
+        pb1 = jax.lax.dynamic_update_index_in_dim(bw1[p], gw1[p], slot, 0)
+        pb2 = jax.lax.dynamic_update_index_in_dim(bb1[p], gb1[p], slot, 0)
+        pb3 = jax.lax.dynamic_update_index_in_dim(bw2[p], gw2[p], slot, 0)
+        eff = jnp.maximum(t - delays[p], 0) % (tau + 1)
+        live = 0.0 if (freeze and p >= m) else 1.0
+        new_w1.append(w1[p] - lr * live * jax.lax.dynamic_index_in_dim(
+            pb1, eff, 0, keepdims=False))
+        new_b1.append(b1[p] - lr * live * jax.lax.dynamic_index_in_dim(
+            pb2, eff, 0, keepdims=False))
+        new_w2.append(w2[p] - lr * live * jax.lax.dynamic_index_in_dim(
+            pb3, eff, 0, keepdims=False))
+        nbw1.append(pb1)
+        nbb1.append(pb2)
+        nbw2.append(pb3)
+    pt = (tuple(new_w1), tuple(new_b1), tuple(new_w2), head - lr * gh)
+    return pt, (tuple(nbw1), tuple(nbb1), tuple(nbw2)), t + 1
+
+
+def train_deep_delayed(problem: Problem, x, y, layout: PartyLayout,
+                       tau: int, epochs: int = 3, lr: float = 0.05,
+                       batch: int = 32, seed: int = 0, hidden: int = 32,
+                       d_rep: int = 16, freeze_passive: bool = False):
+    """Sequential oracle for bounded-delay **deep** VFB²-SGD: the same
+    driver/key stream as ``deep_vfl.train_deep_vfl`` with per-party
+    encoder-gradient ring buffers (delay schedule from
+    :func:`party_delay_values`).  Returns the final ``DeepVFLParams``;
+    the fused realization is :func:`run_deep_delayed_fused`."""
+    from repro.core import deep_vfl
+
+    n, d = x.shape
+    q, m = layout.q, layout.m
+    key = jax.random.PRNGKey(seed)
+    params = deep_vfl.init_deep_vfl(key, layout, d, hidden, d_rep)
+    xj = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    blocks = tuple(xj[:, lo:hi] for lo, hi in layout.bounds)
+    delays = jnp.asarray(party_delay_values(layout, tau, seed))
+
+    pt = deep_vfl._to_tuple(params)
+    ring = lambda a: jnp.zeros((tau + 1,) + a.shape, jnp.float32)
+    bufs = (tuple(ring(a) for a in pt[0]), tuple(ring(a) for a in pt[1]),
+            tuple(ring(a) for a in pt[2]))
+    t = jnp.zeros((), jnp.int32)
+    steps = max(1, n // batch)
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (steps, batch), 0, n)
+        for i in range(steps):
+            pt, bufs, t = _deep_delayed_step(
+                pt, bufs, t, idx[i], blocks, yj, lr, delays,
+                problem=problem, freeze=freeze_passive, m=m, q=q, tau=tau)
+    return deep_vfl._to_params(pt)
+
+
+def run_deep_delayed_fused(problem: Problem, x, y, layout: PartyLayout,
+                           tau: int, epochs: int, lr: float, batch: int,
+                           seed: int = 0, hidden: int = 32, d_rep: int = 16,
+                           engine_config=None, active_only: bool = False):
+    """Bounded-delay deep VFB²-SGD on the fused engine: whole stale deep
+    epochs (encoder forward, masked secure aggregation of the vector
+    partials, ϑ_z BUM broadcast, ring-buffered Jacobian-transpose
+    updates) are one compiled dispatch each.  Same init/key stream and
+    delay schedule as :func:`train_deep_delayed` (the oracle tests pin
+    them at 1e-5).  Returns the final ``DeepVFLParams``."""
+    from repro.core import deep_vfl
+    from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
+
+    n, d = np.asarray(x).shape
+    cfg = engine_config if engine_config is not None \
+        else EngineConfig(donate=True)
+    eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
+    key = jax.random.PRNGKey(seed)
+    pq = eng.pack_deep(deep_vfl.init_deep_vfl(key, layout, d, hidden,
+                                              d_rep))
+    bufq = eng.deep_delay_buffers(pq, tau)
+    delays_q = jnp.asarray(party_delay_values(layout, tau, seed))
+    t0 = jnp.zeros((), jnp.int32)
+    steps = max(1, n // batch)
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        pq, bufq, t0 = eng.deep_delayed_sgd_epoch(pq, bufq, t0, delays_q,
+                                                  lr, sub, batch, steps,
+                                                  tau)
+    return eng.unpack_deep(pq)
+
+
 def run_delayed_fused(problem: Problem, x, y, layout: PartyLayout,
                       tau: int, epochs: int, lr: float, batch: int,
                       seed: int = 0, engine_config=None,

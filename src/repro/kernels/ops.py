@@ -7,10 +7,14 @@ through Mosaic.
 
 ``vfl_grad`` is the batched rank-k fused forward/backward VFL kernel; both
 of its reductions (z across feature tiles, g across batch tiles) complete
-*inside* the kernel, so these wrappers perform no out-of-kernel math.  The
-canonical consumer is the fused federated step engine
-(`repro.core.engine`), which runs whole VFB² epochs as one compiled
-program and routes its X-block contractions here on TPU backends.
+*inside* the kernel, so these wrappers perform no out-of-kernel math.  A
+side whose reduction fits a single grid visit (one feature tile for z,
+one backward row tile for g) elides its VMEM accumulator entirely and
+writes the output directly — the common case for the deep-VFL encoder
+layers' narrow contractions.  The canonical consumer is the fused
+federated step engine (`repro.core.engine`), which runs whole VFB² epochs
+(linear and deep) as one compiled program and routes its X-block
+contractions here on TPU backends.
 """
 from __future__ import annotations
 

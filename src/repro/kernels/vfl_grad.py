@@ -25,7 +25,11 @@ Grid (nD, nB) — batch tiles minor-most (sequential) so the g accumulator
 carries across batch tiles for a fixed feature tile; the z accumulator is a
 full (B, M) scratch written through on every visit, so the last feature
 pass (di == nD−1) leaves the completed sum in HBM (the grid is sequential:
-last write wins).
+last write wins).  Either accumulator is **elided** when its reduction
+completes in a single visit — nD == 1 for z, a single backward row tile
+for g — so narrow operands (the deep-VFL encoder layers, rank-1 single-
+tile minibatches) write their outputs straight through with no dead VMEM
+scratch and no per-grid-step accumulator traffic in interpret mode.
 
 Shapes that do not divide the tile are zero-padded inside the wrapper and
 the outputs sliced back, so odd party widths (``PartyLayout.even`` with
@@ -80,7 +84,8 @@ def _concrete_zero(lam) -> bool:
 
 
 def _vfl_kernel(*refs, denom: int, block_b: int, fwd: bool, bwd: bool,
-                has_w: bool, use_lamw: bool, nsplit: int | None):
+                has_w: bool, use_lamw: bool, nsplit: int | None,
+                z_acc_used: bool, g_acc_used: bool):
     # Single-sided modes carry only their own operands/outputs (no HBM
     # traffic for a dead side); ref order follows the wrapper's specs.
     # ``has_w=False`` (backward with ``w=None``) additionally drops the
@@ -91,6 +96,11 @@ def _vfl_kernel(*refs, denom: int, block_b: int, fwd: bool, bwd: bool,
     # skip the backward accumulate — each side's MXU work runs on its own
     # rows only, so the fused launch does the same flops as two
     # single-sided launches.
+    # Scratch elision: a side whose reduction completes within one grid
+    # visit (z with a single feature tile, g with a single backward row
+    # tile) writes its output ref directly — no VMEM accumulator is
+    # allocated and no per-grid-step accumulator traffic happens
+    # (``z_acc_used``/``g_acc_used`` gate the scratch refs).
     it = iter(refs)
     x_ref = next(it)
     w_ref = next(it) if has_w else None
@@ -98,8 +108,8 @@ def _vfl_kernel(*refs, denom: int, block_b: int, fwd: bool, bwd: bool,
     lam_ref = next(it) if use_lamw else None
     z_ref = next(it) if fwd else None
     g_ref = next(it) if bwd else None
-    z_acc = next(it) if fwd else None
-    g_acc = next(it) if bwd else None
+    z_acc = next(it) if fwd and z_acc_used else None
+    g_acc = next(it) if bwd and g_acc_used else None
 
     di = pl.program_id(0)
     bi = pl.program_id(1)
@@ -112,6 +122,11 @@ def _vfl_kernel(*refs, denom: int, block_b: int, fwd: bool, bwd: bool,
         def _z_work():
             # forward partials for this (feature, batch) tile: rank-k MXU
             zt = jnp.dot(x, w, preferred_element_type=jnp.float32)
+            if z_acc is None:
+                # nD == 1: one feature pass computes the full z — write
+                # the output block directly, no accumulator round-trip
+                z_ref[...] = zt
+                return
             sl = pl.ds(bi * block_b, block_b)
 
             @pl.when(di == 0)
@@ -134,7 +149,25 @@ def _vfl_kernel(*refs, denom: int, block_b: int, fwd: bool, bwd: bool,
         else:
             pl.when(bi >= nsplit)(_z_work)
 
-    if bwd:
+    if bwd and g_acc is None:
+        # A single backward row tile: XᵀΘ is complete after one visit, so
+        # finalize (scale + λW) inline and skip the accumulator.  The
+        # output block for feature tile di persists across the remaining
+        # (forward-only) batch-tile visits — same sequential-grid
+        # revisiting contract the z path relies on.
+        def _g_once():
+            th = theta_ref[...].astype(jnp.float32)       # (Bb, Mθ)
+            acc = jnp.dot(x.T, th,
+                          preferred_element_type=jnp.float32) / denom
+            if use_lamw:
+                acc = acc + lam_ref[0, 0] * w
+            g_ref[...] = acc.astype(g_ref.dtype)
+
+        if nsplit is None:
+            _g_once()
+        else:
+            pl.when(bi < nsplit)(_g_once)
+    elif bwd:
         @pl.when(bi == 0)
         def _g_init():
             g_acc[...] = jnp.zeros_like(g_acc)
@@ -264,9 +297,17 @@ def vfl_grad(xb, w, theta, lam=0.0, *, block_b: int = 128,
         w2 = jnp.pad(w2, ((0, dp - d), (0, 0)))
     nb, nd = bp // block_b, dp // block_d
 
+    # Scratch elision (see kernel): the z accumulator exists only when the
+    # forward reduction spans >1 feature tile; the g accumulator only when
+    # the backward rows span >1 row tile (all rows without split, the
+    # backward block's tiles with it).
+    z_acc_used = fwd and nd > 1
+    g_acc_used = bwd and (nb if nsplit is None else nsplit) > 1
+
     kernel = functools.partial(_vfl_kernel, denom=denom, block_b=block_b,
                                fwd=fwd, bwd=bwd, has_w=has_w,
-                               use_lamw=use_lamw, nsplit=nsplit)
+                               use_lamw=use_lamw, nsplit=nsplit,
+                               z_acc_used=z_acc_used, g_acc_used=g_acc_used)
     # Mode-specific specs: a single-sided call neither streams the unused
     # operand into VMEM nor DMAs a dead output back to HBM.  A dead side's
     # column count is None, so each side's specs are built only under its
@@ -287,18 +328,20 @@ def vfl_grad(xb, w, theta, lam=0.0, *, block_b: int = 128,
     if fwd:
         sides.append((pl.BlockSpec((block_b, mw), lambda di, bi: (bi, 0)),
                       jax.ShapeDtypeStruct((bp, mw), jnp.float32),
-                      pltpu.VMEM((bp, mw), jnp.float32)))
+                      pltpu.VMEM((bp, mw), jnp.float32) if z_acc_used
+                      else None))
     if bwd:
         sides.append((pl.BlockSpec((block_d, mth), lambda di, bi: (di, 0)),
                       jax.ShapeDtypeStruct((dp, mth), jnp.float32),
-                      pltpu.VMEM((block_d, mth), jnp.float32)))
+                      pltpu.VMEM((block_d, mth), jnp.float32) if g_acc_used
+                      else None))
     outs = pl.pallas_call(
         kernel,
         grid=(nd, nb),
         in_specs=in_specs,
         out_specs=[s[0] for s in sides],
         out_shape=[s[1] for s in sides],
-        scratch_shapes=[s[2] for s in sides],
+        scratch_shapes=[s[2] for s in sides if s[2] is not None],
         interpret=interpret,
     )(*operands)
     if not fwd:

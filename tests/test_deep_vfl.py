@@ -66,3 +66,111 @@ def _acc(params, layout, x, y):
     pred = np.sign(np.asarray(logits))
     pred[pred == 0] = 1
     return (pred == y).mean()
+
+
+# ---------------------------------------------------------------------------
+# regularizer regression (the PR-4 headline bugfix: λ∇g was silently
+# dropped from BOTH the protocol and the centralized path, so
+# logistic_l2(lam=...) trained an unregularized model)
+# ---------------------------------------------------------------------------
+
+def test_regularizer_is_applied_and_lossless(ds):
+    """λ > 0 must change the trajectory vs λ = 0 (it used to be a no-op),
+    and the regularized BUM path must still match the regularized
+    centralized oracle exactly (losslessness with the fix in)."""
+    layout = PartyLayout.even(32, 4, 2)
+    kw = dict(epochs=3, lr=0.05, batch=32, seed=0)
+    p0, h0 = deep_vfl.train_deep_vfl(losses.logistic_l2(lam=0.0),
+                                     ds.x_train, ds.y_train, layout, **kw)
+    p1, h1 = deep_vfl.train_deep_vfl(losses.logistic_l2(lam=0.1),
+                                     ds.x_train, ds.y_train, layout, **kw)
+    # the λ‖·‖² pull must move the trained parameters, not just the
+    # reported objective
+    assert np.abs(np.asarray(p1.head) - np.asarray(p0.head)).max() > 1e-4
+    assert max(np.abs(np.asarray(a) - np.asarray(b)).max()
+               for a, b in zip(p1.enc_w1, p0.enc_w1)) > 1e-4
+    pc, hc = deep_vfl.train_centralized(losses.logistic_l2(lam=0.1),
+                                        ds.x_train, ds.y_train, layout,
+                                        **kw)
+    np.testing.assert_allclose(h1, hc, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(p1.head), np.asarray(pc.head),
+                               atol=1e-4)
+
+
+def test_centralized_accepts_params_override(ds):
+    """Shared-init comparisons from external params: both trainers accept
+    ``params=`` and then produce identical trajectories."""
+    import jax
+    layout = PartyLayout.even(32, 4, 2)
+    prob = losses.logistic_l2(lam=0.01)
+    # an init neither trainer would derive from its own seed
+    params = deep_vfl.init_deep_vfl(jax.random.PRNGKey(123), layout, 32)
+    kw = dict(epochs=2, lr=0.05, batch=32, seed=0, params=params)
+    p1, h1 = deep_vfl.train_deep_vfl(prob, ds.x_train, ds.y_train, layout,
+                                     **kw)
+    p2, h2 = deep_vfl.train_centralized(prob, ds.x_train, ds.y_train,
+                                        layout, **kw)
+    np.testing.assert_allclose(h1, h2, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(p1.head), np.asarray(p2.head),
+                               atol=1e-4)
+
+
+def test_chained_calls_do_not_recompile(ds):
+    """The jitted steps are module-level: a second train call with the
+    same problem/shapes must not grow the compilation caches."""
+    layout = PartyLayout.even(32, 4, 2)
+    prob = losses.logistic_l2()
+    kw = dict(epochs=1, lr=0.05, batch=32, seed=0)
+    deep_vfl.train_deep_vfl(prob, ds.x_train, ds.y_train, layout, **kw)
+    deep_vfl.train_centralized(prob, ds.x_train, ds.y_train, layout, **kw)
+    n_bum = deep_vfl._bum_step._cache_size()
+    n_cen = deep_vfl._centralized_step._cache_size()
+    deep_vfl.train_deep_vfl(prob, ds.x_train, ds.y_train, layout, seed=1,
+                            **{k: v for k, v in kw.items() if k != "seed"})
+    deep_vfl.train_centralized(prob, ds.x_train, ds.y_train, layout,
+                               seed=1,
+                               **{k: v for k, v in kw.items()
+                                  if k != "seed"})
+    assert deep_vfl._bum_step._cache_size() == n_bum
+    assert deep_vfl._centralized_step._cache_size() == n_cen
+
+
+def test_deep_svrg_full_batch_equals_centralized_gd(ds):
+    """Independent pin of the SVRG correction's sign/scale: with batch = n
+    each epoch is one step taken at w == w̃, so g₁ and g₀ cancel exactly
+    and v = μ — the trajectory must equal full-gradient descent on the
+    centralized (regularized) objective, computed here with one autodiff
+    graph the protocol code never touches."""
+    import jax
+    import jax.numpy as jnp
+
+    layout = PartyLayout.even(32, 4, 2)
+    prob = losses.logistic_l2(lam=0.01)
+    n = ds.x_train.shape[0]
+    epochs, lr = 3, 0.05
+    params = deep_vfl.init_deep_vfl(jax.random.PRNGKey(0), layout, 32)
+    p_svrg, _ = deep_vfl.train_deep_vfl(prob, ds.x_train, ds.y_train,
+                                        layout, epochs=epochs, lr=lr,
+                                        batch=n, seed=0, params=params,
+                                        algo="svrg")
+    xj = jnp.asarray(ds.x_train, jnp.float32)
+    yj = jnp.asarray(ds.y_train, jnp.float32)
+    blocks = tuple(xj[:, lo:hi] for lo, hi in layout.bounds)
+
+    def loss_fn(pt):
+        w1, b1, w2, head = pt
+        parts = [deep_vfl._party_encode(w1[p], b1[p], w2[p], blocks[p])
+                 for p in range(layout.q)]
+        logit = sum(parts) @ head
+        regv = sum(jnp.sum(prob.reg(a)) for a in jax.tree.leaves(pt))
+        return jnp.mean(prob.loss(logit, yj)) + prob.lam * regv
+
+    grad = jax.jit(jax.grad(loss_fn))
+    pt = deep_vfl._to_tuple(params)
+    for _ in range(epochs):
+        pt = jax.tree.map(lambda p, g: p - lr * g, pt, grad(pt))
+    p_ref = deep_vfl._to_params(pt)
+    np.testing.assert_allclose(np.asarray(p_svrg.head),
+                               np.asarray(p_ref.head), atol=1e-4)
+    for a, b in zip(p_svrg.enc_w1, p_ref.enc_w1):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -284,6 +284,56 @@ def test_vfl_grad_block_shape_invariance():
                                    atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("b,d,bb,bd", [
+    (32, 16, 128, 128),     # single tile both ways: z AND g elided
+    (300, 16, 64, 128),     # nd==1, nb>1: z elided, g accumulates
+    (32, 300, 128, 64),     # nb==1, nd>1: g elided, z accumulates
+    (300, 300, 64, 64),     # neither elided (regression anchor)
+])
+def test_vfl_grad_scratch_elision_equivalence(b, d, bb, bd):
+    """Whether a side's VMEM accumulator exists is decided by the tile
+    counts (nd==1 elides z, a single backward row tile elides g) — a pure
+    perf property that must not change any output.  Each shape is checked
+    against the jnp oracle AND against a small-block run of the same
+    problem that forces both accumulators on."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    xb = _rand(ks[0], (b, d), jnp.float32)
+    w = _rand(ks[1], (d, 2), jnp.float32)
+    th = _rand(ks[2], (b, 2), jnp.float32)
+    z, g = ops.vfl_grad(xb, w, th, lam=0.02, block_b=bb, block_d=bd)
+    zr, gr = ref.vfl_grad_ref(xb, w, th, 0.02)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-5,
+                               rtol=1e-4)
+    # both-accumulators-on rerun of the identical problem (8-row/8-lane
+    # tiles guarantee nb > 1 and nd > 1 at these shapes)
+    z2, g2 = ops.vfl_grad(xb, w, th, lam=0.02, block_b=8, block_d=8)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z2), atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g2), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_vfl_grad_scratch_elision_split_batch():
+    """Split-batch fused form with a single backward row tile (nsplit==1):
+    the elided-g direct write must persist across the later forward-only
+    tile visits (the sequential-grid revisiting contract)."""
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    bb, bf, d = 32, 64, 48
+    xb = _rand(ks[0], (bb + bf, d), jnp.float32)
+    w = _rand(ks[1], (d, 1), jnp.float32)
+    th = _rand(ks[2], (bb, 3), jnp.float32)
+    z, g = ops.vfl_grad(xb, w, th, lam=0.0, split=bb, block_b=64,
+                        block_d=128)
+    np.testing.assert_allclose(np.asarray(z),
+                               np.asarray(xb[bb:] @ w), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(xb[:bb].T @ th / bb), atol=1e-5,
+                               rtol=1e-4)
+
+
 def test_vfl_grad_partials_are_party_blocks():
     """Per-party kernel invocations on column blocks produce exactly the
     partial products Algorithm 1 masks and aggregates: their sum equals the
