@@ -18,6 +18,14 @@ def main() -> None:
                     help="smaller trials/datasets (CI budget)")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (e.g. kernels,engine)")
+    ap.add_argument("--ci", action="store_true",
+                    help="machine-readable drift gate: emit GitHub "
+                         "::warning:: annotations for every drift beyond "
+                         "tolerance (deterministic headlines 20%%; "
+                         "wall-clock ratios 20%% full / 50%% quick tier, "
+                         "advisory) and exit nonzero when a deterministic "
+                         "headline drifts from the committed "
+                         "benchmarks/BENCH_engine.json baseline")
     args = ap.parse_args()
 
     from benchmarks import (bench_async, bench_engine, bench_kernels,
@@ -46,8 +54,14 @@ def main() -> None:
             quick=args.quick),
         "pipelined": lambda: bench_engine.run_pipelined(quick=args.quick),
         "deep": lambda: bench_engine.run_deep(quick=args.quick),
+        "deep_multi": lambda: bench_engine.run_deep_multi(
+            quick=args.quick),
+        "deep_pipelined": lambda: bench_engine.run_deep_pipelined(
+            quick=args.quick),
         "roofline": bench_roofline.run,
     }
+    if args.ci:
+        bench_engine.set_ci_mode(True)
     only = set(args.only.split(",")) if args.only else None
     if only and not only <= suites.keys():
         ap.error(f"unknown suite(s) {sorted(only - suites.keys())}; "
@@ -65,6 +79,12 @@ def main() -> None:
     if failed:
         print("FAILED SUITES:", failed, file=sys.stderr)
         raise SystemExit(1)
+    if args.ci and bench_engine.gating_drifts():
+        for e in bench_engine.gating_drifts():
+            print(f"DRIFT GATE: {e['name']} {e['drift']:.0%} "
+                  f"({e['fresh']:.2f} vs committed {e['committed']:.2f})",
+                  file=sys.stderr)
+        raise SystemExit(2)
 
 
 if __name__ == "__main__":

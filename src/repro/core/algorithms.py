@@ -570,9 +570,6 @@ def _train_deep(problem, x, y, layout, algo, epochs, lr, batch, seed,
     the full ``DeepVFLParams`` ride ``result.params``."""
     from repro.core import deep_vfl  # lazy: deep_vfl imports this module
 
-    if multi_dominator or pipelined:
-        raise ValueError("deep VFB² supports neither multi_dominator nor "
-                         "pipelined scheduling yet")
     if algo not in ("sgd", "svrg"):
         raise ValueError(f"deep VFB² supports algo in ('sgd', 'svrg'); "
                          f"got {algo!r}")
@@ -580,7 +577,8 @@ def _train_deep(problem, x, y, layout, algo, epochs, lr, batch, seed,
         params, objs = deep_vfl.train_deep_vfl(
             problem, x, y, layout, algo=algo, epochs=epochs, lr=lr,
             batch=batch, seed=seed, hidden=hidden, d_rep=d_rep,
-            freeze_passive=active_only, params=deep_params)
+            freeze_passive=active_only, params=deep_params,
+            multi_dominator=multi_dominator, pipelined=pipelined)
         hist = [{"epoch": i + 1, "objective": o, "algo": f"deep_{algo}"}
                 for i, o in enumerate(objs)]
         return TrainResult(w=np.asarray(params.head), history=hist,
@@ -589,16 +587,21 @@ def _train_deep(problem, x, y, layout, algo, epochs, lr, batch, seed,
         raise ValueError(f"unknown engine {engine}")
     return _train_deep_fused(problem, x, y, layout, algo, epochs, lr,
                              batch, seed, active_only, engine_config,
-                             hidden, d_rep, deep_params)
+                             hidden, d_rep, deep_params,
+                             multi_dominator, pipelined)
 
 
 def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
                       active_only, engine_config, hidden, d_rep,
-                      deep_params=None) -> TrainResult:
+                      deep_params=None, multi_dominator=False,
+                      pipelined=False) -> TrainResult:
     """Deep hot-path trainer: every nonlinear epoch is ONE device dispatch
     (encoder forward, masked secure aggregation of the (B, d_rep) vector
     partials, ϑ_z = ϑ_logit·head BUM broadcast, and Jacobian-transpose
-    updates all inside the compiled program).  Key stream and math mirror
+    updates all inside the compiled program).  ``multi_dominator=True``
+    routes through the engine's m-concurrent-dominator deep epochs and
+    ``pipelined=True`` through the one-invocation-per-interior-step τ = 1
+    schedule (the flags compose).  Key stream and math mirror
     ``deep_vfl.train_deep_vfl`` exactly (tests pin the histories and final
     params at 1e-5)."""
     from repro.core import deep_vfl  # lazy: deep_vfl imports this module
@@ -613,14 +616,24 @@ def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
         deep_params = deep_vfl.init_deep_vfl(key, layout, d, hidden, d_rep)
     pq = eng.pack_deep(deep_params)
     steps = max(1, n // batch)
+    if multi_dominator:
+        sgd_epoch = eng.deep_multi_pipelined_sgd_epoch if pipelined \
+            else eng.deep_multi_sgd_epoch
+        svrg_epoch = eng.deep_multi_pipelined_svrg_epoch if pipelined \
+            else eng.deep_multi_svrg_epoch
+    else:
+        sgd_epoch = eng.deep_pipelined_sgd_epoch if pipelined \
+            else eng.deep_sgd_epoch
+        svrg_epoch = eng.deep_pipelined_svrg_epoch if pipelined \
+            else eng.deep_svrg_epoch
     hist = []
     for ep in range(epochs):
         key, sub = jax.random.split(key)
         if algo == "sgd":
-            pq = eng.deep_sgd_epoch(pq, lr, sub, batch, steps)
+            pq = sgd_epoch(pq, lr, sub, batch, steps)
         else:  # svrg: snapshot aliases the live iterate (no donation there)
             muq = eng.deep_full_gradient(pq, sub)
-            pq = eng.deep_svrg_epoch(pq, pq, muq, lr, sub, batch, steps)
+            pq = svrg_epoch(pq, pq, muq, lr, sub, batch, steps)
         hist.append({"epoch": ep + 1, "objective": eng.deep_objective(pq),
                      "algo": f"deep_{algo}", "engine": "fused"})
     params = eng.unpack_deep(pq)

@@ -97,7 +97,7 @@ def fused_forward(params: DeepVFLParams, x_blocks, rng=None,
 # protocol-way gradients (shared by the SGD / SVRG / delayed oracles)
 # ---------------------------------------------------------------------------
 
-def _bum_grads(pt, xb, yb, problem: Problem, q: int):
+def _bum_grads(pt, xb, yb, problem: Problem, q: int, mdom: int = 1):
     """One BUM round at ``pt`` on minibatch blocks ``xb`` (list of (B, d_ℓ)).
 
     The dominator computes ϑ_logit, broadcasts ϑ_z = ϑ_logit·head, and each
@@ -105,6 +105,13 @@ def _bum_grads(pt, xb, yb, problem: Problem, q: int):
     boundary is explicit).  Every gradient includes the λ∇g(·) regularizer
     term (paper Alg. 3 step 3; dropping it was the pre-PR-4 bug).  Returns
     a pytree shaped like ``pt``: (w1 grads, b1 grads, w2 grads, head grad).
+
+    ``mdom > 1`` is the multi-dominator round: the blocks carry the m
+    dominators' concatenated minibatches, each dominator's ϑ is normalized
+    by its own batch, the λ∇g term applies once per concurrent update
+    (mdom·λ∇g), and the full-row vjp sums the m per-dominator updates —
+    the paper's m-active-party regime in its deterministic (same-read)
+    realization.
     """
     enc_w1, enc_b1, enc_w2, head = pt
     lam = problem.lam
@@ -118,16 +125,75 @@ def _bum_grads(pt, xb, yb, problem: Problem, q: int):
     z = sum(parts)                       # == Algorithm-1 aggregate
     logit = z @ head
 
-    theta_logit = problem.theta(logit, yb) / yb.shape[0]   # (B,)
+    theta_logit = problem.theta(logit, yb) / (yb.shape[0] // mdom)  # (m·B,)
     theta_z = theta_logit[:, None] * head                  # ∂L/∂z (BUM)
-    g_head = z.T @ theta_logit + lam * problem.reg_grad(head)
+    g_head = z.T @ theta_logit + mdom * lam * problem.reg_grad(head)
 
     gw1, gb1, gw2 = [], [], []
     for p in range(q):
         g1, g2, g3 = vjps[p](theta_z)
-        gw1.append(g1 + lam * problem.reg_grad(enc_w1[p]))
-        gb1.append(g2 + lam * problem.reg_grad(enc_b1[p]))
-        gw2.append(g3 + lam * problem.reg_grad(enc_w2[p]))
+        gw1.append(g1 + mdom * lam * problem.reg_grad(enc_w1[p]))
+        gb1.append(g2 + mdom * lam * problem.reg_grad(enc_b1[p]))
+        gw2.append(g3 + mdom * lam * problem.reg_grad(enc_w2[p]))
+    return tuple(gw1), tuple(gb1), tuple(gw2), g_head
+
+
+def _deep_fwd_acts(pt, xb, q: int):
+    """Per-party activations + aggregate at ``pt`` on blocks ``xb``:
+    (hs: per-party (B, hidden) tuples, z: (B, d_rep)) — the quantities the
+    pipelined schedule carries one round stale."""
+    w1, b1, w2, _ = pt
+    hs = tuple(jnp.tanh(xb[p] @ w1[p] + b1[p]) for p in range(q))
+    z = sum(hs[p] @ w2[p] for p in range(q))
+    return hs, z
+
+
+def _bum_stale_grads(pt, xb, hs, z, yb, problem: Problem, q: int,
+                     mdom: int = 1):
+    """Application-time BUM gradients of a *pipelined* round: ϑ and the
+    regularizers are evaluated at the current params, the local Jacobians
+    at the carried activations ``(hs, z)`` — which the τ = 1 schedule
+    computed from the encoder params one update old (the epoch's first
+    round is fresh).  Same return shape as :func:`_bum_grads`."""
+    enc_w1, enc_b1, enc_w2, head = pt
+    lam = problem.lam
+    theta_logit = problem.theta(z @ head, yb) / (yb.shape[0] // mdom)
+    theta_z = theta_logit[:, None] * head
+    g_head = z.T @ theta_logit + mdom * lam * problem.reg_grad(head)
+    gw1, gb1, gw2 = [], [], []
+    for p in range(q):
+        du = (theta_z @ enc_w2[p].T) * (1.0 - hs[p] * hs[p])
+        gw1.append(xb[p].T @ du + mdom * lam * problem.reg_grad(enc_w1[p]))
+        gb1.append(du.sum(axis=0) + mdom * lam * problem.reg_grad(enc_b1[p]))
+        gw2.append(hs[p].T @ theta_z
+                   + mdom * lam * problem.reg_grad(enc_w2[p]))
+    return tuple(gw1), tuple(gb1), tuple(gw2), g_head
+
+
+def _bum_dom_grads(pt, xb, hs, z, yb, problem: Problem, q: int, m: int):
+    """Per-dominator BUM gradients from (possibly stale) activations: the
+    m dominators' updates stay separate so each stream can age under its
+    own delay (the bounded-delay multi regime; ``core.staleness`` drives
+    this).  Returns per-party tuples of (m, ...) stacked encoder gradients
+    (per-stream λ∇g) and the fresh summed head gradient (m·λ∇g)."""
+    enc_w1, enc_b1, enc_w2, head = pt
+    lam = problem.lam
+    b = yb.shape[0] // m
+    theta_logit = problem.theta(z @ head, yb) / b
+    theta_z = theta_logit[:, None] * head
+    g_head = z.T @ theta_logit + m * lam * problem.reg_grad(head)
+    thz = theta_z.reshape(m, b, -1)
+    gw1, gb1, gw2 = [], [], []
+    for p in range(q):
+        du = (theta_z @ enc_w2[p].T) * (1.0 - hs[p] * hs[p])
+        dus = du.reshape(m, b, -1)
+        xbs = xb[p].reshape(m, b, -1)
+        gw1.append(jnp.einsum("jbd,jbh->jdh", xbs, dus)
+                   + lam * problem.reg_grad(enc_w1[p])[None])
+        gb1.append(dus.sum(axis=1)
+                   + lam * problem.reg_grad(enc_b1[p])[None])
+        gw2.append(jnp.einsum("jbh,jbr->jhr", hs[p].reshape(m, b, -1), thz)
+                   + lam * problem.reg_grad(enc_w2[p])[None])
     return tuple(gw1), tuple(gb1), tuple(gw2), g_head
 
 
@@ -147,11 +213,12 @@ def _apply_update(pt, g, lr, freeze: bool, m: int, q: int):
 # problem/shapes reuse ONE compilation (the pre-PR-4 closures re-jit per
 # call).  ``problem``/``freeze``/``m``/``q`` are static; data is traced.
 
-@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q"))
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "mdom"))
 def _bum_step(pt, ib, blocks, y, lr, problem: Problem, freeze: bool,
-              m: int, q: int):
+              m: int, q: int, mdom: int = 1):
     xb = [b[ib] for b in blocks]
-    g = _bum_grads(pt, xb, y[ib], problem, q)
+    g = _bum_grads(pt, xb, y[ib], problem, q, mdom)
     return _apply_update(pt, g, lr, freeze, m, q)
 
 
@@ -161,14 +228,77 @@ def _bum_full_grad(pt, blocks, y, problem: Problem, q: int):
     return _bum_grads(pt, list(blocks), y, problem, q)
 
 
-@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q"))
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "mdom"))
 def _bum_svrg_step(pt, pt_snap, mu, ib, blocks, y, lr, problem: Problem,
-                   freeze: bool, m: int, q: int):
-    """v = g_i(w) − g_i(w̃) + μ per parameter leaf (Alg. 4/5, deep form)."""
+                   freeze: bool, m: int, q: int, mdom: int = 1):
+    """v = g_i(w) − g_i(w̃) + μ per parameter leaf (Alg. 4/5, deep form;
+    the multi-dominator round sums m such updates, hence the mdom·μ)."""
     xb = [b[ib] for b in blocks]
-    g1 = _bum_grads(pt, xb, y[ib], problem, q)
-    g0 = _bum_grads(pt_snap, xb, y[ib], problem, q)
-    v = jax.tree.map(lambda a, b, c: a - b + c, g1, g0, mu)
+    g1 = _bum_grads(pt, xb, y[ib], problem, q, mdom)
+    g0 = _bum_grads(pt_snap, xb, y[ib], problem, q, mdom)
+    v = jax.tree.map(lambda a, b, c: a - b + mdom * c, g1, g0, mu)
+    return _apply_update(pt, v, lr, freeze, m, q)
+
+
+# Pipelined (τ = 1 stale forward read) oracle steps: the interior step
+# applies round t's BUM gradients from the carried activations, then runs
+# round t+1's encoder forward at the *pre-update* params — exactly the
+# engine's one-invocation-per-step schedule, sequentially.
+
+@functools.partial(jax.jit, static_argnames=("q",))
+def _bum_pipe_prologue(pt, ib, blocks, q: int):
+    return _deep_fwd_acts(pt, [b[ib] for b in blocks], q)
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "mdom"))
+def _bum_pipe_step(pt, ib, hs, z, ib_next, blocks, y, lr,
+                   problem: Problem, freeze: bool, m: int, q: int,
+                   mdom: int = 1):
+    xb = [b[ib] for b in blocks]
+    g = _bum_stale_grads(pt, xb, hs, z, y[ib], problem, q, mdom)
+    hs_next, z_next = _deep_fwd_acts(pt, [b[ib_next] for b in blocks], q)
+    return _apply_update(pt, g, lr, freeze, m, q), hs_next, z_next
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "mdom"))
+def _bum_pipe_tail(pt, ib, hs, z, blocks, y, lr, problem: Problem,
+                   freeze: bool, m: int, q: int, mdom: int = 1):
+    """Backward-only epilogue (the last round's drained pipeline)."""
+    xb = [b[ib] for b in blocks]
+    g = _bum_stale_grads(pt, xb, hs, z, y[ib], problem, q, mdom)
+    return _apply_update(pt, g, lr, freeze, m, q)
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "mdom"))
+def _bum_pipe_svrg_step(pt, pt_snap, mu, ib, hs, z, hss, zs, ib_next,
+                        blocks, y, lr, problem: Problem, freeze: bool,
+                        m: int, q: int, mdom: int = 1):
+    """Pipelined SVRG interior step: both the iterate's and the (constant,
+    hence delay-free) snapshot's activations ride the stale carry."""
+    xb = [b[ib] for b in blocks]
+    g1 = _bum_stale_grads(pt, xb, hs, z, y[ib], problem, q, mdom)
+    g0 = _bum_stale_grads(pt_snap, xb, hss, zs, y[ib], problem, q, mdom)
+    v = jax.tree.map(lambda a, b, c: a - b + mdom * c, g1, g0, mu)
+    nxt = [b[ib_next] for b in blocks]
+    hs_next, z_next = _deep_fwd_acts(pt, nxt, q)
+    hss_next, zs_next = _deep_fwd_acts(pt_snap, nxt, q)
+    return (_apply_update(pt, v, lr, freeze, m, q), hs_next, z_next,
+            hss_next, zs_next)
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "mdom"))
+def _bum_pipe_svrg_tail(pt, pt_snap, mu, ib, hs, z, hss, zs, blocks, y,
+                        lr, problem: Problem, freeze: bool, m: int,
+                        q: int, mdom: int = 1):
+    xb = [b[ib] for b in blocks]
+    g1 = _bum_stale_grads(pt, xb, hs, z, y[ib], problem, q, mdom)
+    g0 = _bum_stale_grads(pt_snap, xb, hss, zs, y[ib], problem, q, mdom)
+    v = jax.tree.map(lambda a, b, c: a - b + mdom * c, g1, g0, mu)
     return _apply_update(pt, v, lr, freeze, m, q)
 
 
@@ -194,7 +324,8 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
                    layout: PartyLayout, epochs: int = 20, lr: float = 0.05,
                    batch: int = 32, seed: int = 0, hidden: int = 32,
                    d_rep: int = 16, freeze_passive: bool = False,
-                   params: DeepVFLParams | None = None, algo: str = "sgd"):
+                   params: DeepVFLParams | None = None, algo: str = "sgd",
+                   multi_dominator: bool = False, pipelined: bool = False):
     """BUM training of the deep VFL model (the sequential oracle).
 
     Gradients are computed the protocol way: ϑ_logit at the active party,
@@ -203,11 +334,19 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
     ``algo="svrg"`` runs the variance-reduced inner loop (snapshot + full
     gradient per epoch, Alg. 4/5).  The fused engine's ``deep_*_epoch``
     methods are pinned against this function at 1e-5.
+
+    ``multi_dominator=True`` runs all m = layout.m active parties as
+    concurrent dominators per round (m independent minibatches, every
+    party applying the m summed BUM updates); ``pipelined=True`` runs the
+    τ = 1 schedule (round t's update applied from activations computed at
+    the params one update old — the engine's backward(t) ∥ forward(t+1)
+    overlap, sequentially).  The flags compose.
     """
     if algo not in ("sgd", "svrg"):
         raise ValueError(f"unknown deep algo {algo!r}")
     n, d = x.shape
     q, m = layout.q, layout.m
+    mm = m if multi_dominator else 1
     key = jax.random.PRNGKey(seed)
     if params is None:
         params = init_deep_vfl(key, layout, d, hidden, d_rep)
@@ -217,21 +356,39 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
 
     pt = _to_tuple(params)
     steps = max(1, n // batch)
+    kw = dict(problem=problem, freeze=freeze_passive, m=m, q=q, mdom=mm)
     hist = []
     for ep in range(epochs):
         key, sub = jax.random.split(key)
-        idx = jax.random.randint(sub, (steps, batch), 0, n)
+        idx = jax.random.randint(sub, (steps, mm * batch), 0, n)
         if algo == "svrg":
             snap = pt
             mu = _bum_full_grad(snap, blocks, yj, problem=problem, q=q)
-            for i in range(steps):
-                pt = _bum_svrg_step(pt, snap, mu, idx[i], blocks, yj, lr,
-                                    problem=problem, freeze=freeze_passive,
-                                    m=m, q=q)
+            if pipelined:
+                hs, z = _bum_pipe_prologue(pt, idx[0], blocks, q=q)
+                hss, zs = _bum_pipe_prologue(snap, idx[0], blocks, q=q)
+                for i in range(steps - 1):
+                    pt, hs, z, hss, zs = _bum_pipe_svrg_step(
+                        pt, snap, mu, idx[i], hs, z, hss, zs, idx[i + 1],
+                        blocks, yj, lr, **kw)
+                pt = _bum_pipe_svrg_tail(pt, snap, mu, idx[-1], hs, z,
+                                         hss, zs, blocks, yj, lr, **kw)
+            else:
+                for i in range(steps):
+                    pt = _bum_svrg_step(pt, snap, mu, idx[i], blocks, yj,
+                                        lr, **kw)
         else:
-            for i in range(steps):
-                pt = _bum_step(pt, idx[i], blocks, yj, lr, problem=problem,
-                               freeze=freeze_passive, m=m, q=q)
+            if pipelined:
+                hs, z = _bum_pipe_prologue(pt, idx[0], blocks, q=q)
+                for i in range(steps - 1):
+                    pt, hs, z = _bum_pipe_step(pt, idx[i], hs, z,
+                                               idx[i + 1], blocks, yj, lr,
+                                               **kw)
+                pt = _bum_pipe_tail(pt, idx[-1], hs, z, blocks, yj, lr,
+                                    **kw)
+            else:
+                for i in range(steps):
+                    pt = _bum_step(pt, idx[i], blocks, yj, lr, **kw)
         params = _to_params(pt)
         hist.append(_objective(problem, params, blocks, yj))
     return params, hist

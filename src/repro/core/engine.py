@@ -73,6 +73,14 @@ the sequential oracle) — as the same one-dispatch compiled programs: the
 encoder layers' X-block contractions ride the rank-k kernel with the
 hidden/d_rep widths as the M axis, the vector partials take one masked
 secure aggregation per step, and ϑ_z = ϑ_logit·head is the BUM payload.
+The deep path carries the full schedule family of the linear path:
+``deep_multi_*`` run all m dominators' concurrent backward updates per
+step (m concatenated minibatches through ONE encoder forward, one masked
+aggregation of all m vector partial sets, per-dominator ϑ_z as block
+columns of the rank-k contraction), ``deep_pipelined_*`` overlap round
+t's Jacobian-transpose BUM application with round t+1's encoder forward
+in one split-batch invocation per interior step (τ = 1), and
+``deep_multi_pipelined_*`` compose both.
 
 Vertical partitioning packs party blocks to a uniform padded width
 (``PartyLayout.even`` with d % q != 0 works); the pad coordinates are
@@ -171,6 +179,29 @@ def dominator_onehot(m: int, batch: int) -> jax.Array:
     rank-k kernel's M axis."""
     seg = jnp.repeat(jnp.arange(m), batch)
     return (seg[:, None] == jnp.arange(m)[None, :]).astype(jnp.float32)
+
+
+def dom_block_cols(cots: jax.Array, m: int) -> jax.Array:
+    """(m·B, K) per-row cotangents -> (m·B, m·K) block-diagonal layout:
+    dominator j's rows occupy column block j, zeros elsewhere.  The deep
+    generalization of the block-diagonal Θ above — each dominator's
+    *vector-valued* cotangent block (du, ϑ_z) becomes K adjacent columns
+    of one rank-k contraction, so XᵀΘ yields all m per-dominator
+    Jacobian-transpose gradients in a single X pass."""
+    rows, k = cots.shape
+    sel = dominator_onehot(m, rows // m)              # (m·B, m)
+    return (sel[:, :, None] * cots[:, None, :]).reshape(rows, m * k)
+
+
+def _seg_contract(rows: jax.Array, cots: jax.Array, m: int) -> jax.Array:
+    """(D, m, K) per-dominator segment contraction: slab j is
+    rows_jᵀ · cots_j over dominator j's B rows of the concatenated
+    (m·B, ·) blocks — the flop-optimal jnp form of the block-diagonal
+    rank-k pass (used where a kernel launch must not be issued, e.g.
+    inside the one-invocation pipelined scan bodies)."""
+    b = rows.shape[0] // m
+    return jnp.einsum("jbd,jbk->djk", rows.reshape(m, b, rows.shape[1]),
+                      cots.reshape(m, b, cots.shape[1]))
 
 
 def pack_deep_params(params, layout: PartyLayout):
@@ -400,6 +431,22 @@ class FusedEngine:
         return jnp.einsum("jbd,jb->dj", xb.reshape(m, b, xb.shape[1]),
                           theta.reshape(m, b)) / denom
 
+    def _bwd_doms_wide(self, rows, cots, m: int, denom: int):
+        """(D, m, K) per-dominator Jacobian-transpose blocks from the
+        concatenated (m·B, D) row block and (m·B, K) vector cotangents:
+        slab j = rows_jᵀ·cots_j / denom — the vector-valued (deep)
+        generalization of :meth:`_bwd_doms`.
+
+        Kernel path: ONE rank-k pass whose M axis is the m dominators'
+        K-column blocks laid block-diagonally (`dom_block_cols`; the row
+        block streams from HBM once for all m dominators).  jnp path: the
+        flop-optimal batched segment einsum.  Identical slabs either way.
+        """
+        if self._route_kernel(rows.shape[0]):
+            g = self._bwd(rows, dom_block_cols(cots, m), denom)
+            return g.reshape(rows.shape[1], m, cots.shape[1])
+        return _seg_contract(rows, cots, m) / denom
+
     def _pipe(self, xb_bwd, xb_fwd, wcols, thcols, denom: int):
         """The pipelined step's single contraction: the BUM application of
         round t (``xb_bwd`` against Θ = ``thcols``) and the forward partial
@@ -416,6 +463,22 @@ class FusedEngine:
                 split=xb_bwd.shape[0], interpret=self._interpret,
                 block_b=self.cfg.block_b, block_d=self.cfg.block_d)
         return xb_fwd @ wcols, xb_bwd.T @ thcols / denom
+
+    def _pipe_doms_wide(self, xb_bwd, xb_fwd, wcols, cots, m: int,
+                        denom: int):
+        """Pipelined per-dominator *vector* contraction: backward(t)'s m
+        K-column Jacobian-cotangent slabs next to forward(t+1)'s Mw
+        weight columns.  Kernel path: one split-batch invocation with the
+        Mθ = m·K block-diagonal layout (`dom_block_cols`); jnp path: the
+        forward matmul plus the flop-optimal segment einsum — the
+        mostly-zero dense block matrix is never materialized (same
+        policy as :meth:`_bwd_doms_wide` / :meth:`_pipe_doms`).  Returns
+        ``(z_next (B_f, Mw), g (dp, m, K))``."""
+        if self._route_kernel(xb_bwd.shape[0] + xb_fwd.shape[0]):
+            z, g = self._pipe(xb_bwd, xb_fwd, wcols,
+                              dom_block_cols(cots, m), denom)
+            return z, g.reshape(xb_bwd.shape[1], m, cots.shape[1])
+        return xb_fwd @ wcols, _seg_contract(xb_bwd, cots, m) / denom
 
     def _pipe_doms(self, xb_bwd, xb_fwd, wp, theta, m: int, denom: int):
         """Pipelined multi-dominator contraction: backward(t)'s m
@@ -1405,30 +1468,62 @@ class FusedEngine:
     # replicated per party (the dominator's ϑ broadcast stand-in) and
     # takes the identical post-aggregation update everywhere.
 
-    def _deep_grads(self, xb, yb, w1, b1, w2, head, kt):
+    def _deep_grads(self, xb, yb, w1, b1, w2, head, kt, mdom: int = 1):
         """One deep BUM round at the given party-local params: returns the
         (g_w1, g_b1, g_w2, g_head) gradient pytree with the λ∇g(·)
         regularizer included on every leaf (matching the regularizer-fixed
-        ``deep_vfl._bum_grads`` oracle)."""
+        ``deep_vfl._bum_grads`` oracle).
+
+        ``mdom > 1`` is the multi-dominator round: ``xb``/``yb`` carry the
+        m dominators' concatenated minibatches, each dominator's ϑ is
+        normalized by its own batch, the λ∇g term is applied once per
+        concurrent update (mdom·λ∇g), and the full-row contractions sum
+        the m per-dominator Jacobian-transpose gradients — exactly the
+        summed block-column form of the rank-k pass."""
         prob = self.problem
-        bsz = yb.shape[0]
-        h = jnp.tanh(self._fwd(xb, w1) + b1)          # (B, hidden)
-        hr = self._fwd(h, w2)                         # (B, d_rep) partials
+        bsz = yb.shape[0] // mdom
+        h = jnp.tanh(self._fwd(xb, w1) + b1)          # (m·B, hidden)
+        hr = self._fwd(h, w2)                         # (m·B, d_rep) partials
         z = self._agg(hr, kt)                         # Algorithm-1 aggregate
         logit = z @ head
-        th_l = prob.theta(logit, yb) / bsz            # dominator's ϑ
+        th_l = prob.theta(logit, yb) / bsz            # dominators' ϑ
         th_z = th_l[:, None] * head                   # BUM payload ∂L/∂z
-        g_head = z.T @ th_l + prob.lam * prob.reg_grad(head)
-        g_w2 = self._bwd(h, th_z, 1) + prob.lam * prob.reg_grad(w2)
+        g_head = z.T @ th_l + mdom * prob.lam * prob.reg_grad(head)
+        g_w2 = self._bwd(h, th_z, 1) + mdom * prob.lam * prob.reg_grad(w2)
         du = (th_z @ w2.T) * (1.0 - h * h)            # tanh'
-        g_w1 = self._bwd(xb, du, 1) + prob.lam * prob.reg_grad(w1)
-        g_b1 = du.sum(axis=0) + prob.lam * prob.reg_grad(b1)
+        g_w1 = self._bwd(xb, du, 1) + mdom * prob.lam * prob.reg_grad(w1)
+        g_b1 = du.sum(axis=0) + mdom * prob.lam * prob.reg_grad(b1)
         return g_w1, g_b1, g_w2, g_head
 
-    def deep_sgd_epoch(self, pq, lr, key, batch: int, steps: int):
-        """Deep VFB²-SGD epoch as ONE compiled program; pinned against
-        ``deep_vfl.train_deep_vfl`` at 1e-5.  ``pq`` is the party-stacked
-        ``(w1q, b1q, w2q, headq)`` from :meth:`pack_deep`."""
+    def _deep_dom_grads(self, xb, yb, w1, b1, w2, head, kt, m: int):
+        """Per-dominator deep BUM round (the bounded-delay multi regime):
+        one encoder forward over the m dominators' concatenated block, ONE
+        masked secure aggregation of all m (B, d_rep) vector partial sets,
+        then the m ϑ_z broadcasts come back as the K-column blocks of the
+        rank-k contraction (:meth:`_bwd_doms_wide`), keeping every
+        dominator's Jacobian-transpose gradient separate so each stream
+        can age under its own delay.  Returns ``(g_w1 (dp, m, hid),
+        g_b1 (m, hid), g_w2 (hid, m, dr), g_head (dr,))`` — encoder leaves
+        carry per-stream λ∇g; the dominator-held head gradient is the
+        fresh sum (m·λ∇g)."""
+        prob = self.problem
+        b = yb.shape[0] // m
+        h = jnp.tanh(self._fwd(xb, w1) + b1)          # (m·B, hidden)
+        hr = self._fwd(h, w2)                         # (m·B, d_rep)
+        z = self._agg(hr, kt)
+        th_l = prob.theta(z @ head, yb) / b
+        th_z = th_l[:, None] * head
+        g_head = z.T @ th_l + m * prob.lam * prob.reg_grad(head)
+        du = (th_z @ w2.T) * (1.0 - h * h)
+        g_w1 = self._bwd_doms_wide(xb, du, m, 1) \
+            + prob.lam * prob.reg_grad(w1)[:, None, :]
+        g_b1 = du.reshape(m, b, -1).sum(axis=1) \
+            + prob.lam * prob.reg_grad(b1)[None, :]
+        g_w2 = self._bwd_doms_wide(h, th_z, m, 1) \
+            + prob.lam * prob.reg_grad(w2)[:, None, :]
+        return g_w1, g_b1, g_w2, g_head
+
+    def _deep_sgd_build(self, mdom: int):
         def build():
             def party(local, shared):
                 xp, w1, b1, w2, head, maskp, trainp = local
@@ -1438,7 +1533,7 @@ class FusedEngine:
                     w1, b1, w2, head = carry
                     ib, kt = inp
                     g_w1, g_b1, g_w2, g_head = self._deep_grads(
-                        xp[ib], y[ib], w1, b1, w2, head, kt)
+                        xp[ib], y[ib], w1, b1, w2, head, kt, mdom)
                     w1 = w1 - lr * maskp[:, None] * g_w1
                     b1 = b1 - lr * trainp * g_b1
                     w2 = w2 - lr * trainp * g_w2
@@ -1454,16 +1549,35 @@ class FusedEngine:
             @functools.partial(jax.jit, static_argnames=("batch", "steps"),
                                donate_argnames=self._donate("pq"))
             def epoch(xs, pq, maskq, trainq, y, lr, key, batch, steps):
-                idx = _batch_indices(key, y.shape[0], batch, steps)
+                idx = _batch_indices(key, y.shape[0], mdom * batch, steps)
                 w1q, b1q, w2q, headq = pq
                 return mapped((xs, w1q, b1q, w2q, headq, maskq, trainq),
                               (y, lr, idx, self._keys(key, steps)))
 
             return epoch
 
-        return self._epoch("deep_sgd", build)(self.xs, pq, self.maskq,
-                                              self.trainq, self.y, lr,
-                                              key, batch, steps)
+        return build
+
+    def deep_sgd_epoch(self, pq, lr, key, batch: int, steps: int):
+        """Deep VFB²-SGD epoch as ONE compiled program; pinned against
+        ``deep_vfl.train_deep_vfl`` at 1e-5.  ``pq`` is the party-stacked
+        ``(w1q, b1q, w2q, headq)`` from :meth:`pack_deep`."""
+        return self._epoch("deep_sgd", self._deep_sgd_build(1))(
+            self.xs, pq, self.maskq, self.trainq, self.y, lr, key, batch,
+            steps)
+
+    def deep_multi_sgd_epoch(self, pq, lr, key, batch: int, steps: int):
+        """Deep VFB²-SGD with all m = layout.m dominators launching
+        concurrent backward updates per step: the m independent minibatches
+        are concatenated into ONE encoder forward, all m (B, d_rep) vector
+        partial sets take one masked secure aggregation, and the m
+        per-dominator ϑ_z broadcasts drive the summed Jacobian-transpose
+        updates (see :meth:`_deep_grads`).  Pinned against
+        ``deep_vfl.train_deep_vfl(..., multi_dominator=True)``."""
+        return self._epoch("deep_multi_sgd",
+                           self._deep_sgd_build(self.layout.m))(
+            self.xs, pq, self.maskq, self.trainq, self.y, lr, key, batch,
+            steps)
 
     def deep_full_gradient(self, pq, key):
         """Full-dataset deep BUM gradient pytree at ``pq`` (SVRG's μ)."""
@@ -1486,13 +1600,7 @@ class FusedEngine:
         return self._epoch("deep_full_grad", build)(self.xs, pq, self.y,
                                                     key)
 
-    def deep_svrg_epoch(self, pq, pq_snap, muq, lr, key, batch: int,
-                        steps: int):
-        """Deep VFB²-SVRG inner loop: v = g(w) − g(w̃) + μ per parameter
-        leaf.  The iterate's and snapshot's encoder passes share the
-        X-block kernel invocations where the left operand coincides (layer
-        1 forward and its backward ride one M = 2·hidden pass), and both
-        (B, d_rep) partial sets aggregate in ONE masked collective."""
+    def _deep_svrg_build(self, mdom: int):
         prob = self.problem
 
         def build():
@@ -1509,7 +1617,7 @@ class FusedEngine:
                     ib, kt = inp
                     xb = xp[ib]
                     yb = y[ib]
-                    bsz = yb.shape[0]
+                    bsz = yb.shape[0] // mdom
                     uu = self._fwd(xb, jnp.concatenate([w1, w1s], axis=1))
                     h = jnp.tanh(uu[:, :hid] + b1)
                     hs = jnp.tanh(uu[:, hid:] + b1s)
@@ -1520,22 +1628,27 @@ class FusedEngine:
                     th0 = prob.theta(zs @ heads, yb) / bsz
                     thz1 = th1[:, None] * head
                     thz0 = th0[:, None] * heads
-                    v_head = (z.T @ th1 + prob.lam * prob.reg_grad(head)
-                              - zs.T @ th0 - prob.lam * prob.reg_grad(heads)
-                              + mu_head)
+                    v_head = (z.T @ th1 + mdom * prob.lam
+                              * prob.reg_grad(head)
+                              - zs.T @ th0 - mdom * prob.lam
+                              * prob.reg_grad(heads)
+                              + mdom * mu_head)
                     v_w2 = (self._bwd(h, thz1, 1) - self._bwd(hs, thz0, 1)
-                            + prob.lam * (prob.reg_grad(w2)
-                                          - prob.reg_grad(w2s)) + mu_w2)
+                            + mdom * prob.lam * (prob.reg_grad(w2)
+                                                 - prob.reg_grad(w2s))
+                            + mdom * mu_w2)
                     du1 = (thz1 @ w2.T) * (1.0 - h * h)
                     du0 = (thz0 @ w2s.T) * (1.0 - hs * hs)
                     duu = self._bwd(xb, jnp.concatenate([du1, du0], axis=1),
                                     1)
                     v_w1 = (duu[:, :hid] - duu[:, hid:]
-                            + prob.lam * (prob.reg_grad(w1)
-                                          - prob.reg_grad(w1s)) + mu_w1)
+                            + mdom * prob.lam * (prob.reg_grad(w1)
+                                                 - prob.reg_grad(w1s))
+                            + mdom * mu_w1)
                     v_b1 = (du1.sum(axis=0) - du0.sum(axis=0)
-                            + prob.lam * (prob.reg_grad(b1)
-                                          - prob.reg_grad(b1s)) + mu_b1)
+                            + mdom * prob.lam * (prob.reg_grad(b1)
+                                                 - prob.reg_grad(b1s))
+                            + mdom * mu_b1)
                     w1 = w1 - lr * maskp[:, None] * v_w1
                     b1 = b1 - lr * trainp * v_b1
                     w2 = w2 - lr * trainp * v_w2
@@ -1551,7 +1664,7 @@ class FusedEngine:
             @functools.partial(jax.jit, static_argnames=("batch", "steps"))
             def epoch(xs, pq, pq_snap, muq, maskq, trainq, y, lr, key,
                       batch, steps):
-                idx = _batch_indices(key, y.shape[0], batch, steps)
+                idx = _batch_indices(key, y.shape[0], mdom * batch, steps)
                 w1q, b1q, w2q, headq = pq
                 w1s, b1s, w2s, headsq = pq_snap
                 return mapped((xs, w1q, b1q, w2q, headq, w1s, b1s, w2s,
@@ -1560,10 +1673,30 @@ class FusedEngine:
 
             return epoch
 
-        return self._epoch("deep_svrg", build)(self.xs, pq, pq_snap, muq,
-                                               self.maskq, self.trainq,
-                                               self.y, lr, key, batch,
-                                               steps)
+        return build
+
+    def deep_svrg_epoch(self, pq, pq_snap, muq, lr, key, batch: int,
+                        steps: int):
+        """Deep VFB²-SVRG inner loop: v = g(w) − g(w̃) + μ per parameter
+        leaf.  The iterate's and snapshot's encoder passes share the
+        X-block kernel invocations where the left operand coincides (layer
+        1 forward and its backward ride one M = 2·hidden pass), and both
+        (B, d_rep) partial sets aggregate in ONE masked collective."""
+        return self._epoch("deep_svrg", self._deep_svrg_build(1))(
+            self.xs, pq, pq_snap, muq, self.maskq, self.trainq, self.y,
+            lr, key, batch, steps)
+
+    def deep_multi_svrg_epoch(self, pq, pq_snap, muq, lr, key, batch: int,
+                              steps: int):
+        """Multi-dominator deep VFB²-SVRG inner loop: the m dominators'
+        concatenated minibatches ride the same shared M = 2·hidden layer-1
+        pass and ONE masked aggregation of both (m·B, d_rep) partial sets;
+        the applied step sums the m variance-reduced updates
+        (v = Σ_j[g₁ⱼ − g₀ⱼ] + m·(λ∇g(w) − λ∇g(w̃)) + m·μ)."""
+        return self._epoch("deep_multi_svrg",
+                           self._deep_svrg_build(self.layout.m))(
+            self.xs, pq, pq_snap, muq, self.maskq, self.trainq, self.y,
+            lr, key, batch, steps)
 
     def deep_delay_buffers(self, pq, tau: int):
         """Zero-initialized per-party encoder gradient ring buffers for
@@ -1643,6 +1776,542 @@ class FusedEngine:
             lr, key, t0, batch, steps)
         return pq, bufq, t0 + steps
 
+    def deep_multi_delay_buffers(self, pq, tau: int):
+        """Zero-initialized per-(party, dominator) encoder gradient ring
+        buffers for :meth:`deep_multi_delayed_sgd_epoch`: each dominator's
+        update stream ages in its own slab of the ring."""
+        w1q, b1q, w2q, _ = pq
+        m = self.layout.m
+        q, dp, hid = w1q.shape
+        dr = w2q.shape[2]
+        return (jnp.zeros((q, tau + 1, dp, m, hid), jnp.float32),
+                jnp.zeros((q, tau + 1, m, hid), jnp.float32),
+                jnp.zeros((q, tau + 1, hid, m, dr), jnp.float32))
+
+    def _ring_put_take_multi(self, bufs, grads, t, delay, tau: int):
+        """Write the per-dominator gradient slabs at slot t and read each
+        dominator's slab at its own t − d_{ℓ,j}; returns the new buffers
+        and the dominator-summed stale encoder gradients."""
+        def take(buf, eff_b, shape):
+            return jnp.take_along_axis(
+                buf, jnp.broadcast_to(eff_b, (1,) + shape), axis=0)[0]
+
+        slot = t % (tau + 1)
+        bufs = tuple(jax.lax.dynamic_update_index_in_dim(b, g, slot, 0)
+                     for b, g in zip(bufs, grads))
+        eff = jnp.maximum(t - delay, 0) % (tau + 1)       # (m,)
+        gw1, gb1, gw2 = grads
+        s_w1 = take(bufs[0], eff[None, None, :, None], gw1.shape).sum(axis=1)
+        s_b1 = take(bufs[1], eff[None, :, None], gb1.shape).sum(axis=0)
+        s_w2 = take(bufs[2], eff[None, None, :, None], gw2.shape).sum(axis=1)
+        return bufs, (s_w1, s_b1, s_w2)
+
+    def deep_multi_delayed_sgd_epoch(self, pq, bufq, t0, delays_qm, lr,
+                                     key, batch: int, steps: int,
+                                     tau: int):
+        """Bounded-delay multi-dominator deep VFB²-SGD: every party holds
+        m encoder-gradient ring buffers — one per dominator's update
+        stream — and applies dominator j's Jacobian-transpose gradients of
+        step t − d_{ℓ,j}; the replicated dominator-held head applies the
+        summed head gradient fresh (delaying it would fork the replicas).
+        ``staleness.train_deep_multi_delayed`` is the sequential oracle.
+        ``bufq``: pytree from :meth:`deep_multi_delay_buffers`;
+        ``delays_qm``: (q, m) int32."""
+        m = self.layout.m
+
+        def build():
+            def party(local, shared):
+                (xp, w1, b1, w2, head, bw1, bb1, bw2, delay, maskp,
+                 trainp) = local                      # delay: (m,)
+                y, lr, idx, mkeys, t0 = shared
+
+                def body(carry, inp):
+                    w1, b1, w2, head, bw1, bb1, bw2, t = carry
+                    ibf, kt = inp
+                    gw1, gb1, gw2, gh = self._deep_dom_grads(
+                        xp[ibf], y[ibf], w1, b1, w2, head, kt, m)
+                    (bw1, bb1, bw2), (s_w1, s_b1, s_w2) = \
+                        self._ring_put_take_multi(
+                            (bw1, bb1, bw2), (gw1, gb1, gw2), t, delay, tau)
+                    w1 = w1 - lr * maskp[:, None] * s_w1
+                    b1 = b1 - lr * trainp * s_b1
+                    w2 = w2 - lr * trainp * s_w2
+                    head = head - lr * gh             # dominator-fresh
+                    return (w1, b1, w2, head, bw1, bb1, bw2, t + 1), None
+
+                (w1, b1, w2, head, bw1, bb1, bw2, _), _ = jax.lax.scan(
+                    body, (w1, b1, w2, head, bw1, bb1, bw2, t0),
+                    (idx, mkeys))
+                return (w1, b1, w2, head), (bw1, bb1, bw2)
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate("pq", "bufq"))
+            def epoch(xs, pq, bufq, delays_qm, maskq, trainq, y, lr, key,
+                      t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], m * batch, steps)
+                w1q, b1q, w2q, headq = pq
+                bw1q, bb1q, bw2q = bufq
+                return mapped((xs, w1q, b1q, w2q, headq, bw1q, bb1q, bw2q,
+                               delays_qm, maskq, trainq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        pq, bufq = self._epoch(f"deep_multi_delayed{tau}", build)(
+            self.xs, pq, bufq, delays_qm, self.maskq, self.trainq, self.y,
+            lr, key, t0, batch, steps)
+        return pq, bufq, t0 + steps
+
+    # -- pipelined deep epochs: backward(t) ∥ encoder-forward(t+1), ONE
+    # -- kernel invocation per interior step ----------------------------------
+    #
+    # The deep generalization of the pipelined schedule: round t's
+    # Jacobian-transpose BUM application (Xᵀdu — the wide X-block pass)
+    # and round t+1's layer-1 encoder forward (X@W₁) are data-independent,
+    # so each interior scan step issues ONE split-batch fused kernel
+    # invocation — rows = [X_{b_t}; X_{b_{t+1}}], Θ = du over the backward
+    # rows, W = W₁ over the forward rows — and the narrow layer-2
+    # contractions (h@W₂, hᵀϑ_z: hidden×d_rep operands, not X-block-sized)
+    # stay in jnp so the scan body contains exactly one launch.  Launches
+    # per epoch drop 2·steps → steps+1 (forward-only prologue, fused
+    # interior, backward-only epilogue; jaxpr-audited in
+    # bench_engine.run_deep_pipelined).  Both halves execute from the same
+    # pre-update iterate, so round t+1's activations (h, z) come from
+    # encoder params one update old — a τ = 1 bounded-delay execution;
+    # ``deep_vfl.train_deep_vfl(..., pipelined=True)`` is the exact
+    # sequential oracle (the local Jacobians are evaluated at the stale
+    # activations, ϑ and the regularizers at the application-time params,
+    # and the dominator-held head is always fresh).
+
+    def _deep_pipe_tail(self, h, agg, yb, b1, w2, head, mdom: int):
+        """Application-time quantities of a pipelined deep round from the
+        stale activations: returns (du, g_b1, g_w2, g_head) — everything
+        except the X-block contraction that rides the fused launch."""
+        prob = self.problem
+        bsz = yb.shape[0] // mdom
+        th_l = prob.theta(agg @ head, yb) / bsz
+        th_z = th_l[:, None] * head
+        g_head = agg.T @ th_l + mdom * prob.lam * prob.reg_grad(head)
+        g_w2 = h.T @ th_z + mdom * prob.lam * prob.reg_grad(w2)
+        du = (th_z @ w2.T) * (1.0 - h * h)
+        g_b1 = du.sum(axis=0) + mdom * prob.lam * prob.reg_grad(b1)
+        return du, g_b1, g_w2, g_head
+
+    def _deep_pipe_sgd_build(self, mdom: int):
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                xp, w1, b1, w2, head, maskp, trainp = local
+                y, lr, idx, mkeys = shared
+                ib0 = idx[0]
+                xb0 = xp[ib0]
+                u0 = self._fwd(xb0, w1)               # prologue launch
+                h0 = jnp.tanh(u0 + b1)
+                agg0 = self._agg(h0 @ w2, mkeys[0])
+
+                def apply(w1, b1, w2, head, g_w1, g_b1, g_w2, g_head):
+                    return (w1 - lr * maskp[:, None] * g_w1,
+                            b1 - lr * trainp * g_b1,
+                            w2 - lr * trainp * g_w2,
+                            head - lr * g_head)
+
+                def body(carry, inp):
+                    w1, b1, w2, head, xb, ib, h, agg = carry
+                    ib_next, kt = inp
+                    du, g_b1, g_w2, g_head = self._deep_pipe_tail(
+                        h, agg, y[ib], b1, w2, head, mdom)
+                    xb_next = xp[ib_next]
+                    u_next, g1 = self._pipe(xb, xb_next, w1, du, 1)
+                    g_w1 = g1 + mdom * prob.lam * prob.reg_grad(w1)
+                    h_next = jnp.tanh(u_next + b1)    # pre-update params
+                    agg_next = self._agg(h_next @ w2, kt)
+                    w1, b1, w2, head = apply(w1, b1, w2, head, g_w1, g_b1,
+                                             g_w2, g_head)
+                    return (w1, b1, w2, head, xb_next, ib_next, h_next,
+                            agg_next), None
+
+                (w1, b1, w2, head, xb, ib, h, agg), _ = jax.lax.scan(
+                    body, (w1, b1, w2, head, xb0, ib0, h0, agg0),
+                    (idx[1:], mkeys[1:]))
+                du, g_b1, g_w2, g_head = self._deep_pipe_tail(
+                    h, agg, y[ib], b1, w2, head, mdom)    # epilogue
+                g_w1 = self._bwd(xb, du, 1) \
+                    + mdom * prob.lam * prob.reg_grad(w1)
+                return apply(w1, b1, w2, head, g_w1, g_b1, g_w2, g_head)
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate("pq"))
+            def epoch(xs, pq, maskq, trainq, y, lr, key, batch, steps):
+                idx = _batch_indices(key, y.shape[0], mdom * batch, steps)
+                w1q, b1q, w2q, headq = pq
+                return mapped((xs, w1q, b1q, w2q, headq, maskq, trainq),
+                              (y, lr, idx, self._keys(key, steps)))
+
+            return epoch
+
+        return build
+
+    def deep_pipelined_sgd_epoch(self, pq, lr, key, batch: int,
+                                 steps: int):
+        """Pipelined deep VFB²-SGD epoch (see section comment); pinned
+        against ``deep_vfl.train_deep_vfl(..., pipelined=True)``."""
+        return self._epoch("deep_pipelined_sgd",
+                           self._deep_pipe_sgd_build(1))(
+            self.xs, pq, self.maskq, self.trainq, self.y, lr, key, batch,
+            steps)
+
+    def deep_multi_pipelined_sgd_epoch(self, pq, lr, key, batch: int,
+                                       steps: int):
+        """Pipelined multi-dominator deep VFB²-SGD: the m dominators'
+        concatenated minibatches ride both halves of the one split-batch
+        invocation (the summed du block next to the next round's
+        concatenated layer-1 forward)."""
+        return self._epoch("deep_multi_pipelined_sgd",
+                           self._deep_pipe_sgd_build(self.layout.m))(
+            self.xs, pq, self.maskq, self.trainq, self.y, lr, key, batch,
+            steps)
+
+    def _deep_pipe_svrg_build(self, mdom: int):
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, w1, b1, w2, head, w1s, b1s, w2s, heads, mu, maskp,
+                 trainp) = local
+                y, lr, idx, mkeys = shared
+                mu_w1, mu_b1, mu_w2, mu_head = mu
+                hid = w1.shape[1]
+                dr = head.shape[0]
+
+                def fwd_pair(uu, kt):
+                    """Both sides' activations + ONE masked aggregation of
+                    both (·, d_rep) partial sets, from the shared layer-1
+                    pass ``uu = X[W₁|W₁ˢ]``."""
+                    h = jnp.tanh(uu[:, :hid] + b1)
+                    hs = jnp.tanh(uu[:, hid:] + b1s)
+                    zz = self._agg(jnp.concatenate([h @ w2, hs @ w2s],
+                                                   axis=1), kt)
+                    return h, hs, zz
+
+                def tail(h, hs, zz, yb, b1, w2, head):
+                    """Application-time SVRG quantities from the stale
+                    activation pair, at the *current* live params (the
+                    snapshot side is constant, so its stale read equals
+                    the fresh one)."""
+                    bsz = yb.shape[0] // mdom
+                    z, zs = zz[:, :dr], zz[:, dr:]
+                    th1 = prob.theta(z @ head, yb) / bsz
+                    th0 = prob.theta(zs @ heads, yb) / bsz
+                    thz1 = th1[:, None] * head
+                    thz0 = th0[:, None] * heads
+                    v_head = (z.T @ th1 - zs.T @ th0
+                              + mdom * prob.lam * (prob.reg_grad(head)
+                                                   - prob.reg_grad(heads))
+                              + mdom * mu_head)
+                    v_w2 = (h.T @ thz1 - hs.T @ thz0
+                            + mdom * prob.lam * (prob.reg_grad(w2)
+                                                 - prob.reg_grad(w2s))
+                            + mdom * mu_w2)
+                    du1 = (thz1 @ w2.T) * (1.0 - h * h)
+                    du0 = (thz0 @ w2s.T) * (1.0 - hs * hs)
+                    v_b1 = (du1.sum(axis=0) - du0.sum(axis=0)
+                            + mdom * prob.lam * (prob.reg_grad(b1)
+                                                 - prob.reg_grad(b1s))
+                            + mdom * mu_b1)
+                    return du1, du0, v_b1, v_w2, v_head
+
+                def v_w1_of(duu, w1):
+                    return (duu[:, :hid] - duu[:, hid:]
+                            + mdom * prob.lam * (prob.reg_grad(w1)
+                                                 - prob.reg_grad(w1s))
+                            + mdom * mu_w1)
+
+                def apply(w1, b1, w2, head, v_w1, v_b1, v_w2, v_head):
+                    return (w1 - lr * maskp[:, None] * v_w1,
+                            b1 - lr * trainp * v_b1,
+                            w2 - lr * trainp * v_w2,
+                            head - lr * v_head)
+
+                ib0 = idx[0]
+                xb0 = xp[ib0]
+                wpair = jnp.concatenate([w1, w1s], axis=1)
+                h0, hs0, zz0 = fwd_pair(self._fwd(xb0, wpair), mkeys[0])
+
+                def body(carry, inp):
+                    w1, b1, w2, head, xb, ib, h, hs, zz = carry
+                    ib_next, kt = inp
+                    du1, du0, v_b1, v_w2, v_head = tail(h, hs, zz, y[ib],
+                                                        b1, w2, head)
+                    xb_next = xp[ib_next]
+                    uu_next, duu = self._pipe(
+                        xb, xb_next, jnp.concatenate([w1, w1s], axis=1),
+                        jnp.concatenate([du1, du0], axis=1), 1)
+                    v_w1 = v_w1_of(duu, w1)
+                    # pre-update forward for round t+1 (both sides)
+                    h_next = jnp.tanh(uu_next[:, :hid] + b1)
+                    hs_next = jnp.tanh(uu_next[:, hid:] + b1s)
+                    zz_next = self._agg(jnp.concatenate(
+                        [h_next @ w2, hs_next @ w2s], axis=1), kt)
+                    w1, b1, w2, head = apply(w1, b1, w2, head, v_w1, v_b1,
+                                             v_w2, v_head)
+                    return (w1, b1, w2, head, xb_next, ib_next, h_next,
+                            hs_next, zz_next), None
+
+                (w1, b1, w2, head, xb, ib, h, hs, zz), _ = jax.lax.scan(
+                    body, (w1, b1, w2, head, xb0, ib0, h0, hs0, zz0),
+                    (idx[1:], mkeys[1:]))
+                du1, du0, v_b1, v_w2, v_head = tail(h, hs, zz, y[ib], b1,
+                                                    w2, head)
+                duu = self._bwd(xb, jnp.concatenate([du1, du0], axis=1), 1)
+                return apply(w1, b1, w2, head, v_w1_of(duu, w1), v_b1,
+                             v_w2, v_head)
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, pq, pq_snap, muq, maskq, trainq, y, lr, key,
+                      batch, steps):
+                idx = _batch_indices(key, y.shape[0], mdom * batch, steps)
+                w1q, b1q, w2q, headq = pq
+                w1s, b1s, w2s, headsq = pq_snap
+                return mapped((xs, w1q, b1q, w2q, headq, w1s, b1s, w2s,
+                               headsq, muq, maskq, trainq),
+                              (y, lr, idx, self._keys(key, steps)))
+
+            return epoch
+
+        return build
+
+    def deep_pipelined_svrg_epoch(self, pq, pq_snap, muq, lr, key,
+                                  batch: int, steps: int):
+        """Pipelined deep VFB²-SVRG inner loop: the iterate's and the
+        snapshot's layer-1 passes share the single M = 2·hidden
+        split-batch invocation per interior step (du₁ beside du₀ on the
+        backward rows, [W₁|W₁ˢ] on the forward rows); the snapshot column
+        is constant, so its τ = 1 stale read is delay-free."""
+        return self._epoch("deep_pipelined_svrg",
+                           self._deep_pipe_svrg_build(1))(
+            self.xs, pq, pq_snap, muq, self.maskq, self.trainq, self.y,
+            lr, key, batch, steps)
+
+    def deep_multi_pipelined_svrg_epoch(self, pq, pq_snap, muq, lr, key,
+                                        batch: int, steps: int):
+        """Pipelined multi-dominator deep VFB²-SVRG (m concatenated
+        minibatches through the shared M = 2·hidden invocation)."""
+        return self._epoch("deep_multi_pipelined_svrg",
+                           self._deep_pipe_svrg_build(self.layout.m))(
+            self.xs, pq, pq_snap, muq, self.maskq, self.trainq, self.y,
+            lr, key, batch, steps)
+
+    def _deep_pipe_dom_tail(self, h, agg, yb, b1, w2, head, m: int):
+        """Per-dominator application-time quantities of a pipelined
+        multi-dominator deep round (jnp-only — the scan body must issue no
+        launch besides the fused one): returns (du (m·B, hid),
+        g_b1 (m, hid), g_w2 (hid, m, dr), g_head (dr,)) with per-stream
+        λ∇g on the encoder slabs and the fresh summed head gradient."""
+        prob = self.problem
+        b = yb.shape[0] // m
+        th_l = prob.theta(agg @ head, yb) / b
+        th_z = th_l[:, None] * head
+        g_head = agg.T @ th_l + m * prob.lam * prob.reg_grad(head)
+        du = (th_z @ w2.T) * (1.0 - h * h)
+        g_b1 = du.reshape(m, b, -1).sum(axis=1) \
+            + prob.lam * prob.reg_grad(b1)[None, :]
+        g_w2 = _seg_contract(h, th_z, m) \
+            + prob.lam * prob.reg_grad(w2)[:, None, :]
+        return du, g_b1, g_w2, g_head
+
+    def _deep_pipe_delayed_build(self, tau: int):
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, w1, b1, w2, head, bw1, bb1, bw2, delay, maskp,
+                 trainp) = local
+                y, lr, idx, mkeys, t0 = shared
+                ib0 = idx[0]
+                xb0 = xp[ib0]
+                h0 = jnp.tanh(self._fwd(xb0, w1) + b1)
+                agg0 = self._agg(h0 @ w2, mkeys[0])
+
+                def ring_apply(w1, b1, w2, head, bufs, t, g_w1, g_b1,
+                               g_w2, g_head):
+                    slot = t % (tau + 1)
+                    bufs = tuple(
+                        jax.lax.dynamic_update_index_in_dim(bf, g, slot, 0)
+                        for bf, g in zip(bufs, (g_w1, g_b1, g_w2)))
+                    eff = jnp.maximum(t - delay, 0) % (tau + 1)
+                    s_w1, s_b1, s_w2 = (
+                        jax.lax.dynamic_index_in_dim(bf, eff, 0,
+                                                     keepdims=False)
+                        for bf in bufs)
+                    return (w1 - lr * maskp[:, None] * s_w1,
+                            b1 - lr * trainp * s_b1,
+                            w2 - lr * trainp * s_w2,
+                            head - lr * g_head,       # dominator-fresh
+                            bufs, t + 1)
+
+                def body(carry, inp):
+                    w1, b1, w2, head, bw1, bb1, bw2, t, xb, ib, h, agg \
+                        = carry
+                    ib_next, kt = inp
+                    du, g_b1, g_w2, g_head = self._deep_pipe_tail(
+                        h, agg, y[ib], b1, w2, head, 1)
+                    xb_next = xp[ib_next]
+                    u_next, g1 = self._pipe(xb, xb_next, w1, du, 1)
+                    g_w1 = g1 + prob.lam * prob.reg_grad(w1)
+                    h_next = jnp.tanh(u_next + b1)
+                    agg_next = self._agg(h_next @ w2, kt)
+                    w1, b1, w2, head, (bw1, bb1, bw2), t = ring_apply(
+                        w1, b1, w2, head, (bw1, bb1, bw2), t, g_w1, g_b1,
+                        g_w2, g_head)
+                    return (w1, b1, w2, head, bw1, bb1, bw2, t, xb_next,
+                            ib_next, h_next, agg_next), None
+
+                (w1, b1, w2, head, bw1, bb1, bw2, t, xb, ib, h, agg), _ \
+                    = jax.lax.scan(
+                        body, (w1, b1, w2, head, bw1, bb1, bw2, t0, xb0,
+                               ib0, h0, agg0), (idx[1:], mkeys[1:]))
+                du, g_b1, g_w2, g_head = self._deep_pipe_tail(
+                    h, agg, y[ib], b1, w2, head, 1)       # epilogue
+                g_w1 = self._bwd(xb, du, 1) + prob.lam * prob.reg_grad(w1)
+                w1, b1, w2, head, (bw1, bb1, bw2), _ = ring_apply(
+                    w1, b1, w2, head, (bw1, bb1, bw2), t, g_w1, g_b1,
+                    g_w2, g_head)
+                return (w1, b1, w2, head), (bw1, bb1, bw2)
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate("pq", "bufq"))
+            def epoch(xs, pq, bufq, delays_q, maskq, trainq, y, lr, key,
+                      t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                w1q, b1q, w2q, headq = pq
+                bw1q, bb1q, bw2q = bufq
+                return mapped((xs, w1q, b1q, w2q, headq, bw1q, bb1q, bw2q,
+                               delays_q, maskq, trainq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        return build
+
+    def deep_pipelined_delayed_sgd_epoch(self, pq, bufq, t0, delays_q, lr,
+                                         key, batch: int, steps: int,
+                                         tau: int):
+        """Pipelined bounded-delay deep VFB²-SGD: the stale-read encoder
+        gradients of each round enter the per-party ring buffers and age
+        under the delay schedule (total delay τ + 1); the head stays
+        dominator-fresh.  Same state layout as
+        :meth:`deep_delayed_sgd_epoch`;
+        ``staleness.train_deep_delayed(..., pipelined=True)`` is the
+        oracle."""
+        pq, bufq = self._epoch(f"deep_pipelined_delayed{tau}",
+                               self._deep_pipe_delayed_build(tau))(
+            self.xs, pq, bufq, delays_q, self.maskq, self.trainq, self.y,
+            lr, key, t0, batch, steps)
+        return pq, bufq, t0 + steps
+
+    def _deep_multi_pipe_delayed_build(self, tau: int):
+        prob = self.problem
+        m = self.layout.m
+
+        def build():
+            def party(local, shared):
+                (xp, w1, b1, w2, head, bw1, bb1, bw2, delay, maskp,
+                 trainp) = local                      # delay: (m,)
+                y, lr, idx, mkeys, t0 = shared
+                ib0 = idx[0]
+                xb0 = xp[ib0]
+                h0 = jnp.tanh(self._fwd(xb0, w1) + b1)
+                agg0 = self._agg(h0 @ w2, mkeys[0])
+
+                def ring_apply(w1, b1, w2, head, bufs, t, gw1, gb1, gw2,
+                               gh):
+                    bufs, (s_w1, s_b1, s_w2) = self._ring_put_take_multi(
+                        bufs, (gw1, gb1, gw2), t, delay, tau)
+                    return (w1 - lr * maskp[:, None] * s_w1,
+                            b1 - lr * trainp * s_b1,
+                            w2 - lr * trainp * s_w2,
+                            head - lr * gh, bufs, t + 1)
+
+                def body(carry, inp):
+                    w1, b1, w2, head, bw1, bb1, bw2, t, xb, ib, h, agg \
+                        = carry
+                    ib_next, kt = inp
+                    du, gb1, gw2, gh = self._deep_pipe_dom_tail(
+                        h, agg, y[ib], b1, w2, head, m)
+                    xb_next = xp[ib_next]
+                    # Mθ = m·hidden block-diagonal du beside the Mw =
+                    # hidden forward — the split-batch form's vector-valued
+                    # per-side column counts
+                    u_next, g1 = self._pipe_doms_wide(xb, xb_next, w1, du,
+                                                      m, 1)
+                    gw1 = g1 + prob.lam * prob.reg_grad(w1)[:, None, :]
+                    h_next = jnp.tanh(u_next + b1)
+                    agg_next = self._agg(h_next @ w2, kt)
+                    w1, b1, w2, head, (bw1, bb1, bw2), t = ring_apply(
+                        w1, b1, w2, head, (bw1, bb1, bw2), t, gw1, gb1,
+                        gw2, gh)
+                    return (w1, b1, w2, head, bw1, bb1, bw2, t, xb_next,
+                            ib_next, h_next, agg_next), None
+
+                (w1, b1, w2, head, bw1, bb1, bw2, t, xb, ib, h, agg), _ \
+                    = jax.lax.scan(
+                        body, (w1, b1, w2, head, bw1, bb1, bw2, t0, xb0,
+                               ib0, h0, agg0), (idx[1:], mkeys[1:]))
+                du, gb1, gw2, gh = self._deep_pipe_dom_tail(
+                    h, agg, y[ib], b1, w2, head, m)       # epilogue
+                gw1 = self._bwd_doms_wide(xb, du, m, 1) \
+                    + prob.lam * prob.reg_grad(w1)[:, None, :]
+                w1, b1, w2, head, (bw1, bb1, bw2), _ = ring_apply(
+                    w1, b1, w2, head, (bw1, bb1, bw2), t, gw1, gb1, gw2,
+                    gh)
+                return (w1, b1, w2, head), (bw1, bb1, bw2)
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate("pq", "bufq"))
+            def epoch(xs, pq, bufq, delays_qm, maskq, trainq, y, lr, key,
+                      t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], m * batch, steps)
+                w1q, b1q, w2q, headq = pq
+                bw1q, bb1q, bw2q = bufq
+                return mapped((xs, w1q, b1q, w2q, headq, bw1q, bb1q, bw2q,
+                               delays_qm, maskq, trainq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        return build
+
+    def deep_multi_pipelined_delayed_sgd_epoch(self, pq, bufq, t0,
+                                               delays_qm, lr, key,
+                                               batch: int, steps: int,
+                                               tau: int):
+        """Pipelined bounded-delay multi-dominator deep VFB²-SGD: the m
+        dominators' stale-read Jacobian-transpose gradient slabs (Mθ =
+        m·hidden block-diagonal columns of the one split-batch invocation)
+        age in per-(party, dominator) ring buffers; heads stay fresh.
+        ``staleness.train_deep_multi_delayed(..., pipelined=True)`` is the
+        oracle; same state layout as
+        :meth:`deep_multi_delayed_sgd_epoch`."""
+        pq, bufq = self._epoch(f"deep_multi_pipelined_delayed{tau}",
+                               self._deep_multi_pipe_delayed_build(tau))(
+            self.xs, pq, bufq, delays_qm, self.maskq, self.trainq, self.y,
+            lr, key, t0, batch, steps)
+        return pq, bufq, t0 + steps
+
     # -- introspection -------------------------------------------------------
 
     def sgd_epoch_jaxpr(self, wq, lr, key, batch: int, steps: int):
@@ -1670,6 +2339,19 @@ class FusedEngine:
         primitives (the whole nonlinear epoch must stay on device)."""
         self.deep_sgd_epoch(pq, lr, key, batch, steps)   # ensure built
         fn = self._jitted["deep_sgd"]
+        return jax.make_jaxpr(
+            lambda xs, p: fn(xs, p, self.maskq, self.trainq, self.y, lr,
+                             key, batch=batch, steps=steps))(self.xs, pq)
+
+    def deep_pipelined_sgd_epoch_jaxpr(self, pq, lr, key, batch: int,
+                                       steps: int):
+        """The pipelined deep epoch's jaxpr — the benchmark audits that
+        the scan body contains exactly ONE kernel invocation (the
+        split-batch layer-1 fused pass; sequential deep bodies launch 4:
+        two forward + two backward encoder-layer contractions) and zero
+        host-transfer primitives."""
+        self.deep_pipelined_sgd_epoch(pq, lr, key, batch, steps)
+        fn = self._jitted["deep_pipelined_sgd"]
         return jax.make_jaxpr(
             lambda xs, p: fn(xs, p, self.maskq, self.trainq, self.y, lr,
                              key, batch=batch, steps=steps))(self.xs, pq)

@@ -282,20 +282,14 @@ def pipelined_delayed_multi_sgd_epoch(problem: Problem,
 # dominator-held head stays fresh
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
-                                             "tau"))
-def _deep_delayed_step(pt, bufs, t, ib, blocks, y, lr, delays,
-                       problem: Problem, freeze: bool, m: int, q: int,
-                       tau: int):
-    """One stale deep BUM step (sequential oracle for the engine's
-    ``deep_delayed_sgd_epoch``): party ℓ's fresh encoder gradients enter
-    its ring buffers at slot t and the applied update reads slot
-    t − d_ℓ; the head (dominator-held, replicated on the engine path)
-    applies its gradient fresh — delaying it would fork the replicas."""
-    from repro.core.deep_vfl import _bum_grads
-
-    gw1, gb1, gw2, gh = _bum_grads(pt, [b[ib] for b in blocks], y[ib],
-                                   problem, q)
+def _deep_delayed_apply(pt, bufs, t, grads, lr, delays, freeze: bool,
+                        m: int, q: int, tau: int):
+    """Ring-buffered application of one deep BUM round: party ℓ's encoder
+    gradients enter its ring buffers at slot t and the applied update
+    reads slot t − d_ℓ; the head (dominator-held, replicated on the
+    engine path) applies its gradient fresh — delaying it would fork the
+    replicas."""
+    gw1, gb1, gw2, gh = grads
     bw1, bb1, bw2 = bufs
     slot = t % (tau + 1)
     w1, b1, w2, head = pt
@@ -320,15 +314,140 @@ def _deep_delayed_step(pt, bufs, t, ib, blocks, y, lr, delays,
     return pt, (tuple(nbw1), tuple(nbb1), tuple(nbw2)), t + 1
 
 
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "tau"))
+def _deep_delayed_step(pt, bufs, t, ib, blocks, y, lr, delays,
+                       problem: Problem, freeze: bool, m: int, q: int,
+                       tau: int):
+    """One stale deep BUM step (sequential oracle for the engine's
+    ``deep_delayed_sgd_epoch``): fresh gradients, ring-buffered apply."""
+    from repro.core.deep_vfl import _bum_grads
+
+    grads = _bum_grads(pt, [b[ib] for b in blocks], y[ib], problem, q)
+    return _deep_delayed_apply(pt, bufs, t, grads, lr, delays, freeze, m,
+                               q, tau)
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "tau"))
+def _deep_pipe_delayed_step(pt, bufs, t, ib, hs, z, ib_next, blocks, y,
+                            lr, delays, problem: Problem, freeze: bool,
+                            m: int, q: int, tau: int):
+    """Pipelined stale deep step: the gradient entering the ring buffers
+    is already a τ = 1 stale-read gradient (activations carried from the
+    pre-update forward), composing to total delay τ + 1; the next round's
+    forward runs at the pre-update params."""
+    from repro.core.deep_vfl import _bum_stale_grads, _deep_fwd_acts
+
+    grads = _bum_stale_grads(pt, [b[ib] for b in blocks], hs, z, y[ib],
+                             problem, q)
+    hs_next, z_next = _deep_fwd_acts(pt, [b[ib_next] for b in blocks], q)
+    pt, bufs, t = _deep_delayed_apply(pt, bufs, t, grads, lr, delays,
+                                      freeze, m, q, tau)
+    return pt, bufs, t, hs_next, z_next
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "tau"))
+def _deep_pipe_delayed_tail(pt, bufs, t, ib, hs, z, blocks, y, lr, delays,
+                            problem: Problem, freeze: bool, m: int,
+                            q: int, tau: int):
+    from repro.core.deep_vfl import _bum_stale_grads
+
+    grads = _bum_stale_grads(pt, [b[ib] for b in blocks], hs, z, y[ib],
+                             problem, q)
+    return _deep_delayed_apply(pt, bufs, t, grads, lr, delays, freeze, m,
+                               q, tau)
+
+
+def _deep_multi_delayed_apply(pt, bufs, t, grads, lr, delays,
+                              freeze: bool, m: int, q: int, tau: int):
+    """Per-(party, dominator) ring-buffered application: dominator j's
+    encoder-gradient slab enters ring column j at slot t and is read back
+    at t − d_{ℓ,j}; the applied update sums the m stale slabs.  The
+    dominator-held head applies the fresh summed gradient."""
+    gw1, gb1, gw2, gh = grads
+    slot = t % (tau + 1)
+    w1, b1, w2, head = pt
+
+    def put_take(buf, g, eff):
+        buf = jax.lax.dynamic_update_index_in_dim(buf, g, slot, 0)
+        stale = jnp.take_along_axis(
+            buf, jnp.broadcast_to(eff.reshape((1, m) + (1,) * (g.ndim - 1)),
+                                  (1,) + g.shape), axis=0)[0]
+        return buf, stale.sum(axis=0)
+
+    new_pt, new_bufs = [[], [], []], [[], [], []]
+    for p in range(q):
+        eff = jnp.maximum(t - delays[p], 0) % (tau + 1)   # (m,)
+        live = 0.0 if (freeze and p >= m) else 1.0
+        for k, (leafs, gl) in enumerate(zip((w1, b1, w2),
+                                            (gw1, gb1, gw2))):
+            buf, stale = put_take(bufs[k][p], gl[p], eff)
+            new_bufs[k].append(buf)
+            new_pt[k].append(leafs[p] - lr * live * stale)
+    pt = (tuple(new_pt[0]), tuple(new_pt[1]), tuple(new_pt[2]),
+          head - lr * gh)
+    return pt, tuple(tuple(b) for b in new_bufs), t + 1
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "tau"))
+def _deep_multi_delayed_step(pt, bufs, t, ib, blocks, y, lr, delays,
+                             problem: Problem, freeze: bool, m: int,
+                             q: int, tau: int):
+    """One fresh multi-dominator stale deep step (oracle for the engine's
+    ``deep_multi_delayed_sgd_epoch``)."""
+    from repro.core.deep_vfl import _bum_dom_grads, _deep_fwd_acts
+
+    xb = [b[ib] for b in blocks]
+    hs, z = _deep_fwd_acts(pt, xb, q)
+    grads = _bum_dom_grads(pt, xb, hs, z, y[ib], problem, q, m)
+    return _deep_multi_delayed_apply(pt, bufs, t, grads, lr, delays,
+                                     freeze, m, q, tau)
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "tau"))
+def _deep_multi_pipe_delayed_step(pt, bufs, t, ib, hs, z, ib_next, blocks,
+                                  y, lr, delays, problem: Problem,
+                                  freeze: bool, m: int, q: int, tau: int):
+    from repro.core.deep_vfl import _bum_dom_grads, _deep_fwd_acts
+
+    grads = _bum_dom_grads(pt, [b[ib] for b in blocks], hs, z, y[ib],
+                           problem, q, m)
+    hs_next, z_next = _deep_fwd_acts(pt, [b[ib_next] for b in blocks], q)
+    pt, bufs, t = _deep_multi_delayed_apply(pt, bufs, t, grads, lr,
+                                            delays, freeze, m, q, tau)
+    return pt, bufs, t, hs_next, z_next
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "freeze", "m", "q",
+                                             "tau"))
+def _deep_multi_pipe_delayed_tail(pt, bufs, t, ib, hs, z, blocks, y, lr,
+                                  delays, problem: Problem, freeze: bool,
+                                  m: int, q: int, tau: int):
+    from repro.core.deep_vfl import _bum_dom_grads
+
+    grads = _bum_dom_grads(pt, [b[ib] for b in blocks], hs, z, y[ib],
+                           problem, q, m)
+    return _deep_multi_delayed_apply(pt, bufs, t, grads, lr, delays,
+                                     freeze, m, q, tau)
+
+
 def train_deep_delayed(problem: Problem, x, y, layout: PartyLayout,
                        tau: int, epochs: int = 3, lr: float = 0.05,
                        batch: int = 32, seed: int = 0, hidden: int = 32,
-                       d_rep: int = 16, freeze_passive: bool = False):
+                       d_rep: int = 16, freeze_passive: bool = False,
+                       pipelined: bool = False):
     """Sequential oracle for bounded-delay **deep** VFB²-SGD: the same
     driver/key stream as ``deep_vfl.train_deep_vfl`` with per-party
     encoder-gradient ring buffers (delay schedule from
-    :func:`party_delay_values`).  Returns the final ``DeepVFLParams``;
-    the fused realization is :func:`run_deep_delayed_fused`."""
+    :func:`party_delay_values`).  ``pipelined=True`` composes the τ = 1
+    stale forward read with the delayed application (the engine's
+    ``deep_pipelined_delayed_sgd_epoch``).  Returns the final
+    ``DeepVFLParams``; the fused realization is
+    :func:`run_deep_delayed_fused`."""
     from repro.core import deep_vfl
 
     n, d = x.shape
@@ -346,26 +465,89 @@ def train_deep_delayed(problem: Problem, x, y, layout: PartyLayout,
             tuple(ring(a) for a in pt[2]))
     t = jnp.zeros((), jnp.int32)
     steps = max(1, n // batch)
+    kw = dict(problem=problem, freeze=freeze_passive, m=m, q=q, tau=tau)
     for _ in range(epochs):
         key, sub = jax.random.split(key)
         idx = jax.random.randint(sub, (steps, batch), 0, n)
-        for i in range(steps):
-            pt, bufs, t = _deep_delayed_step(
-                pt, bufs, t, idx[i], blocks, yj, lr, delays,
-                problem=problem, freeze=freeze_passive, m=m, q=q, tau=tau)
+        if pipelined:
+            hs, z = deep_vfl._bum_pipe_prologue(pt, idx[0], blocks, q=q)
+            for i in range(steps - 1):
+                pt, bufs, t, hs, z = _deep_pipe_delayed_step(
+                    pt, bufs, t, idx[i], hs, z, idx[i + 1], blocks, yj,
+                    lr, delays, **kw)
+            pt, bufs, t = _deep_pipe_delayed_tail(
+                pt, bufs, t, idx[-1], hs, z, blocks, yj, lr, delays, **kw)
+        else:
+            for i in range(steps):
+                pt, bufs, t = _deep_delayed_step(
+                    pt, bufs, t, idx[i], blocks, yj, lr, delays, **kw)
+    return deep_vfl._to_params(pt)
+
+
+def train_deep_multi_delayed(problem: Problem, x, y, layout: PartyLayout,
+                             tau: int, epochs: int = 3, lr: float = 0.05,
+                             batch: int = 32, seed: int = 0,
+                             hidden: int = 32, d_rep: int = 16,
+                             freeze_passive: bool = False,
+                             pipelined: bool = False):
+    """Sequential oracle for bounded-delay **multi-dominator deep**
+    VFB²-SGD: every party carries m = layout.m encoder-gradient ring
+    buffers (one per dominator's update stream) aging under the (q, m)
+    schedule from :func:`party_dominator_delays` (own diagonal fresh);
+    the dominator-held head always applies the fresh summed gradient.
+    ``pipelined=True`` additionally makes every buffered gradient a τ = 1
+    stale-read one.  The fused realization is
+    :func:`run_deep_multi_delayed_fused`."""
+    from repro.core import deep_vfl
+
+    n, d = x.shape
+    q, m = layout.q, layout.m
+    key = jax.random.PRNGKey(seed)
+    params = deep_vfl.init_deep_vfl(key, layout, d, hidden, d_rep)
+    xj = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    blocks = tuple(xj[:, lo:hi] for lo, hi in layout.bounds)
+    delays = jnp.asarray(party_dominator_delays(layout, tau, seed))
+
+    pt = deep_vfl._to_tuple(params)
+    ring = lambda a: jnp.zeros((tau + 1, m) + a.shape, jnp.float32)
+    bufs = (tuple(ring(a) for a in pt[0]), tuple(ring(a) for a in pt[1]),
+            tuple(ring(a) for a in pt[2]))
+    t = jnp.zeros((), jnp.int32)
+    steps = max(1, n // batch)
+    kw = dict(problem=problem, freeze=freeze_passive, m=m, q=q, tau=tau)
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (steps, m * batch), 0, n)
+        if pipelined:
+            hs, z = deep_vfl._bum_pipe_prologue(pt, idx[0], blocks, q=q)
+            for i in range(steps - 1):
+                pt, bufs, t, hs, z = _deep_multi_pipe_delayed_step(
+                    pt, bufs, t, idx[i], hs, z, idx[i + 1], blocks, yj,
+                    lr, delays, **kw)
+            pt, bufs, t = _deep_multi_pipe_delayed_tail(
+                pt, bufs, t, idx[-1], hs, z, blocks, yj, lr, delays, **kw)
+        else:
+            for i in range(steps):
+                pt, bufs, t = _deep_multi_delayed_step(
+                    pt, bufs, t, idx[i], blocks, yj, lr, delays, **kw)
     return deep_vfl._to_params(pt)
 
 
 def run_deep_delayed_fused(problem: Problem, x, y, layout: PartyLayout,
                            tau: int, epochs: int, lr: float, batch: int,
                            seed: int = 0, hidden: int = 32, d_rep: int = 16,
-                           engine_config=None, active_only: bool = False):
+                           engine_config=None, active_only: bool = False,
+                           pipelined: bool = False):
     """Bounded-delay deep VFB²-SGD on the fused engine: whole stale deep
     epochs (encoder forward, masked secure aggregation of the vector
     partials, ϑ_z BUM broadcast, ring-buffered Jacobian-transpose
     updates) are one compiled dispatch each.  Same init/key stream and
     delay schedule as :func:`train_deep_delayed` (the oracle tests pin
-    them at 1e-5).  Returns the final ``DeepVFLParams``."""
+    them at 1e-5).  ``pipelined=True`` routes through the engine's
+    one-invocation-per-interior-step schedule (the τ = 1 stale forward
+    read composes with the delay schedule).  Returns the final
+    ``DeepVFLParams``."""
     from repro.core import deep_vfl
     from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
 
@@ -380,11 +562,49 @@ def run_deep_delayed_fused(problem: Problem, x, y, layout: PartyLayout,
     delays_q = jnp.asarray(party_delay_values(layout, tau, seed))
     t0 = jnp.zeros((), jnp.int32)
     steps = max(1, n // batch)
+    epoch = eng.deep_pipelined_delayed_sgd_epoch if pipelined \
+        else eng.deep_delayed_sgd_epoch
     for _ in range(epochs):
         key, sub = jax.random.split(key)
-        pq, bufq, t0 = eng.deep_delayed_sgd_epoch(pq, bufq, t0, delays_q,
-                                                  lr, sub, batch, steps,
-                                                  tau)
+        pq, bufq, t0 = epoch(pq, bufq, t0, delays_q, lr, sub, batch,
+                             steps, tau)
+    return eng.unpack_deep(pq)
+
+
+def run_deep_multi_delayed_fused(problem: Problem, x, y,
+                                 layout: PartyLayout, tau: int,
+                                 epochs: int, lr: float, batch: int,
+                                 seed: int = 0, hidden: int = 32,
+                                 d_rep: int = 16, engine_config=None,
+                                 active_only: bool = False,
+                                 pipelined: bool = False):
+    """Multi-dominator bounded-delay deep VFB²-SGD on the fused engine:
+    per-(party, dominator) encoder-gradient ring buffers ride the
+    party-mapped scan, the m ϑ_z broadcasts come back as block columns of
+    one rank-k contraction, and the dominator-held heads stay fresh.
+    Same init/key stream and (q, m) delay schedule (own diagonal fresh)
+    as :func:`train_deep_multi_delayed`.  Returns the final
+    ``DeepVFLParams``."""
+    from repro.core import deep_vfl
+    from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
+
+    n, d = np.asarray(x).shape
+    cfg = engine_config if engine_config is not None \
+        else EngineConfig(donate=True)
+    eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
+    key = jax.random.PRNGKey(seed)
+    pq = eng.pack_deep(deep_vfl.init_deep_vfl(key, layout, d, hidden,
+                                              d_rep))
+    bufq = eng.deep_multi_delay_buffers(pq, tau)
+    delays_qm = jnp.asarray(party_dominator_delays(layout, tau, seed))
+    t0 = jnp.zeros((), jnp.int32)
+    steps = max(1, n // batch)
+    epoch = eng.deep_multi_pipelined_delayed_sgd_epoch if pipelined \
+        else eng.deep_multi_delayed_sgd_epoch
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        pq, bufq, t0 = epoch(pq, bufq, t0, delays_qm, lr, sub, batch,
+                             steps, tau)
     return eng.unpack_deep(pq)
 
 

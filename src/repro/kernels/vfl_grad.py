@@ -48,10 +48,15 @@ into one X operand.  ``split=Bb`` declares rows [0, Bb) backward-only
 partial products): ϑ is supplied for the backward rows alone (the wrapper
 zero-masks the forward rows out of the XᵀΘ contraction, padding-aware) and
 z is returned for the forward rows alone.  The column counts of the two
-sides are then independent — e.g. a single forward iterate next to M = m
-per-dominator ϑ columns (block-diagonal Θ) — so one kernel grid streams
-the w/ϑ tiles once and serves backward(t) ∥ forward(t+1) in a single
-launch instead of two.
+sides are then independent, and both sides may be **vector-valued**:
+a single forward iterate next to M = m per-dominator ϑ columns
+(block-diagonal Θ, the linear multi-dominator epochs), the deep pipelined
+epochs' Mw = hidden encoder layer (W₁) beside Mθ = hidden Jacobian
+cotangents (du), or Mθ = m·hidden block-diagonal du slabs in the
+multi-dominator deep regime — one kernel grid streams the w/ϑ tiles once
+and serves backward(t) ∥ forward(t+1) in a single launch instead of two
+(``core.engine`` pipelined scan bodies are jaxpr-audited at exactly one
+``pallas_call``).
 
 λ is a **traced scalar operand** (SMEM), not a compile-time constant, so
 sweeping the regularizer never recompiles the kernel.  It is required to

@@ -254,16 +254,12 @@ def test_train_deep_params_warm_start(ds, prob):
 
 
 def test_train_deep_rejects_unsupported_combos(ds, prob):
+    # multi_dominator / pipelined are supported deep combos since ISSUE 5
+    # (tests/test_deep_sched_engine.py); SAGA and flat w0 still reject.
     layout = LAYOUTS[1]
     with pytest.raises(ValueError):
         algorithms.train(prob, ds.x_train, ds.y_train, layout, deep=True,
                          algo="saga", epochs=1)
-    with pytest.raises(ValueError):
-        algorithms.train(prob, ds.x_train, ds.y_train, layout, deep=True,
-                         algo="sgd", epochs=1, pipelined=True)
-    with pytest.raises(ValueError):
-        algorithms.train(prob, ds.x_train, ds.y_train, layout, deep=True,
-                         algo="sgd", epochs=1, multi_dominator=True)
     with pytest.raises(ValueError):
         algorithms.train(prob, ds.x_train, ds.y_train, layout, deep=True,
                          algo="sgd", epochs=1, w0=np.zeros(D))

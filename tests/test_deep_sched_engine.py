@@ -1,0 +1,327 @@
+"""Deep multi-dominator + pipelined schedules on the fused engine.
+
+The acceptance bar (ISSUE 5): every schedule the engine supports on the
+linear path must exist on the deep (party-local encoder) path —
+``deep_multi_{sgd,svrg,delayed_sgd}_epoch`` run all m dominators'
+concurrent backward updates per step, ``deep_pipelined_*`` overlap round
+t's Jacobian-transpose BUM application with round t+1's encoder forward
+in ONE split-batch kernel invocation per interior step, and the two
+compose — each pinned against its sequential oracle
+(``deep_vfl.train_deep_vfl(..., multi_dominator/pipelined)``,
+``staleness.train_deep_{multi_}delayed``) at 1e-5 over q ∈ {2, 4},
+m ∈ {1, 2}, secure off/two_tree/ring and both contraction routings
+(rank-k kernel ↔ jnp), with the pipelined deep scan body jaxpr-audited
+at exactly one ``pallas_call`` (launches/epoch = steps + 1).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms, deep_vfl, losses, staleness
+from repro.core.engine import (EngineConfig, FusedEngine, count_primitives,
+                               scan_body_primitive_counts)
+from repro.data.synthetic import classification_dataset
+
+N, D, BATCH, EPOCHS = 600, 32, 32, 2
+HID, DREP = 16, 8
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return classification_dataset("deep_sched", N, D, seed=5, noise=0.4)
+
+
+LAYOUTS = [algorithms.PartyLayout.even(D, 2, 1),
+           algorithms.PartyLayout.even(D, 4, 2)]
+
+
+@pytest.fixture(params=LAYOUTS, ids=["q2m1", "q4m2"])
+def layout(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return losses.logistic_l2()
+
+
+def _assert_params_close(a, b, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(a.head), np.asarray(b.head),
+                               atol=atol, rtol=0)
+    for la, lb in zip((*a.enc_w1, *a.enc_b1, *a.enc_w2),
+                      (*b.enc_w1, *b.enc_b1, *b.enc_w2)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=atol, rtol=0)
+
+
+def _drive(eng, algo="sgd", multi=False, pipelined=False, epochs=EPOCHS,
+           lr=0.05, seed=0):
+    """Drive the engine's scheduled deep epochs with the oracle's exact
+    key stream (init consumes the root key; each epoch splits a subkey)."""
+    key = jax.random.PRNGKey(seed)
+    pq = eng.pack_deep(deep_vfl.init_deep_vfl(key, eng.layout, D, HID,
+                                              DREP))
+    steps = eng.n // BATCH
+    if multi:
+        sgd = eng.deep_multi_pipelined_sgd_epoch if pipelined \
+            else eng.deep_multi_sgd_epoch
+        svrg = eng.deep_multi_pipelined_svrg_epoch if pipelined \
+            else eng.deep_multi_svrg_epoch
+    else:
+        sgd = eng.deep_pipelined_sgd_epoch if pipelined \
+            else eng.deep_sgd_epoch
+        svrg = eng.deep_pipelined_svrg_epoch if pipelined \
+            else eng.deep_svrg_epoch
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        if algo == "svrg":
+            muq = eng.deep_full_gradient(pq, sub)
+            pq = svrg(pq, pq, muq, lr, sub, BATCH, steps)
+        else:
+            pq = sgd(pq, lr, sub, BATCH, steps)
+    return eng.unpack_deep(pq)
+
+
+def _oracle(ds, layout, prob, algo="sgd", multi=False, pipelined=False,
+            **kw):
+    params, _ = deep_vfl.train_deep_vfl(
+        prob, ds.x_train, ds.y_train, layout, algo=algo, epochs=EPOCHS,
+        lr=0.05, batch=BATCH, seed=0, hidden=HID, d_rep=DREP,
+        multi_dominator=multi, pipelined=pipelined, **kw)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# multi-dominator deep epochs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["sgd", "svrg"])
+def test_deep_multi_matches_oracle(ds, layout, prob, algo):
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off"))
+    p_eng = _drive(eng, algo=algo, multi=True)
+    _assert_params_close(p_eng, _oracle(ds, layout, prob, algo=algo,
+                                        multi=True))
+
+
+@pytest.mark.parametrize("secure", ["two_tree", "ring"])
+def test_deep_multi_secure_modes_are_lossless(ds, layout, prob, secure):
+    """Algorithm 1's masks must cancel exactly enough on all m dominators'
+    (B, d_rep) vector partial sets aggregated in the ONE collective."""
+    base = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                       EngineConfig(secure="off"))
+    enc = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure=secure))
+    _assert_params_close(_drive(enc, multi=True), _drive(base, multi=True))
+
+
+def test_deep_multi_kernel_routing_matches_jnp(ds, layout, prob):
+    """The block-column rank-k pass (`_bwd_doms_wide`) and the jnp segment
+    einsum must produce the same multi-dominator delayed epoch — the path
+    where per-dominator columns actually matter."""
+    kw = dict(tau=3, epochs=1, lr=0.05, batch=BATCH, seed=0, hidden=HID,
+              d_rep=DREP)
+    p_j = staleness.run_deep_multi_delayed_fused(
+        prob, ds.x_train, ds.y_train, layout,
+        engine_config=EngineConfig(use_kernel=False), **kw)
+    p_k = staleness.run_deep_multi_delayed_fused(
+        prob, ds.x_train, ds.y_train, layout,
+        engine_config=EngineConfig(use_kernel=True), **kw)
+    _assert_params_close(p_k, p_j)
+
+
+def test_deep_multi_freeze_passive_matches_and_freezes(ds, prob):
+    """engine active_only == oracle freeze_passive on the multi path:
+    passive encoders stay at init while the m dominators keep updating."""
+    layout = LAYOUTS[1]
+    p_ref = _oracle(ds, layout, prob, multi=True, freeze_passive=True)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off"), active_only=True)
+    p_eng = _drive(eng, multi=True)
+    _assert_params_close(p_eng, p_ref)
+    p0 = deep_vfl.init_deep_vfl(jax.random.PRNGKey(0), layout, D, HID,
+                                DREP)
+    for p in range(layout.m, layout.q):
+        np.testing.assert_array_equal(np.asarray(p_eng.enc_w1[p]),
+                                      np.asarray(p0.enc_w1[p]))
+    diff = float(jnp.abs(p_eng.enc_w1[0] - p0.enc_w1[0]).max())
+    assert diff > 1e-6, "active encoders must still train"
+
+
+# ---------------------------------------------------------------------------
+# pipelined deep epochs (τ = 1 stale forward read)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["sgd", "svrg"])
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["jnp", "kernel"])
+def test_deep_pipelined_matches_oracle(ds, layout, prob, algo, use_kernel):
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off", use_kernel=use_kernel))
+    p_eng = _drive(eng, algo=algo, pipelined=True)
+    _assert_params_close(p_eng, _oracle(ds, layout, prob, algo=algo,
+                                        pipelined=True))
+
+
+@pytest.mark.parametrize("algo", ["sgd", "svrg"])
+def test_deep_multi_pipelined_matches_oracle(ds, layout, prob, algo):
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off"))
+    p_eng = _drive(eng, algo=algo, multi=True, pipelined=True)
+    _assert_params_close(p_eng, _oracle(ds, layout, prob, algo=algo,
+                                        multi=True, pipelined=True))
+
+
+@pytest.mark.parametrize("secure", ["two_tree", "ring"])
+def test_deep_pipelined_secure_modes_are_lossless(ds, prob, secure):
+    layout = LAYOUTS[1]
+    base = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                       EngineConfig(secure="off"))
+    enc = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure=secure))
+    _assert_params_close(_drive(enc, pipelined=True),
+                         _drive(base, pipelined=True))
+
+
+def test_deep_pipelined_differs_from_sequential(ds, prob):
+    """The τ = 1 stale forward read must actually change the trajectory
+    (regression against the pipeline silently running fresh)."""
+    layout = LAYOUTS[1]
+    p_pipe = _oracle(ds, layout, prob, pipelined=True)
+    p_seq = _oracle(ds, layout, prob, pipelined=False)
+    diff = max(float(jnp.abs(a - b).max()) for a, b in
+               zip(p_pipe.enc_w1, p_seq.enc_w1))
+    assert diff > 1e-6, diff
+
+
+def test_deep_pipelined_scan_body_has_one_kernel_invocation(ds, prob):
+    """Acceptance audit: the pipelined deep scan body contains exactly ONE
+    pallas_call (the split-batch layer-1 invocation; the sequential deep
+    body launches 4) and zero host transfers; launches/epoch = steps+1."""
+    from benchmarks.bench_engine import count_host_transfers
+
+    layout = LAYOUTS[1]
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                      EngineConfig(secure="off", use_kernel=True))
+    key = jax.random.PRNGKey(0)
+    pq = eng.pack_deep(deep_vfl.init_deep_vfl(key, layout, D, HID, DREP))
+    steps = eng.n // BATCH
+    jx_pipe = eng.deep_pipelined_sgd_epoch_jaxpr(pq, 0.05, key, BATCH,
+                                                 steps)
+    jx_seq = eng.deep_sgd_epoch_jaxpr(pq, 0.05, key, BATCH, steps)
+    assert scan_body_primitive_counts(jx_pipe, "pallas_call") == [1]
+    assert scan_body_primitive_counts(jx_seq, "pallas_call") == [4]
+    assert count_host_transfers(jx_pipe) == 0
+    total = count_primitives(jx_pipe, "pallas_call")
+    launches = 1 * (steps - 1) + (total - 1)
+    assert launches == steps + 1, launches
+
+
+# ---------------------------------------------------------------------------
+# bounded-delay deep schedules (multi-dominator + pipelined composition)
+# ---------------------------------------------------------------------------
+
+DKW = dict(tau=3, epochs=2, lr=0.05, batch=BATCH, seed=0, hidden=HID,
+           d_rep=DREP)
+
+
+def test_deep_multi_delayed_matches_oracle(ds, layout, prob):
+    p_ref = staleness.train_deep_multi_delayed(prob, ds.x_train,
+                                               ds.y_train, layout, **DKW)
+    p_fused = staleness.run_deep_multi_delayed_fused(
+        prob, ds.x_train, ds.y_train, layout, **DKW)
+    _assert_params_close(p_fused, p_ref)
+
+
+@pytest.mark.parametrize("multi", [False, True], ids=["single", "multi"])
+def test_deep_pipelined_delayed_matches_oracle(ds, layout, prob, multi):
+    train = staleness.train_deep_multi_delayed if multi \
+        else staleness.train_deep_delayed
+    run = staleness.run_deep_multi_delayed_fused if multi \
+        else staleness.run_deep_delayed_fused
+    p_ref = train(prob, ds.x_train, ds.y_train, layout, pipelined=True,
+                  **DKW)
+    p_fused = run(prob, ds.x_train, ds.y_train, layout, pipelined=True,
+                  **DKW)
+    _assert_params_close(p_fused, p_ref)
+
+
+def test_dominator_delay_schedule_own_diagonal_fresh():
+    """Alg. 2: a dominator's own block update always uses its fresh
+    gradient — d_{j,j} = 0 for every dominator, on every seed."""
+    layout = LAYOUTS[1]
+    for seed in range(5):
+        dd = staleness.party_dominator_delays(layout, tau=4, seed=seed)
+        assert dd.shape == (layout.q, layout.m)
+        for j in range(layout.m):
+            assert dd[j, j] == 0
+        assert dd.max() <= 4 and dd.min() >= 0
+
+
+def test_deep_multi_delayed_tau0_collapses_to_fresh(ds, prob):
+    """τ = 0 zeroes every delay, so the ring buffers must reproduce the
+    fresh multi-dominator trajectory exactly (schedule regression)."""
+    layout = LAYOUTS[1]
+    kw = dict(DKW, tau=0)
+    p_delay = staleness.train_deep_multi_delayed(prob, ds.x_train,
+                                                 ds.y_train, layout, **kw)
+    p_fresh, _ = deep_vfl.train_deep_vfl(
+        prob, ds.x_train, ds.y_train, layout, epochs=2, lr=0.05,
+        batch=BATCH, seed=0, hidden=HID, d_rep=DREP, multi_dominator=True)
+    # per-dominator-then-sum vs full-row contraction: float association
+    # differs, the trajectory must not
+    _assert_params_close(p_delay, p_fresh)
+
+
+def test_deep_multi_delayed_differs_from_fresh(ds, prob):
+    """The (q, m) delay schedule must actually change the trajectory."""
+    layout = LAYOUTS[1]
+    p_delay = staleness.train_deep_multi_delayed(prob, ds.x_train,
+                                                 ds.y_train, layout,
+                                                 **DKW)
+    p_fresh, _ = deep_vfl.train_deep_vfl(
+        prob, ds.x_train, ds.y_train, layout, epochs=2, lr=0.05,
+        batch=BATCH, seed=0, hidden=HID, d_rep=DREP, multi_dominator=True)
+    diff = max(float(jnp.abs(a - b).max()) for a, b in
+               zip(p_delay.enc_w1, p_fresh.enc_w1))
+    assert diff > 1e-6, diff
+
+
+def test_deep_delayed_freeze_passive(ds, prob):
+    """freeze_passive interaction on the stale multi path: frozen passive
+    encoders stay frozen while the delayed active streams keep aging."""
+    layout = LAYOUTS[1]
+    kw = dict(DKW, epochs=1)
+    p_ref = staleness.train_deep_multi_delayed(
+        prob, ds.x_train, ds.y_train, layout, freeze_passive=True, **kw)
+    p_fused = staleness.run_deep_multi_delayed_fused(
+        prob, ds.x_train, ds.y_train, layout, active_only=True, **kw)
+    _assert_params_close(p_fused, p_ref)
+    p0 = deep_vfl.init_deep_vfl(jax.random.PRNGKey(0), layout, D, HID,
+                                DREP)
+    for p in range(layout.m, layout.q):
+        np.testing.assert_array_equal(np.asarray(p_fused.enc_w1[p]),
+                                      np.asarray(p0.enc_w1[p]))
+
+
+# ---------------------------------------------------------------------------
+# trainer routing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("flags", [
+    dict(multi_dominator=True),
+    dict(pipelined=True),
+    dict(multi_dominator=True, pipelined=True),
+], ids=["multi", "pipelined", "multi_pipelined"])
+def test_train_deep_sched_fused_matches_reference(ds, prob, flags):
+    layout = LAYOUTS[1]
+    kw = dict(algo="sgd", epochs=EPOCHS, lr=0.05, batch=BATCH, seed=0,
+              deep=True, hidden=HID, d_rep=DREP, **flags)
+    ref = algorithms.train(prob, ds.x_train, ds.y_train, layout, **kw)
+    fused = algorithms.train(prob, ds.x_train, ds.y_train, layout,
+                             engine="fused", **kw)
+    np.testing.assert_allclose(fused.w, ref.w, atol=1e-5, rtol=0)
+    _assert_params_close(fused.params, ref.params)
+    for hf, hr in zip(fused.history, ref.history):
+        assert abs(hf["objective"] - hr["objective"]) < 1e-5
