@@ -851,3 +851,132 @@ def run_deep_pipelined(quick: bool = False):
     }
     save("engine_deep_pipelined", rec)
     return rec
+
+
+def run_faults(quick: bool = False):
+    """Chaos tier: faulted fused epochs vs the fault-free fused path.
+
+    Measures the cost of elastic fault tolerance — membership-masked
+    epochs with survivor-aware (re-keyed) secure aggregation and
+    fault-gated delay rings — against the plain fused SGD epoch on the
+    same workload, replaying one fixed ``faults.random_trace``.
+
+    Deterministic gates (same on every host, asserted in-suite):
+
+    * the faulted epoch's jaxpr contains **zero** host-transfer
+      primitives — fault masks ride the scan as dense slabs, never as
+      callbacks;
+    * the whole faulted epoch is still ONE dispatch;
+    * the fused faulted run matches the sequential fault oracle
+      (``faults.run_faulted_reference``) at 1e-5 under the same trace.
+
+    Wall-clock headlines (``fault_overhead_ratio`` = faulted / fault-free
+    steps/sec) are advisory drift checks against ``BENCH_engine.json``'s
+    ``faults`` key.
+    """
+    from repro.core import faults
+
+    n, d, q, m = (1024, 128, 8, 3) if quick else (4096, 256, 8, 3)
+    batch = 64
+    steps = n // batch
+    tau = 2
+    reps = 3 if quick else 5
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = np.sign(rng.standard_normal(n)).astype(np.float32)
+    prob = losses.logistic_l2()
+    layout = algorithms.PartyLayout.even(d, q, m)
+    key = jax.random.PRNGKey(0)
+
+    trace = faults.random_trace(layout, steps, rate=0.1, max_straggle=tau,
+                                seed=0)
+    sched = trace.compile(m)
+    fwdq, bwdq, extraq = sched.epoch(0, steps).party_rows()
+    dq = jnp.zeros(q, jnp.int32)   # base delays 0: straggle events only
+
+    eng = FusedEngine(prob, x, y, layout, EngineConfig(secure="off"))
+    wq0 = eng.pack_w(np.zeros(d, np.float32))
+    bufq0 = jnp.zeros((q, tau + 1, eng.dp), jnp.float32)
+    t00 = jnp.zeros((), jnp.int32)
+
+    # --- fault-free fused epoch (the reference cost) ----------------------
+    def plain_epoch():
+        return jax.block_until_ready(
+            eng.sgd_epoch(wq0, 0.3, key, batch, steps))
+
+    dt_plain = best_of(plain_epoch, repeat=reps)
+    plain_sps = steps / dt_plain
+    emit("engine/faults_fault_free_epoch", dt_plain * 1e6,
+         f"steps_per_sec={plain_sps:.0f}")
+
+    # --- faulted fused epoch ---------------------------------------------
+    def faulted_epoch():
+        return jax.block_until_ready(
+            eng.faulted_sgd_epoch(wq0, bufq0, t00, dq, fwdq, bwdq, extraq,
+                                  0.3, key, batch, steps, tau)[0])
+
+    dt_f = best_of(faulted_epoch, repeat=reps)
+    f_sps = steps / dt_f
+    overhead = f_sps / plain_sps
+    emit("engine/faults_faulted_epoch", dt_f * 1e6,
+         f"steps_per_sec={f_sps:.0f} vs_fault_free={overhead:.2f}x")
+
+    # --- faulted + survivor-re-keyed ring masks ---------------------------
+    enr = FusedEngine(prob, x, y, layout, EngineConfig(secure="ring"))
+
+    def faulted_secure_epoch():
+        return jax.block_until_ready(
+            enr.faulted_sgd_epoch(wq0, bufq0, t00, dq, fwdq, bwdq, extraq,
+                                  0.3, key, batch, steps, tau)[0])
+
+    dt_s = best_of(faulted_secure_epoch, repeat=reps)
+    emit("engine/faults_faulted_secure_epoch", dt_s * 1e6,
+         f"steps_per_sec={steps / dt_s:.0f}")
+
+    # --- host-transfer audit (deterministic gate) -------------------------
+    jaxpr = eng.faulted_sgd_epoch_jaxpr(wq0, bufq0, t00, dq, fwdq, bwdq,
+                                        extraq, 0.3, key, batch, steps,
+                                        tau)
+    transfers = count_host_transfers(jaxpr)
+    emit("engine/faults_host_transfer_prims", 0.0,
+         f"count={transfers} dispatches_per_epoch=1 (vs {steps})")
+    assert transfers == 0, (
+        f"faulted epoch contains {transfers} host-transfer primitives")
+
+    # --- oracle pin (deterministic gate) ----------------------------------
+    w_ref = faults.run_faulted_reference(prob, x, y, layout, trace,
+                                         tau=tau, epochs=1, lr=0.3,
+                                         batch=batch, seed=0,
+                                         delays_q=np.zeros(q, np.int32))
+    w_fus = faults.run_faulted_fused(prob, x, y, layout, trace, tau=tau,
+                                     epochs=1, lr=0.3, batch=batch,
+                                     seed=0,
+                                     delays_q=np.zeros(q, np.int32))
+    diff = float(np.abs(w_fus - w_ref).max())
+    emit("engine/faults_oracle_max_abs_diff", 0.0, f"diff={diff:.2e}")
+    assert diff <= 1e-5, (
+        f"faulted fused epoch drifted {diff:.2e} from the sequential "
+        "fault oracle (gate: 1e-5)")
+
+    base = tier_baseline("faults", quick)
+    cfg = {"n": n, "d": d, "q": q, "m": m, "batch": batch, "steps": steps,
+           "tau": tau, "backend": jax.default_backend()}
+    warn_on_drift("fault_overhead_ratio", overhead,
+                  base.get("fault_overhead_ratio"),
+                  tol=ratio_tol(quick), gate=False,
+                  fresh_config=cfg, committed_config=base.get("config"))
+
+    rec = {
+        "config": cfg,
+        "fault_free_steps_per_sec": plain_sps,
+        "faulted_steps_per_sec": f_sps,
+        "faulted_secure_steps_per_sec": steps / dt_s,
+        "fault_overhead_ratio": overhead,
+        "oracle_max_abs_diff": diff,
+        "host_transfer_prims_in_faulted_epoch": transfers,
+        "dispatches_per_epoch": {"faulted_fused": 1,
+                                 "per_minibatch": steps},
+    }
+    save("engine_faults", rec)
+    return rec

@@ -58,6 +58,7 @@ def main() -> None:
             quick=args.quick),
         "deep_pipelined": lambda: bench_engine.run_deep_pipelined(
             quick=args.quick),
+        "faults": lambda: bench_engine.run_faults(quick=args.quick),
         "roofline": bench_roofline.run,
     }
     if args.ci:

@@ -1,12 +1,33 @@
-"""Dependency-free checkpointing: flat npz + pytree structure manifest."""
+"""Dependency-free checkpointing: flat npz + pytree structure manifest.
+
+Checkpoints are **atomic**: the arrays and the manifest are written into a
+single ``.npz`` bundle at a temporary name in the destination directory,
+fsynced, and moved into place with ``os.replace`` — a reader (or a resumed
+trainer) either sees the complete previous checkpoint or the complete new
+one, never a torn write.  This is the property the preemption-safe
+``train(..., resume_from=...)`` path relies on: killing a trainer at any
+instant leaves a loadable checkpoint behind.
+
+Layout: ``<path>/checkpoint.npz`` holding every leaf (keyed by its pytree
+key-path) plus a ``__manifest__`` JSON entry recording the step counter,
+the treedef string, and the key list.  ``load_checkpoint`` validates both
+the manifest treedef and every leaf shape against the ``like`` template,
+raising ``ValueError`` naming the offending key on mismatch.  The legacy
+two-file layout (``arrays.npz`` + ``manifest.json``) is still readable.
+"""
 from __future__ import annotations
 
+import io
 import json
 import os
-from typing import Any, Dict
+import tempfile
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+_BUNDLE = "checkpoint.npz"
+_MANIFEST_KEY = "__manifest__"
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -17,27 +38,78 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    """Atomically write ``tree`` under ``path`` (a checkpoint directory)."""
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
-    np.savez(os.path.join(path, "arrays.npz"), **flat)
     treedef = jax.tree_util.tree_structure(tree)
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump({"step": step, "treedef": str(treedef),
-                   "keys": list(flat.keys())}, f)
+    manifest = {"step": int(step), "treedef": str(treedef),
+                "keys": list(flat.keys())}
+    payload = dict(flat)
+    payload[_MANIFEST_KEY] = np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8)
+    buf = io.BytesIO()
+    np.savez(buf, **payload)
+    fd, tmp = tempfile.mkstemp(dir=path, prefix=".ckpt-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(buf.getvalue())
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(path, _BUNDLE))
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _read_bundle(path: str) -> Tuple[Any, Optional[dict]]:
+    """Return (npz data, manifest dict or None); handles both layouts."""
+    bundle = os.path.join(path, _BUNDLE)
+    if os.path.exists(bundle):
+        data = np.load(bundle)
+        manifest = json.loads(bytes(data[_MANIFEST_KEY]).decode())
+        return data, manifest
+    # legacy layout: arrays.npz + manifest.json (pre-atomic checkpoints)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    manifest = None
+    mpath = os.path.join(path, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+    return data, manifest
 
 
 def load_checkpoint(path: str, like: Any) -> Any:
-    data = np.load(os.path.join(path, "arrays.npz"))
+    """Restore a pytree shaped ``like`` from ``path``.
+
+    Raises ``ValueError`` naming the mismatched key when a stored leaf's
+    shape disagrees with the template, when a key is missing, or when the
+    manifest's treedef disagrees with ``like``'s structure.
+    """
+    data, manifest = _read_bundle(path)
     leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)
+    if manifest is not None and "treedef" in manifest \
+            and manifest["treedef"] != str(treedef):
+        raise ValueError(
+            f"checkpoint treedef mismatch: stored {manifest['treedef']!r} "
+            f"vs template {str(treedef)!r}")
     leaves = []
     for kp, leaf in leaves_with_path:
-        arr = data[jax.tree_util.keystr(kp)]
-        assert arr.shape == leaf.shape, (kp, arr.shape, leaf.shape)
+        key = jax.tree_util.keystr(kp)
+        if key not in data:
+            raise ValueError(f"checkpoint at {path!r} is missing key {key!r}")
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(
+                f"checkpoint shape mismatch for key {key!r}: stored "
+                f"{arr.shape} vs template {leaf.shape}")
         leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def checkpoint_step(path: str) -> int:
-    with open(os.path.join(path, "manifest.json")) as f:
-        return json.load(f)["step"]
+    _, manifest = _read_bundle(path)
+    if manifest is None:
+        raise ValueError(f"checkpoint at {path!r} has no manifest")
+    return manifest["step"]

@@ -470,6 +470,17 @@ def _eval(problem, w, x, y):
     return obj
 
 
+def _resume_hist(objs, ep0, algo, engine=None):
+    """Rebuild the per-epoch history entries recorded before a preemption."""
+    hist = []
+    for i in range(ep0):
+        entry = {"epoch": i + 1, "objective": float(objs[i]), "algo": algo}
+        if engine is not None:
+            entry["engine"] = engine
+        hist.append(entry)
+    return hist
+
+
 def train(
     problem: Problem,
     x: np.ndarray,
@@ -490,7 +501,16 @@ def train(
     hidden: int = 32,           # deep: encoder hidden width
     d_rep: int = 16,            # deep: aggregated representation width
     deep_params=None,           # deep: DeepVFLParams warm start (w0 analogue)
+    checkpoint_dir: Optional[str] = None,  # atomic per-epoch checkpoints
+    resume_from: Optional[str] = None,     # bit-exact preemption resume
 ) -> TrainResult:
+    """``checkpoint_dir=`` atomically checkpoints the FULL trainer state
+    after every epoch (iterate, RNG key, objective history — plus SAGA's
+    ϑ̃ table/average); ``resume_from=`` restores it and continues.  A run
+    killed at any instant resumes from the last epoch boundary and is
+    **bit-exact** vs the uninterrupted run: each epoch is a deterministic
+    function of the checkpointed state, and the checkpoint write itself is
+    atomic (see ``checkpoint.ckpt``)."""
     n, d = x.shape
     m = layout.m
     if deep:
@@ -500,13 +520,16 @@ def train(
         return _train_deep(problem, x, y, layout, algo, epochs, lr, batch,
                            seed, active_only, engine, engine_config,
                            multi_dominator, pipelined, hidden, d_rep,
-                           deep_params)
+                           deep_params, checkpoint_dir, resume_from)
     if engine == "fused":
         return _train_fused(problem, x, y, layout, algo, epochs, lr, batch,
                             seed, active_only, w0, engine_config,
-                            multi_dominator, pipelined)
+                            multi_dominator, pipelined, checkpoint_dir,
+                            resume_from)
     if engine != "reference":
         raise ValueError(f"unknown engine {engine}")
+    from repro.checkpoint.ckpt import (checkpoint_step, load_checkpoint,
+                                       save_checkpoint)
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     w = jnp.zeros(d, jnp.float32) if w0 is None else jnp.asarray(w0, jnp.float32)
@@ -519,8 +542,30 @@ def train(
         theta_tab = problem.theta(x @ w, y)          # Alg. 6 step 2 (init pass)
         avg = x.T @ theta_tab / n
 
+    objs = np.full(epochs, np.nan)
+
+    def _state():
+        st = {"w": np.asarray(w), "key": np.asarray(key),
+              "objs": objs.copy()}
+        if algo == "saga":
+            st["tab"] = np.asarray(theta_tab)
+            st["avg"] = np.asarray(avg)
+        return st
+
+    ep0 = 0
+    if resume_from is not None:
+        st = load_checkpoint(resume_from, _state())
+        ep0 = checkpoint_step(resume_from)
+        w = jnp.asarray(st["w"])
+        key = jnp.asarray(st["key"])
+        objs = st["objs"]
+        if algo == "saga":
+            theta_tab = jnp.asarray(st["tab"])
+            avg = jnp.asarray(st["avg"])
+        hist = _resume_hist(objs, ep0, algo)
+
     w_snap, mu = w, None
-    for ep in range(epochs):
+    for ep in range(ep0, epochs):
         key, sub = jax.random.split(key)
         if algo == "sgd":
             if multi_dominator:
@@ -556,12 +601,16 @@ def train(
             raise ValueError(f"unknown algo {algo}")
         hist.append({"epoch": ep + 1, "objective": _eval(problem, w, x, y),
                      "algo": algo})
+        objs[ep] = hist[-1]["objective"]
+        if checkpoint_dir is not None:
+            save_checkpoint(checkpoint_dir, _state(), step=ep + 1)
     return TrainResult(w=np.asarray(w), history=hist)
 
 
 def _train_deep(problem, x, y, layout, algo, epochs, lr, batch, seed,
                 active_only, engine, engine_config, multi_dominator,
-                pipelined, hidden, d_rep, deep_params) -> TrainResult:
+                pipelined, hidden, d_rep, deep_params,
+                checkpoint_dir=None, resume_from=None) -> TrainResult:
     """Deep VFB² routing: nonlinear party-local encoders (``core.deep_vfl``
     is the sequential oracle; the fused engine's ``deep_*_epoch`` methods
     the hot path).  ``active_only=True`` freezes passive encoders (the
@@ -578,7 +627,8 @@ def _train_deep(problem, x, y, layout, algo, epochs, lr, batch, seed,
             problem, x, y, layout, algo=algo, epochs=epochs, lr=lr,
             batch=batch, seed=seed, hidden=hidden, d_rep=d_rep,
             freeze_passive=active_only, params=deep_params,
-            multi_dominator=multi_dominator, pipelined=pipelined)
+            multi_dominator=multi_dominator, pipelined=pipelined,
+            checkpoint_dir=checkpoint_dir, resume_from=resume_from)
         hist = [{"epoch": i + 1, "objective": o, "algo": f"deep_{algo}"}
                 for i, o in enumerate(objs)]
         return TrainResult(w=np.asarray(params.head), history=hist,
@@ -588,13 +638,15 @@ def _train_deep(problem, x, y, layout, algo, epochs, lr, batch, seed,
     return _train_deep_fused(problem, x, y, layout, algo, epochs, lr,
                              batch, seed, active_only, engine_config,
                              hidden, d_rep, deep_params,
-                             multi_dominator, pipelined)
+                             multi_dominator, pipelined, checkpoint_dir,
+                             resume_from)
 
 
 def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
                       active_only, engine_config, hidden, d_rep,
                       deep_params=None, multi_dominator=False,
-                      pipelined=False) -> TrainResult:
+                      pipelined=False, checkpoint_dir=None,
+                      resume_from=None) -> TrainResult:
     """Deep hot-path trainer: every nonlinear epoch is ONE device dispatch
     (encoder forward, masked secure aggregation of the (B, d_rep) vector
     partials, ϑ_z = ϑ_logit·head BUM broadcast, and Jacobian-transpose
@@ -604,6 +656,8 @@ def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
     schedule (the flags compose).  Key stream and math mirror
     ``deep_vfl.train_deep_vfl`` exactly (tests pin the histories and final
     params at 1e-5)."""
+    from repro.checkpoint.ckpt import (checkpoint_step, load_checkpoint,
+                                       save_checkpoint)
     from repro.core import deep_vfl  # lazy: deep_vfl imports this module
     from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
 
@@ -627,7 +681,21 @@ def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
         svrg_epoch = eng.deep_pipelined_svrg_epoch if pipelined \
             else eng.deep_svrg_epoch
     hist = []
-    for ep in range(epochs):
+    objs = np.full(epochs, np.nan)
+
+    def _state():
+        return {"pq": jax.tree_util.tree_map(np.asarray, pq),
+                "key": np.asarray(key), "objs": objs.copy()}
+
+    ep0 = 0
+    if resume_from is not None:
+        st = load_checkpoint(resume_from, _state())
+        ep0 = checkpoint_step(resume_from)
+        pq = jax.tree_util.tree_map(jnp.asarray, st["pq"])
+        key = jnp.asarray(st["key"])
+        objs = st["objs"]
+        hist = _resume_hist(objs, ep0, f"deep_{algo}", engine="fused")
+    for ep in range(ep0, epochs):
         key, sub = jax.random.split(key)
         if algo == "sgd":
             pq = sgd_epoch(pq, lr, sub, batch, steps)
@@ -636,6 +704,9 @@ def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
             pq = svrg_epoch(pq, pq, muq, lr, sub, batch, steps)
         hist.append({"epoch": ep + 1, "objective": eng.deep_objective(pq),
                      "algo": f"deep_{algo}", "engine": "fused"})
+        objs[ep] = hist[-1]["objective"]
+        if checkpoint_dir is not None:
+            save_checkpoint(checkpoint_dir, _state(), step=ep + 1)
     params = eng.unpack_deep(pq)
     return TrainResult(w=np.asarray(params.head), history=hist,
                        params=params)
@@ -643,7 +714,8 @@ def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
 
 def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
                  active_only, w0, engine_config,
-                 multi_dominator=False, pipelined=False) -> TrainResult:
+                 multi_dominator=False, pipelined=False,
+                 checkpoint_dir=None, resume_from=None) -> TrainResult:
     """Hot-path trainer: every epoch is ONE device dispatch (secure
     aggregation, ϑ, and BUM updates all inside the compiled program).
     ``multi_dominator=True`` routes through the engine's m-active-party
@@ -652,6 +724,8 @@ def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
     in a single kernel invocation per step (τ = 1 schedule).  The default
     engine config donates the parameter carries, so back-to-back epochs
     reuse buffers instead of allocating fresh ones."""
+    from repro.checkpoint.ckpt import (checkpoint_step, load_checkpoint,
+                                       save_checkpoint)
     from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
 
     n, d = x.shape
@@ -666,8 +740,30 @@ def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
     if algo == "saga":
         tabq, avgq = eng.saga_init(wq, key)
 
+    objs = np.full(epochs, np.nan)
+
+    def _state():
+        st = {"wq": np.asarray(wq), "key": np.asarray(key),
+              "objs": objs.copy()}
+        if algo == "saga":
+            st["tabq"] = np.asarray(tabq)
+            st["avgq"] = np.asarray(avgq)
+        return st
+
+    ep0 = 0
+    if resume_from is not None:
+        st = load_checkpoint(resume_from, _state())
+        ep0 = checkpoint_step(resume_from)
+        wq = jnp.asarray(st["wq"])
+        key = jnp.asarray(st["key"])
+        objs = st["objs"]
+        if algo == "saga":
+            tabq = jnp.asarray(st["tabq"])
+            avgq = jnp.asarray(st["avgq"])
+        hist = _resume_hist(objs, ep0, algo, engine="fused")
+
     wq_snap, muq = wq, None
-    for ep in range(epochs):
+    for ep in range(ep0, epochs):
         key, sub = jax.random.split(key)
         if algo == "sgd":
             if multi_dominator:
@@ -698,6 +794,9 @@ def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
             raise ValueError(f"unknown algo {algo}")
         hist.append({"epoch": ep + 1, "objective": eng.objective(wq),
                      "algo": algo, "engine": "fused"})
+        objs[ep] = hist[-1]["objective"]
+        if checkpoint_dir is not None:
+            save_checkpoint(checkpoint_dir, _state(), step=ep + 1)
     return TrainResult(w=eng.unpack_w(wq), history=hist)
 
 

@@ -38,14 +38,16 @@ import queue
 import sys
 import threading
 import time
-from typing import List, Optional
+import warnings
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import trees as trees_lib
 from repro.core.algorithms import PartyLayout
 from repro.core.losses import Problem
-from repro.core.secure_agg import secure_aggregate_host
+from repro.core.secure_agg import (secure_aggregate_host,
+                                   secure_aggregate_survivors)
 
 
 @dataclasses.dataclass
@@ -54,6 +56,73 @@ class AsyncResult:
     wall_time: float
     updates: int
     loss_trace: List[tuple]  # (wall_time, epochs_done, objective)
+    # realized sample-passes (updates / q · batch / n) — what actually ran,
+    # which a wall-clock cutoff can leave short of total_epochs
+    epochs: float = 0.0
+    # True when the run hit max_wall before reaching target updates
+    timed_out: bool = False
+    # the REALIZED fault trace (a faults.FaultTrace) when a
+    # ThreadFaultPlan was injected: what actually happened under real
+    # concurrency, in the same event format the fused engine replays
+    # deterministically on device
+    fault_trace: object = None
+
+
+@dataclasses.dataclass
+class ThreadFaultPlan:
+    """Fault injection for the thread simulation.
+
+    ``crash_at``/``rejoin_at`` map party id → the global update count at
+    which the party crashes (its collaborators stop applying, dominators
+    exclude it from aggregation and delivery) / rejoins.  While any plan
+    is active, ϑ delivery uses a **bounded** retry with exponential
+    backoff — ``put_retries`` attempts starting at ``put_backoff``
+    seconds — and a delivery that exhausts its retries is recorded as a
+    realized ``drop_msg`` (the party missed that update), instead of the
+    no-fault path's unbounded blocking retry.
+    """
+
+    crash_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    rejoin_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    put_retries: int = 3
+    put_backoff: float = 0.02
+
+    def validate(self, layout: PartyLayout) -> None:
+        for p in list(self.crash_at) + list(self.rejoin_at):
+            if not 0 <= p < layout.q:
+                raise ValueError(f"fault plan names party {p} outside "
+                                 f"[0, {layout.q})")
+        for p, r in self.rejoin_at.items():
+            if p not in self.crash_at:
+                raise ValueError(f"rejoin_at for party {p} without a "
+                                 "crash_at")
+            if r <= self.crash_at[p]:
+                raise ValueError(f"party {p} rejoin count {r} <= crash "
+                                 f"count {self.crash_at[p]}")
+        if all(p in self.crash_at for p in range(layout.m)):
+            raise ValueError(
+                "fault plan crashes every active party; at least one "
+                "dominator must stay alive to compute ϑ")
+
+
+def _sanitize_events(raw, q: int, steps: int):
+    """Order raw realized events and drop racy illegal ones (e.g. a
+    drop_msg recorded in the instant a party crashed) so the trace always
+    compiles for device-side replay."""
+    from repro.core.faults import FaultEvent
+    down = [False] * q
+    out = []
+    for kind, p, step in sorted(raw, key=lambda e: (e[2], e[0] != "crash")):
+        step = min(max(step, 0), steps - 1)
+        if kind == "crash" and not down[p]:
+            down[p] = True
+            out.append(FaultEvent(step, p, "crash"))
+        elif kind == "rejoin" and down[p]:
+            down[p] = False
+            out.append(FaultEvent(step, p, "rejoin"))
+        elif kind == "drop_msg" and not down[p]:
+            out.append(FaultEvent(step, p, "drop_msg"))
+    return tuple(out)
 
 
 class _Shared:
@@ -99,8 +168,26 @@ def run_async(
     base_delay: float = 2e-3,
     seed: int = 0,
     secure: bool = True,
+    max_wall: float = 120.0,
+    fault_plan: Optional[ThreadFaultPlan] = None,
 ) -> AsyncResult:
-    """Run VFB² asynchronously until ``total_epochs`` sample-passes happen."""
+    """Run VFB² asynchronously until ``total_epochs`` sample-passes happen.
+
+    ``max_wall`` bounds the wall clock: a run that hasn't reached its
+    update target by then stops with ``timed_out=True`` and an explicit
+    ``RuntimeWarning`` (never a silent truncation) — ``result.epochs``
+    reports the sample-passes actually realized.
+
+    ``fault_plan`` injects crashes/rejoins at update-count thresholds and
+    switches ϑ delivery to bounded-retry-with-backoff (exhausted retries
+    become realized ``drop_msg`` events).  While a party is down its
+    collaborators stop applying (its block freezes), and dominators
+    exclude it from aggregation — re-keying the masks over the survivor
+    set via ``secure_aggregate_survivors`` — and from delivery.  The
+    faults that actually happened come back as ``result.fault_trace``
+    (a ``faults.FaultTrace``), replayable deterministically on the fused
+    engine.
+    """
     n, d = x.shape
     q, m = layout.q, layout.m
     speed_factors = speed_factors or [1.0] * q
@@ -111,6 +198,43 @@ def run_async(
     rng0 = np.random.default_rng(seed)
     target_updates = int(total_epochs * n / batch) * q  # each ϑ → q block updates
     trace: List[tuple] = []
+    steps_total = max(1, int(total_epochs * n / batch))
+    down = [threading.Event() for _ in range(q)]
+    raw_events: List[tuple] = []            # (kind, party, step)
+    ev_lock = threading.Lock()
+    if fault_plan is not None:
+        fault_plan.validate(layout)
+
+    def cur_step() -> int:
+        return min(shared.update_count // q, steps_total - 1)
+
+    def record(kind: str, p: int):
+        with ev_lock:
+            raw_events.append((kind, p, cur_step()))
+
+    crashed = set()
+    plan_lock = threading.Lock()
+
+    def apply_plan():
+        """Fire crash/rejoin thresholds against the live update counter.
+
+        Called from every collaborator after each applied update (so
+        thresholds fire deterministically with the counter, not at the
+        monitor's polling mercy) and from the monitor loop (so a stalled
+        system still progresses through its schedule)."""
+        if fault_plan is None:
+            return
+        cnt = shared.update_count
+        with plan_lock:
+            for p, c in fault_plan.crash_at.items():
+                if p not in crashed and cnt >= c:
+                    crashed.add(p)
+                    down[p].set()
+                    record("crash", p)
+            for p, r in fault_plan.rejoin_at.items():
+                if p in crashed and down[p].is_set() and cnt >= r:
+                    down[p].clear()
+                    record("rejoin", p)
 
     xs = [x[:, lo:hi] for (lo, hi) in layout.bounds]
 
@@ -120,35 +244,64 @@ def run_async(
         return float(np.mean(np.asarray(problem.loss(agg, y)))
                      + problem.lam * float(np.sum(np.asarray(problem.reg(jnp.asarray(w))))))
 
+    def deliver(p: int, msg) -> None:
+        if fault_plan is None:
+            while not stop.is_set():
+                try:  # bounded inboxes = bounded communication delay τ₂
+                    inboxes[p].put(msg, timeout=0.05)
+                    return
+                except queue.Full:
+                    continue
+            return
+        # fault regime: bounded retry with exponential backoff; an
+        # exhausted delivery is a realized drop_msg, not a hang
+        for attempt in range(fault_plan.put_retries):
+            if stop.is_set():
+                return
+            try:
+                inboxes[p].put(
+                    msg, timeout=fault_plan.put_backoff * (2 ** attempt))
+                return
+            except queue.Full:
+                continue
+        record("drop_msg", p)
+
     def dominator(a: int):
         rng = np.random.default_rng(seed + 1000 + a)
         while not stop.is_set():
+            if down[a].is_set():        # crashed dominator: fully silent
+                time.sleep(0.005)
+                continue
             ib = rng.integers(0, n, size=batch)
             w_hat = shared.read_inconsistent()
             # Algorithm 1: per-party masked partials, two-tree aggregation.
             # Parties compute their partials concurrently; the dominator
             # waits for the slowest one (a sum needs every contribution).
             time.sleep(base_delay * max(speed_factors))
+            alive = [not down[p].is_set() for p in range(q)]
             partials = []
             for p in range(q):
                 lo, hi = layout.bounds[p]
                 partials.append(xs[p][ib] @ w_hat[lo:hi])
-            if secure:
+            if secure and all(alive):
                 agg, _ = secure_aggregate_host(partials, rng, t1, t2)
+            elif secure:
+                agg, _ = secure_aggregate_survivors(partials, alive, rng)
             else:
-                agg = np.sum(partials, axis=0)
+                agg = np.sum([z for p, z in enumerate(partials)
+                              if alive[p]], axis=0)
             theta = _np_theta(problem, agg, y[ib]) / batch
             for p in range(q):  # backward distribution of (ϑ, i)
-                while not stop.is_set():
-                    try:  # bounded inboxes = bounded communication delay τ₂
-                        inboxes[p].put((theta, ib), timeout=0.05)
-                        break
-                    except queue.Full:
-                        continue
+                if not alive[p]:
+                    continue            # no delivery to a crashed party
+                deliver(p, (theta, ib))
 
     def collaborator(p: int):
         lo, hi = layout.bounds[p]
         while not stop.is_set():
+            if down[p].is_set():        # crashed party: block frozen
+                time.sleep(0.002)
+                continue
             try:
                 theta, ib = inboxes[p].get(timeout=0.05)
             except queue.Empty:
@@ -158,6 +311,7 @@ def run_async(
             g = xs[p][ib].T @ theta \
                 + problem.lam * _np_reg_grad(problem, w_hat_blk)
             shared.add_to_block(p, -lr * g)
+            apply_plan()
             if shared.update_count >= target_updates:
                 stop.set()
 
@@ -172,22 +326,39 @@ def run_async(
     for th in threads:
         th.start()
     next_probe = 0.05
+    timed_out = False
     while not stop.is_set():
         time.sleep(0.01)
+        apply_plan()
         el = time.perf_counter() - t0
         if el >= next_probe:
             eps = shared.update_count / q * batch / n
             trace.append((el, eps, objective(shared.w.copy())))
             next_probe = el + 0.05
-        if el > 120:  # safety
+        if el > max_wall:
+            timed_out = True
+            warnings.warn(
+                f"run_async hit the {max_wall:.0f}s wall-clock bound at "
+                f"{shared.update_count}/{target_updates} updates "
+                f"({shared.update_count / q * batch / n:.2f} of "
+                f"{total_epochs} epochs); returning the partial run "
+                "(timed_out=True)", RuntimeWarning)
             stop.set()
     for th in threads:
         th.join(timeout=2.0)
     wall = time.perf_counter() - t0
     trace.append((wall, shared.update_count / q * batch / n,
                   objective(shared.w.copy())))
+    ftrace = None
+    if fault_plan is not None:
+        from repro.core.faults import FaultTrace
+        ftrace = FaultTrace(q=q, steps=steps_total,
+                            events=_sanitize_events(raw_events, q,
+                                                    steps_total))
     return AsyncResult(w=shared.w.copy(), wall_time=wall,
-                       updates=shared.update_count, loss_trace=trace)
+                       updates=shared.update_count, loss_trace=trace,
+                       epochs=shared.update_count / q * batch / n,
+                       timed_out=timed_out, fault_trace=ftrace)
 
 
 def run_sync(
@@ -242,4 +413,4 @@ def run_sync(
     wall = time.perf_counter() - t0
     trace.append((wall, total_epochs, objective(w.copy())))
     return AsyncResult(w=w, wall_time=wall, updates=iters * q,
-                       loss_trace=trace)
+                       loss_trace=trace, epochs=total_epochs)

@@ -325,7 +325,9 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
                    batch: int = 32, seed: int = 0, hidden: int = 32,
                    d_rep: int = 16, freeze_passive: bool = False,
                    params: DeepVFLParams | None = None, algo: str = "sgd",
-                   multi_dominator: bool = False, pipelined: bool = False):
+                   multi_dominator: bool = False, pipelined: bool = False,
+                   checkpoint_dir: str | None = None,
+                   resume_from: str | None = None):
     """BUM training of the deep VFL model (the sequential oracle).
 
     Gradients are computed the protocol way: ϑ_logit at the active party,
@@ -341,7 +343,14 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
     τ = 1 schedule (round t's update applied from activations computed at
     the params one update old — the engine's backward(t) ∥ forward(t+1)
     overlap, sequentially).  The flags compose.
+
+    ``checkpoint_dir=`` atomically checkpoints the full trainer state
+    (params, RNG key, objective history) after every epoch;
+    ``resume_from=`` restores it — a preempted run resumes from the last
+    epoch boundary bit-exact vs the uninterrupted run.
     """
+    from repro.checkpoint.ckpt import (checkpoint_step, load_checkpoint,
+                                       save_checkpoint)
     if algo not in ("sgd", "svrg"):
         raise ValueError(f"unknown deep algo {algo!r}")
     n, d = x.shape
@@ -358,7 +367,21 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
     steps = max(1, n // batch)
     kw = dict(problem=problem, freeze=freeze_passive, m=m, q=q, mdom=mm)
     hist = []
-    for ep in range(epochs):
+    objs = np.full(epochs, np.nan)
+
+    def _state():
+        return {"pt": jax.tree_util.tree_map(np.asarray, pt),
+                "key": np.asarray(key), "objs": objs.copy()}
+
+    ep0 = 0
+    if resume_from is not None:
+        st = load_checkpoint(resume_from, _state())
+        ep0 = checkpoint_step(resume_from)
+        pt = jax.tree_util.tree_map(jnp.asarray, st["pt"])
+        key = jnp.asarray(st["key"])
+        objs = st["objs"]
+        hist = [float(o) for o in objs[:ep0]]
+    for ep in range(ep0, epochs):
         key, sub = jax.random.split(key)
         idx = jax.random.randint(sub, (steps, mm * batch), 0, n)
         if algo == "svrg":
@@ -391,6 +414,10 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
                     pt = _bum_step(pt, idx[i], blocks, yj, lr, **kw)
         params = _to_params(pt)
         hist.append(_objective(problem, params, blocks, yj))
+        objs[ep] = hist[-1]
+        if checkpoint_dir is not None:
+            save_checkpoint(checkpoint_dir, _state(), step=ep + 1)
+    params = _to_params(pt)
     return params, hist
 
 

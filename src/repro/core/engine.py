@@ -82,6 +82,26 @@ t's Jacobian-transpose BUM application with round t+1's encoder forward
 in one split-batch invocation per interior step (τ = 1), and
 ``deep_multi_pipelined_*`` compose both.
 
+Faulted epochs (elastic fault tolerance)
+----------------------------------------
+``faulted_{sgd,svrg,saga}_epoch`` and ``deep_faulted_{sgd,svrg}_epoch``
+replay a deterministic :mod:`core.faults` trace *inside* the compiled
+epoch: per-step membership masks ``fwd``/``bwd`` (q-vector liveness,
+compiled from crash/rejoin/straggle/drop_msg events) gate the survivor
+aggregation, the delay-ring writes, and the updates, so a crashed party's
+block freezes mid-epoch, its stale contributions age through the existing
+(τ+1)-slot ring buffers, and a rejoin replays them — a crash is formally
+an **unbounded delay** in the bounded-staleness model.  Secure
+aggregation under changing membership uses the survivor-re-keyed
+collectives (``secure_psum_members`` / ``secure_psum_ring_members``): the
+per-step pairwise masks are re-derived from the alive-set fingerprint so
+they still cancel exactly over whoever survived.  The
+``schedule_faithful`` ppermute replay of the two-tree schedule is **not**
+membership-safe (a dead party is a hole in the fixed permutation
+sequence), so faulted epochs always lower two-tree mode to the masked
+psum form.  ``core.faults`` holds the sequential fault oracles the
+faulted epochs are pinned against (1e-5, all secure modes).
+
 Vertical partitioning packs party blocks to a uniform padded width
 (``PartyLayout.even`` with d % q != 0 works); the pad coordinates are
 masked out of every update.
@@ -103,7 +123,9 @@ import numpy as np
 
 from repro.core.algorithms import PartyLayout, _batch_indices
 from repro.core.losses import Problem
-from repro.core.secure_agg import secure_psum, secure_psum_ring
+from repro.core.secure_agg import (secure_psum, secure_psum_members,
+                                   secure_psum_ring,
+                                   secure_psum_ring_members)
 from repro.kernels import vfl_grad as _vg
 from repro.sharding.api import shard_map
 from jax.sharding import PartitionSpec as P
@@ -507,6 +529,26 @@ class FusedEngine:
                            schedule_faithful=cfg.schedule_faithful,
                            q=self.q)
 
+    def _agg_members(self, z, kt, alive):
+        """Survivor-aware masked aggregation (the faulted epochs' Alg. 1).
+
+        ``alive`` is this party's liveness flag for the step (0.0/1.0);
+        the collective re-keys the per-step masks from the gathered
+        alive-set so they cancel exactly over the survivors.  Two-tree
+        mode always lowers to the masked-psum form here: the
+        ``schedule_faithful`` ppermute replay of a fixed tree schedule is
+        not membership-safe (a crashed party is a hole in the permutation
+        sequence), while mask cancellation is schedule-independent.
+        """
+        cfg = self.cfg
+        if cfg.secure == "off":
+            return jax.lax.psum(alive * z, cfg.axis)
+        if cfg.secure == "ring":
+            return secure_psum_ring_members(z, cfg.axis, kt, alive,
+                                            mask_scale=cfg.mask_scale)
+        return secure_psum_members(z, cfg.axis, kt, alive,
+                                   mask_scale=cfg.mask_scale)
+
     def _keys(self, key, steps: int):
         """Per-step mask keys, derived off the sampling key's stream."""
         return jax.random.split(jax.random.fold_in(key, 0x5ec), steps)
@@ -898,6 +940,195 @@ class FusedEngine:
             self.xs, wq, bufq, delays_q, self.maskq, self.y, lr, key, t0,
             batch, steps)
         return wq, bufq, t0 + steps
+
+    # -- faulted epochs (elastic membership; core.faults traces) --------------
+
+    def faulted_sgd_epoch(self, wq, bufq, t0, delays_q, fwdq, bwdq, extraq,
+                          lr, key, batch: int, steps: int, tau: int):
+        """Fault-trace VFB²-SGD epoch: the compiled trace's per-step
+        membership masks ride the scan.  ``fwdq``/``bwdq``: (q, steps)
+        0/1 liveness (forward contribution / backward application);
+        ``extraq``: (q, steps) int32 straggle delay added to the party's
+        base delay.  A party with ``bwd = 0`` writes nothing into its
+        ring and applies nothing — its block freezes; on rejoin the ring
+        replays its last pre-crash gradients (crash = unbounded delay).
+        Pinned against ``faults.faulted_sgd_epoch`` at 1e-5."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                xp, wp, buf, delay, fwd_p, bwd_p, extra_p, maskp = local
+                y, lr, idx, mkeys, t0 = shared
+
+                def body(carry, inp):
+                    wp, buf, t = carry
+                    ib, kt, fl, bl, ex = inp
+                    xb = xp[ib]
+                    z = self._fwd(xb, wp[:, None])[:, 0]
+                    agg = self._agg_members(z, kt, fl)
+                    theta = prob.theta(agg, y[ib])
+                    g = self._bwd(xb, theta[:, None], ib.shape[0])[:, 0] \
+                        + prob.lam * prob.reg_grad(wp)
+                    slot = t % (tau + 1)
+                    put = jax.lax.dynamic_update_index_in_dim(buf, g, slot,
+                                                              0)
+                    buf = jnp.where(bl > 0, put, buf)
+                    eff = jnp.maximum(t - (delay + ex), 0) % (tau + 1)
+                    stale = jax.lax.dynamic_index_in_dim(buf, eff, 0,
+                                                         keepdims=False)
+                    return (wp - lr * bl * maskp * stale, buf, t + 1), None
+
+                (wp, buf, _), _ = jax.lax.scan(
+                    body, (wp, buf, t0),
+                    (idx, mkeys, fwd_p, bwd_p, extra_p))
+                return wp, buf
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate("wq", "bufq"))
+            def epoch(xs, wq, bufq, delays_q, fwdq, bwdq, extraq, maskq,
+                      y, lr, key, t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                return mapped((xs, wq, bufq, delays_q, fwdq, bwdq, extraq,
+                               maskq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        wq, bufq = self._epoch(f"faulted_sgd{tau}", build)(
+            self.xs, wq, bufq, delays_q, fwdq, bwdq, extraq, self.maskq,
+            self.y, lr, key, t0, batch, steps)
+        return wq, bufq, t0 + steps
+
+    def faulted_svrg_epoch(self, wq, wq_snap, muq, bufq, t0, delays_q,
+                           fwdq, bwdq, extraq, lr, key, batch: int,
+                           steps: int, tau: int):
+        """Fault-trace VFB²-SVRG inner loop: both forward columns (iterate
+        + snapshot) are survivor aggregates, and the variance-reduced
+        direction v = g(w) − g(w̃) + μ̃ enters the fault-gated ring and
+        ages like the SGD gradient.  μ̃/snapshot refreshes are
+        epoch-boundary barrier rounds over full membership (the runners'
+        responsibility).  Pinned against ``faults.faulted_svrg_epoch``."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, wp, wsp, mup, buf, delay, fwd_p, bwd_p, extra_p,
+                 maskp) = local
+                y, lr, idx, mkeys, t0 = shared
+
+                def body(carry, inp):
+                    wp, buf, t = carry
+                    ib, kt, fl, bl, ex = inp
+                    xb = xp[ib]
+                    z = self._fwd(xb, jnp.stack([wp, wsp], axis=1))
+                    agg = self._agg_members(z, kt, fl)
+                    th1 = prob.theta(agg[:, 0], y[ib])
+                    th0 = prob.theta(agg[:, 1], y[ib])
+                    gg = self._bwd(xb, jnp.stack([th1, th0], axis=1),
+                                   ib.shape[0])
+                    g1 = gg[:, 0] + prob.lam * prob.reg_grad(wp)
+                    g0 = gg[:, 1] + prob.lam * prob.reg_grad(wsp)
+                    v = g1 - g0 + mup
+                    slot = t % (tau + 1)
+                    put = jax.lax.dynamic_update_index_in_dim(buf, v, slot,
+                                                              0)
+                    buf = jnp.where(bl > 0, put, buf)
+                    eff = jnp.maximum(t - (delay + ex), 0) % (tau + 1)
+                    stale = jax.lax.dynamic_index_in_dim(buf, eff, 0,
+                                                         keepdims=False)
+                    return (wp - lr * bl * maskp * stale, buf, t + 1), None
+
+                (wp, buf, _), _ = jax.lax.scan(
+                    body, (wp, buf, t0),
+                    (idx, mkeys, fwd_p, bwd_p, extra_p))
+                return wp, buf
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, wq, wq_snap, muq, bufq, delays_q, fwdq, bwdq,
+                      extraq, maskq, y, lr, key, t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                return mapped((xs, wq, wq_snap, muq, bufq, delays_q, fwdq,
+                               bwdq, extraq, maskq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        wq, bufq = self._epoch(f"faulted_svrg{tau}", build)(
+            self.xs, wq, wq_snap, muq, bufq, delays_q, fwdq, bwdq, extraq,
+            self.maskq, self.y, lr, key, t0, batch, steps)
+        return wq, bufq, t0 + steps
+
+    def faulted_saga_epoch(self, wq, tabq, avgq, bufq, t0, delays_q, fwdq,
+                           bwdq, extraq, lr, key, batch: int, steps: int,
+                           tau: int):
+        """Fault-trace VFB²-SAGA.  State freshness split: the replicated
+        ϑ̃ table is dominator-held protocol state and stays synchronized
+        on every island at every step (a rejoiner re-syncs it from the
+        dominator; SPMD replication realizes that as keeping it hot); the
+        per-party running average is party-PRIVATE and freezes while the
+        party is out — the documented non-recoverable bias of an outage.
+        Pinned against ``faults.faulted_saga_epoch``."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, wp, tab, avgp, buf, delay, fwd_p, bwd_p, extra_p,
+                 maskp) = local
+                y, lr, idx, mkeys, t0 = shared
+                n = y.shape[0]
+
+                def body(carry, inp):
+                    wp, tab, avgp, buf, t = carry
+                    ib, kt, fl, bl, ex = inp
+                    xb = xp[ib]
+                    z = self._fwd(xb, wp[:, None])[:, 0]
+                    agg = self._agg_members(z, kt, fl)
+                    th_new = prob.theta(agg, y[ib])
+                    dth = (th_new - tab[ib])[:, None]
+                    raw = self._bwd(xb, dth, 1)[:, 0]
+                    v = raw / ib.shape[0] + avgp \
+                        + prob.lam * prob.reg_grad(wp)
+                    slot = t % (tau + 1)
+                    put = jax.lax.dynamic_update_index_in_dim(buf, v, slot,
+                                                              0)
+                    buf = jnp.where(bl > 0, put, buf)
+                    eff = jnp.maximum(t - (delay + ex), 0) % (tau + 1)
+                    stale = jax.lax.dynamic_index_in_dim(buf, eff, 0,
+                                                         keepdims=False)
+                    wp = wp - lr * bl * maskp * stale
+                    avgp = avgp + bl * raw / n      # private: frozen out
+                    tab = tab.at[ib].set(th_new)    # shared: always fresh
+                    return (wp, tab, avgp, buf, t + 1), None
+
+                (wp, tab, avgp, buf, _), _ = jax.lax.scan(
+                    body, (wp, tab, avgp, buf, t0),
+                    (idx, mkeys, fwd_p, bwd_p, extra_p))
+                return wp, tab, avgp, buf
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate(
+                                   "wq", "tabq", "avgq", "bufq"))
+            def epoch(xs, wq, tabq, avgq, bufq, delays_q, fwdq, bwdq,
+                      extraq, maskq, y, lr, key, t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                return mapped((xs, wq, tabq, avgq, bufq, delays_q, fwdq,
+                               bwdq, extraq, maskq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        wq, tabq, avgq, bufq = self._epoch(f"faulted_saga{tau}", build)(
+            self.xs, wq, tabq, avgq, bufq, delays_q, fwdq, bwdq, extraq,
+            self.maskq, self.y, lr, key, t0, batch, steps)
+        return wq, tabq, avgq, bufq, t0 + steps
 
     def multi_delayed_sgd_epoch(self, wq, bufq, t0, delays_qm, lr, key,
                                 batch: int, steps: int, tau: int):
@@ -1776,6 +2007,209 @@ class FusedEngine:
             lr, key, t0, batch, steps)
         return pq, bufq, t0 + steps
 
+    # -- deep faulted epochs (elastic membership) -----------------------------
+
+    def _deep_fault_grads(self, xb, yb, w1, b1, w2, head, kt, fl):
+        """:meth:`_deep_grads` with a survivor aggregate: a crashed
+        party's (B, d_rep) vector partial is excluded from z, so the
+        dominator's ϑ is computed over whoever is present."""
+        prob = self.problem
+        bsz = yb.shape[0]
+        h = jnp.tanh(self._fwd(xb, w1) + b1)
+        hr = self._fwd(h, w2)
+        z = self._agg_members(hr, kt, fl)
+        th_l = prob.theta(z @ head, yb) / bsz
+        th_z = th_l[:, None] * head
+        g_head = z.T @ th_l + prob.lam * prob.reg_grad(head)
+        g_w2 = self._bwd(h, th_z, 1) + prob.lam * prob.reg_grad(w2)
+        du = (th_z @ w2.T) * (1.0 - h * h)
+        g_w1 = self._bwd(xb, du, 1) + prob.lam * prob.reg_grad(w1)
+        g_b1 = du.sum(axis=0) + prob.lam * prob.reg_grad(b1)
+        return g_w1, g_b1, g_w2, g_head
+
+    def deep_faulted_sgd_epoch(self, pq, bufq, t0, delays_q, fwdq, bwdq,
+                               extraq, lr, key, batch: int, steps: int,
+                               tau: int):
+        """Fault-trace deep VFB²-SGD: the per-step membership masks gate
+        the survivor aggregation of the (B, d_rep) vector partials, the
+        encoder-gradient ring writes, and the encoder applies; a crashed
+        party's private encoder freezes whole.  The dominator-held
+        replicated head applies fresh every step (shared protocol state —
+        survivors keep it current, a rejoiner re-syncs).  Pinned against
+        ``faults.run_deep_faulted_reference`` at 1e-5."""
+        def build():
+            def party(local, shared):
+                (xp, w1, b1, w2, head, bw1, bb1, bw2, delay, fwd_p, bwd_p,
+                 extra_p, maskp, trainp) = local
+                y, lr, idx, mkeys, t0 = shared
+
+                def body(carry, inp):
+                    w1, b1, w2, head, bw1, bb1, bw2, t = carry
+                    ib, kt, fl, bl, ex = inp
+                    g_w1, g_b1, g_w2, g_head = self._deep_fault_grads(
+                        xp[ib], y[ib], w1, b1, w2, head, kt, fl)
+                    slot = t % (tau + 1)
+                    bw1 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bw1, g_w1,
+                                                            slot, 0), bw1)
+                    bb1 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bb1, g_b1,
+                                                            slot, 0), bb1)
+                    bw2 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bw2, g_w2,
+                                                            slot, 0), bw2)
+                    eff = jnp.maximum(t - (delay + ex), 0) % (tau + 1)
+                    s_w1 = jax.lax.dynamic_index_in_dim(bw1, eff, 0,
+                                                        keepdims=False)
+                    s_b1 = jax.lax.dynamic_index_in_dim(bb1, eff, 0,
+                                                        keepdims=False)
+                    s_w2 = jax.lax.dynamic_index_in_dim(bw2, eff, 0,
+                                                        keepdims=False)
+                    w1 = w1 - lr * bl * maskp[:, None] * s_w1
+                    b1 = b1 - lr * bl * trainp * s_b1
+                    w2 = w2 - lr * bl * trainp * s_w2
+                    head = head - lr * g_head       # dominator-fresh
+                    return (w1, b1, w2, head, bw1, bb1, bw2, t + 1), None
+
+                (w1, b1, w2, head, bw1, bb1, bw2, _), _ = jax.lax.scan(
+                    body, (w1, b1, w2, head, bw1, bb1, bw2, t0),
+                    (idx, mkeys, fwd_p, bwd_p, extra_p))
+                return (w1, b1, w2, head), (bw1, bb1, bw2)
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate("pq", "bufq"))
+            def epoch(xs, pq, bufq, delays_q, fwdq, bwdq, extraq, maskq,
+                      trainq, y, lr, key, t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                w1q, b1q, w2q, headq = pq
+                bw1q, bb1q, bw2q = bufq
+                return mapped((xs, w1q, b1q, w2q, headq, bw1q, bb1q, bw2q,
+                               delays_q, fwdq, bwdq, extraq, maskq,
+                               trainq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        pq, bufq = self._epoch(f"deep_faulted_sgd{tau}", build)(
+            self.xs, pq, bufq, delays_q, fwdq, bwdq, extraq, self.maskq,
+            self.trainq, self.y, lr, key, t0, batch, steps)
+        return pq, bufq, t0 + steps
+
+    def deep_faulted_svrg_epoch(self, pq, pq_snap, muq, bufq, t0,
+                                delays_q, fwdq, bwdq, extraq, lr, key,
+                                batch: int, steps: int, tau: int):
+        """Fault-trace deep VFB²-SVRG inner loop: both encoder passes
+        (iterate + snapshot) contribute survivor-aggregated vector
+        partials, the per-leaf variance-reduced directions enter the
+        fault-gated rings, and the replicated head applies its
+        v_head fresh.  μ̃/snapshot refreshes are epoch-boundary barrier
+        rounds over full membership."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, w1, b1, w2, head, w1s, b1s, w2s, heads, mu, bw1, bb1,
+                 bw2, delay, fwd_p, bwd_p, extra_p, maskp, trainp) = local
+                y, lr, idx, mkeys, t0 = shared
+                mu_w1, mu_b1, mu_w2, mu_head = mu
+                hid = w1.shape[1]
+                dr = head.shape[0]
+
+                def body(carry, inp):
+                    w1, b1, w2, head, bw1, bb1, bw2, t = carry
+                    ib, kt, fl, bl, ex = inp
+                    xb = xp[ib]
+                    yb = y[ib]
+                    bsz = yb.shape[0]
+                    uu = self._fwd(xb, jnp.concatenate([w1, w1s], axis=1))
+                    h = jnp.tanh(uu[:, :hid] + b1)
+                    hs = jnp.tanh(uu[:, hid:] + b1s)
+                    zz = self._agg_members(jnp.concatenate(
+                        [self._fwd(h, w2), self._fwd(hs, w2s)], axis=1),
+                        kt, fl)
+                    z, zs = zz[:, :dr], zz[:, dr:]
+                    th1 = prob.theta(z @ head, yb) / bsz
+                    th0 = prob.theta(zs @ heads, yb) / bsz
+                    thz1 = th1[:, None] * head
+                    thz0 = th0[:, None] * heads
+                    v_head = (z.T @ th1 + prob.lam * prob.reg_grad(head)
+                              - zs.T @ th0 - prob.lam
+                              * prob.reg_grad(heads)
+                              + mu_head)
+                    v_w2 = (self._bwd(h, thz1, 1) - self._bwd(hs, thz0, 1)
+                            + prob.lam * (prob.reg_grad(w2)
+                                          - prob.reg_grad(w2s))
+                            + mu_w2)
+                    du1 = (thz1 @ w2.T) * (1.0 - h * h)
+                    du0 = (thz0 @ w2s.T) * (1.0 - hs * hs)
+                    duu = self._bwd(xb, jnp.concatenate([du1, du0],
+                                                        axis=1), 1)
+                    v_w1 = (duu[:, :hid] - duu[:, hid:]
+                            + prob.lam * (prob.reg_grad(w1)
+                                          - prob.reg_grad(w1s))
+                            + mu_w1)
+                    v_b1 = (du1.sum(axis=0) - du0.sum(axis=0)
+                            + prob.lam * (prob.reg_grad(b1)
+                                          - prob.reg_grad(b1s))
+                            + mu_b1)
+                    slot = t % (tau + 1)
+                    bw1 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bw1, v_w1,
+                                                            slot, 0), bw1)
+                    bb1 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bb1, v_b1,
+                                                            slot, 0), bb1)
+                    bw2 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bw2, v_w2,
+                                                            slot, 0), bw2)
+                    eff = jnp.maximum(t - (delay + ex), 0) % (tau + 1)
+                    s_w1 = jax.lax.dynamic_index_in_dim(bw1, eff, 0,
+                                                        keepdims=False)
+                    s_b1 = jax.lax.dynamic_index_in_dim(bb1, eff, 0,
+                                                        keepdims=False)
+                    s_w2 = jax.lax.dynamic_index_in_dim(bw2, eff, 0,
+                                                        keepdims=False)
+                    w1 = w1 - lr * bl * maskp[:, None] * s_w1
+                    b1 = b1 - lr * bl * trainp * s_b1
+                    w2 = w2 - lr * bl * trainp * s_w2
+                    head = head - lr * v_head       # dominator-fresh
+                    return (w1, b1, w2, head, bw1, bb1, bw2, t + 1), None
+
+                (w1, b1, w2, head, bw1, bb1, bw2, _), _ = jax.lax.scan(
+                    body, (w1, b1, w2, head, bw1, bb1, bw2, t0),
+                    (idx, mkeys, fwd_p, bwd_p, extra_p))
+                return (w1, b1, w2, head), (bw1, bb1, bw2)
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, pq, pq_snap, muq, bufq, delays_q, fwdq, bwdq,
+                      extraq, maskq, trainq, y, lr, key, t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                w1q, b1q, w2q, headq = pq
+                w1s, b1s, w2s, headsq = pq_snap
+                bw1q, bb1q, bw2q = bufq
+                return mapped((xs, w1q, b1q, w2q, headq, w1s, b1s, w2s,
+                               headsq, muq, bw1q, bb1q, bw2q, delays_q,
+                               fwdq, bwdq, extraq, maskq, trainq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        pq, bufq = self._epoch(f"deep_faulted_svrg{tau}", build)(
+            self.xs, pq, pq_snap, muq, bufq, delays_q, fwdq, bwdq, extraq,
+            self.maskq, self.trainq, self.y, lr, key, t0, batch, steps)
+        return pq, bufq, t0 + steps
+
     def deep_multi_delay_buffers(self, pq, tau: int):
         """Zero-initialized per-(party, dominator) encoder gradient ring
         buffers for :meth:`deep_multi_delayed_sgd_epoch`: each dominator's
@@ -2355,6 +2789,22 @@ class FusedEngine:
         return jax.make_jaxpr(
             lambda xs, p: fn(xs, p, self.maskq, self.trainq, self.y, lr,
                              key, batch=batch, steps=steps))(self.xs, pq)
+
+    def faulted_sgd_epoch_jaxpr(self, wq, bufq, t0, delays_q, fwdq, bwdq,
+                                extraq, lr, key, batch: int, steps: int,
+                                tau: int):
+        """The faulted epoch's jaxpr — the benchmark audits that the
+        whole membership-masked, survivor-aggregated epoch stays on
+        device (zero host-transfer primitives): fault handling must not
+        smuggle host round-trips into the hot path."""
+        self.faulted_sgd_epoch(wq, bufq, t0, delays_q, fwdq, bwdq, extraq,
+                               lr, key, batch, steps, tau)   # ensure built
+        fn = self._jitted[f"faulted_sgd{tau}"]
+        return jax.make_jaxpr(
+            lambda xs, w, b: fn(xs, w, b, delays_q, fwdq, bwdq, extraq,
+                                self.maskq, self.y, lr, key, t0,
+                                batch=batch, steps=steps))(
+            self.xs, wq, bufq)
 
     # -- boundary helpers ----------------------------------------------------
 

@@ -1,0 +1,713 @@
+"""Deterministic fault traces: party dropout / rejoin / straggle / drop_msg.
+
+The elasticity layer's single source of truth.  A :class:`FaultTrace` is a
+list of per-(party, step) events that BOTH execution tiers consume — the
+fused engine replays it as dense per-step membership masks inside the
+compiled epoch, and the thread simulation (``core.async_engine``) records
+the trace it *realized* in the same format, so device-side runs can replay
+what actually happened under real concurrency.
+
+Fault model (what each event means, at every tier)
+--------------------------------------------------
+``crash(p)`` at step t
+    Party p is gone from step t until its ``rejoin``: it contributes **no
+    forward partial** (the aggregate is the survivor sum — secure
+    aggregation re-keys onto the survivor set, see
+    ``secure_agg.secure_psum_ring_members`` / ``secure_psum_members``),
+    computes no gradient, writes nothing into its delay ring buffer, and
+    applies no update — its block **freezes** at its pre-crash value.
+    Formally a crash is an **unbounded delay**: the bounded-staleness
+    model (Eqs. 4–5, delay ≤ τ) extends to faults by letting party p's
+    delay exceed the horizon until rejoin, which is why the bounded-delay
+    sequential oracles below extend to fault oracles that pin every
+    faulted fused epoch at 1e-5.
+
+``rejoin(p)`` at step t
+    Party p is back.  Its ring buffer still holds its last pre-crash
+    gradients, so the first post-rejoin applications replay those stale
+    entries (exactly the bounded-staleness read ``buf[(t − d) mod (τ+1)]``)
+    until fresh writes age through — "stale contributions age through the
+    existing delay slabs until a rejoin replays them".  Shared/replicated
+    protocol state (the dominator-held head, SVRG's μ̃/snapshot, SAGA's
+    ϑ̃ table) was kept current by the survivors; the rejoiner re-syncs it
+    from the dominator — the SPMD simulation realizes this by keeping the
+    replicated state hot on every island.  Party-private state that
+    *missed* updates is NOT recovered: SAGA's per-party running average
+    freezes during the outage (documented bias, measured by the faults
+    benchmark suite).
+
+``straggle(p, k)`` at step t
+    Party p's backward application at step t uses the gradient of step
+    t − (d_p + k): the event ADDS k to the party's base delay for that
+    step.  Pure bounded staleness — Theorems 1–6 cover it as long as
+    d_p + k ≤ τ (the runners validate this).
+
+``drop_msg(p)`` at step t
+    The dominator's ϑ broadcast to party p is lost: p *did* contribute
+    its forward partial (it is alive), but computes no gradient, writes
+    nothing, and applies nothing at step t.  One-step, forward-only
+    participation.
+
+Dominator availability: every step must keep at least one *active* party
+(p < m) alive — someone has to hold the labels and compute ϑ.
+``FaultTrace.compile`` validates this.
+
+Execution forms
+---------------
+* ``faulted_{sgd,svrg,saga}_epoch`` — sequential coordinate-space oracles
+  (the reference math, exactly like ``core.staleness``'s delayed epochs);
+* ``run_faulted_reference`` / ``run_deep_faulted_reference`` — oracle
+  drivers with the fused runners' exact init/key stream;
+* ``run_faulted_fused`` / ``run_deep_faulted_fused`` — the hot path: the
+  engine's ``faulted_*`` epochs (one compiled dispatch per epoch,
+  membership masks and ring buffers inside the scan), with optional
+  atomic checkpointing (``checkpoint_dir=``) and preemption-safe
+  bit-exact resume (``resume_from=``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import PartyLayout, _batch_indices, full_gradient
+from repro.core.losses import Problem
+from repro.core.staleness import party_delay_values
+
+KINDS = ("crash", "rejoin", "straggle", "drop_msg")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One fault at one (step, party).  ``k`` is straggle's extra delay."""
+
+    step: int
+    party: int
+    kind: str
+    k: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTrace:
+    """A deterministic fault schedule over ``steps`` global steps.
+
+    Both tiers consume it: the fused engine compiles it to dense
+    membership masks; the thread sim records its realized faults as one.
+    """
+
+    q: int
+    steps: int
+    events: Tuple[FaultEvent, ...] = ()
+
+    def with_steps(self, steps: int) -> "FaultTrace":
+        """The same events over a different step horizon (replay helper)."""
+        return FaultTrace(q=self.q, steps=steps, events=self.events)
+
+    def compile(self, m: Optional[int] = None) -> "FaultSchedule":
+        """Dense per-step arrays: fwd/bwd liveness (f32) + extra delay.
+
+        Validates event legality (no crash of a crashed party, no
+        rejoin/straggle/drop of a dead one) and — when ``m`` is given —
+        dominator availability (some active party p < m alive at every
+        step).  ``fwd[t, p]``: party contributes its forward partial;
+        ``bwd[t, p]``: party receives ϑ and updates; ``extra[t, p]``:
+        straggle's added delay.
+        """
+        fwd = np.ones((self.steps, self.q), np.float32)
+        bwd = np.ones((self.steps, self.q), np.float32)
+        extra = np.zeros((self.steps, self.q), np.int32)
+        down = np.zeros(self.q, bool)
+        for ev in sorted(self.events, key=lambda e: (e.step, e.party)):
+            if ev.kind not in KINDS:
+                raise ValueError(f"unknown fault kind {ev.kind!r}")
+            if not (0 <= ev.party < self.q):
+                raise ValueError(f"party {ev.party} out of range")
+            if not (0 <= ev.step < self.steps):
+                raise ValueError(
+                    f"step {ev.step} outside trace horizon {self.steps}")
+            if ev.kind == "crash":
+                if down[ev.party]:
+                    raise ValueError(
+                        f"party {ev.party} crashed twice (step {ev.step})")
+                down[ev.party] = True
+                fwd[ev.step:, ev.party] = 0.0
+                bwd[ev.step:, ev.party] = 0.0
+            elif ev.kind == "rejoin":
+                if not down[ev.party]:
+                    raise ValueError(
+                        f"rejoin of live party {ev.party} (step {ev.step})")
+                down[ev.party] = False
+                fwd[ev.step:, ev.party] = 1.0
+                bwd[ev.step:, ev.party] = 1.0
+            elif down[ev.party]:
+                raise ValueError(
+                    f"{ev.kind} of crashed party {ev.party} "
+                    f"(step {ev.step})")
+            elif ev.kind == "straggle":
+                if ev.k < 0:
+                    raise ValueError("straggle needs k >= 0")
+                extra[ev.step, ev.party] = ev.k
+            else:  # drop_msg
+                bwd[ev.step, ev.party] = 0.0
+        if fwd.sum(axis=1).min() < 1.0:
+            raise ValueError("every step needs >= 1 surviving party")
+        if m is not None and fwd[:, :m].sum(axis=1).min() < 1.0:
+            raise ValueError(
+                "dominator availability violated: some step has no "
+                f"active party (p < {m}) alive to compute ϑ")
+        return FaultSchedule(fwd=fwd, bwd=bwd, extra=extra)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """Compiled dense form of a trace: (steps, q) per-step membership."""
+
+    fwd: np.ndarray     # (steps, q) f32 — contributes forward partial
+    bwd: np.ndarray     # (steps, q) f32 — receives ϑ, writes + applies
+    extra: np.ndarray   # (steps, q) i32 — straggle's added delay
+
+    def epoch(self, e: int, steps: int) -> "FaultSchedule":
+        """The window for epoch ``e`` of ``steps`` steps each."""
+        sl = slice(e * steps, (e + 1) * steps)
+        return FaultSchedule(fwd=self.fwd[sl], bwd=self.bwd[sl],
+                             extra=self.extra[sl])
+
+    def party_rows(self):
+        """(q, steps) jnp arrays — the engine's party-local layout."""
+        return (jnp.asarray(self.fwd.T), jnp.asarray(self.bwd.T),
+                jnp.asarray(self.extra.T))
+
+    def coord_rows(self, layout: PartyLayout, d: int):
+        """(steps, d) jnp arrays — the oracle's coordinate-space layout."""
+        owner = layout.party_of_coord(d)
+        return (jnp.asarray(self.fwd[:, owner]),
+                jnp.asarray(self.bwd[:, owner]),
+                jnp.asarray(self.extra[:, owner]))
+
+    def max_extra(self) -> int:
+        return int(self.extra.max()) if self.extra.size else 0
+
+
+def random_trace(layout: PartyLayout, steps: int, *, rate: float = 0.08,
+                 max_down: int = 3, max_straggle: int = 2,
+                 p_drop: float = 0.05, seed: int = 0) -> FaultTrace:
+    """A random-but-deterministic chaos schedule (the bench suite's input).
+
+    Party 0 (a dominator) never crashes, keeping dominator availability by
+    construction; every crash schedules its rejoin ≤ ``max_down`` steps
+    later (or never, if the horizon ends first — a permanent dropout).
+    """
+    rng = np.random.default_rng(seed)
+    events: List[FaultEvent] = []
+    down_until = {}
+    for t in range(steps):
+        for p in range(layout.q):
+            if p in down_until:
+                if down_until[p] == t:
+                    events.append(FaultEvent(t, p, "rejoin"))
+                    del down_until[p]
+                continue
+            u = rng.random()
+            if p != 0 and u < rate:
+                dur = int(rng.integers(1, max_down + 1))
+                events.append(FaultEvent(t, p, "crash"))
+                if t + dur < steps:
+                    down_until[p] = t + dur
+                else:
+                    down_until[p] = steps + 1   # never rejoins
+            elif u < rate + rate:
+                events.append(FaultEvent(t, p, "straggle",
+                                         k=int(rng.integers(1,
+                                                            max_straggle + 1))))
+            elif u < rate + rate + p_drop:
+                events.append(FaultEvent(t, p, "drop_msg"))
+    return FaultTrace(q=layout.q, steps=steps, events=tuple(events))
+
+
+# ---------------------------------------------------------------------------
+# sequential fault oracles (coordinate space; the reference math)
+# ---------------------------------------------------------------------------
+#
+# Exactly the staleness oracles' ring-buffer mechanics with three per-step
+# per-coordinate fault channels: fc (forward liveness) zeroes the crashed
+# party's block out of the aggregate, bc (backward liveness) gates the
+# buffer write AND the application (no ϑ received ⇒ nothing computed,
+# nothing applied), ec adds straggle delay to the ring read.  The engine's
+# party-mapped faulted epochs reproduce these per-coordinate recursions
+# block-for-block (tests pin at 1e-5 across secure modes).
+
+@functools.partial(jax.jit, static_argnames=("problem", "tau"))
+def faulted_sgd_epoch(problem: Problem, w, buf, t0, x, y, lr, mask, dcoord,
+                      idx, fc, bc, ec, tau: int):
+    """One faulted VFB²-SGD epoch, sequential reference."""
+
+    def body(carry, inp):
+        w, buf, t = carry
+        ib, f, b, e = inp
+        xb = x[ib]
+        agg = xb @ (w * f)                      # survivor aggregate
+        theta = problem.theta(agg, y[ib])
+        g = xb.T @ theta / ib.shape[0] + problem.lam * problem.reg_grad(w)
+        slot = t % (tau + 1)
+        row = jax.lax.dynamic_index_in_dim(buf, slot, 0, keepdims=False)
+        buf = jax.lax.dynamic_update_index_in_dim(
+            buf, jnp.where(b > 0, g, row), slot, 0)
+        eff = jnp.maximum(t - (dcoord + e), 0) % (tau + 1)
+        stale = jnp.take_along_axis(buf, eff[None, :], axis=0)[0]
+        return (w - lr * mask * b * stale, buf, t + 1), None
+
+    (w, buf, t0), _ = jax.lax.scan(body, (w, buf, t0), (idx, fc, bc, ec))
+    return w, buf, t0
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "tau"))
+def faulted_svrg_epoch(problem: Problem, w, w_snap, mu, buf, t0, x, y, lr,
+                       mask, dcoord, idx, fc, bc, ec, tau: int):
+    """Faulted VFB²-SVRG inner loop: the variance-reduced direction
+    v = g(w) − g(w̃) + μ̃ enters the ring buffer and ages like the SGD
+    gradient; both forward partials (iterate + snapshot) are survivor
+    sums.  μ̃ and the snapshot are epoch-boundary barrier rounds over full
+    membership (see the runners)."""
+
+    def body(carry, inp):
+        w, buf, t = carry
+        ib, f, b, e = inp
+        xb = x[ib]
+        th1 = problem.theta(xb @ (w * f), y[ib])
+        th0 = problem.theta(xb @ (w_snap * f), y[ib])
+        g1 = xb.T @ th1 / ib.shape[0] + problem.lam * problem.reg_grad(w)
+        g0 = xb.T @ th0 / ib.shape[0] \
+            + problem.lam * problem.reg_grad(w_snap)
+        v = g1 - g0 + mu
+        slot = t % (tau + 1)
+        row = jax.lax.dynamic_index_in_dim(buf, slot, 0, keepdims=False)
+        buf = jax.lax.dynamic_update_index_in_dim(
+            buf, jnp.where(b > 0, v, row), slot, 0)
+        eff = jnp.maximum(t - (dcoord + e), 0) % (tau + 1)
+        stale = jnp.take_along_axis(buf, eff[None, :], axis=0)[0]
+        return (w - lr * mask * b * stale, buf, t + 1), None
+
+    (w, buf, t0), _ = jax.lax.scan(body, (w, buf, t0), (idx, fc, bc, ec))
+    return w, buf, t0
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "tau"))
+def faulted_saga_epoch(problem: Problem, w, tab, avg, buf, t0, x, y, lr,
+                       mask, dcoord, idx, fc, bc, ec, tau: int):
+    """Faulted VFB²-SAGA.  The ϑ̃ table is dominator-held protocol state:
+    it stays fresh at every step (survivors keep it current; a rejoiner
+    re-syncs).  The per-party running average is party-PRIVATE (it is the
+    party's own block of (1/n)Σϑ̃ⱼxⱼ): it freezes while the party is out,
+    so a long outage leaves the rejoined party's average biased — the
+    documented non-recoverable part of the fault model."""
+    n = x.shape[0]
+
+    def body(carry, inp):
+        w, tab, avg, buf, t = carry
+        ib, f, b, e = inp
+        xb = x[ib]
+        th_new = problem.theta(xb @ (w * f), y[ib])
+        raw = xb.T @ (th_new - tab[ib])
+        v = raw / ib.shape[0] + avg + problem.lam * problem.reg_grad(w)
+        slot = t % (tau + 1)
+        row = jax.lax.dynamic_index_in_dim(buf, slot, 0, keepdims=False)
+        buf = jax.lax.dynamic_update_index_in_dim(
+            buf, jnp.where(b > 0, v, row), slot, 0)
+        eff = jnp.maximum(t - (dcoord + e), 0) % (tau + 1)
+        stale = jnp.take_along_axis(buf, eff[None, :], axis=0)[0]
+        w = w - lr * mask * b * stale
+        avg = avg + b * raw / n                 # private: frozen while out
+        tab = tab.at[ib].set(th_new)            # shared: always fresh
+        return (w, tab, avg, buf, t + 1), None
+
+    (w, tab, avg, buf, t0), _ = jax.lax.scan(body, (w, tab, avg, buf, t0),
+                                             (idx, fc, bc, ec))
+    return w, tab, avg, buf, t0
+
+
+# ---------------------------------------------------------------------------
+# oracle drivers (the fused runners' exact init/key stream)
+# ---------------------------------------------------------------------------
+
+def _check_delay_budget(delays_q, sched: FaultSchedule, tau: int):
+    worst = (np.asarray(sched.extra)
+             + np.asarray(delays_q)[None, :]).max() if sched.extra.size \
+        else np.asarray(delays_q).max()
+    if worst > tau:
+        raise ValueError(
+            f"delay budget exceeded: base + straggle = {int(worst)} > "
+            f"τ = {tau}; the (τ+1)-slot ring would alias — raise tau or "
+            "shrink the straggle events")
+
+
+def _base_delays(layout: PartyLayout, tau: int, sched: FaultSchedule,
+                 delays_q, seed: int):
+    """Per-party base delays honoring base + straggle ≤ τ."""
+    if delays_q is None:
+        room = max(0, tau - sched.max_extra())
+        delays_q = party_delay_values(layout, room, seed)
+    delays_q = np.asarray(delays_q, np.int32)
+    _check_delay_budget(delays_q, sched, tau)
+    return delays_q
+
+
+def run_faulted_reference(problem: Problem, x, y, layout: PartyLayout,
+                          trace: FaultTrace, tau: int, epochs: int,
+                          lr: float, batch: int, algo: str = "sgd",
+                          seed: int = 0, delays_q=None,
+                          active_only: bool = False) -> np.ndarray:
+    """Sequential fault oracle driver (the 1e-5 pin for the fused path)."""
+    n, d = np.asarray(x).shape
+    steps = max(1, n // batch)
+    if trace.steps != epochs * steps:
+        raise ValueError(f"trace horizon {trace.steps} != epochs*steps "
+                         f"= {epochs * steps}")
+    sched = trace.compile(layout.m)
+    delays_q = _base_delays(layout, tau, sched, delays_q, seed)
+    dcoord = jnp.asarray(delays_q[layout.party_of_coord(d)])
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    w = jnp.zeros(d, jnp.float32)
+    mask = jnp.asarray(layout.update_mask(d, active_only))
+    buf = jnp.zeros((tau + 1, d), jnp.float32)
+    t0 = jnp.zeros((), jnp.int32)
+    key = jax.random.PRNGKey(seed)
+    if algo == "saga":
+        tab = problem.theta(x @ w, y)
+        avg = x.T @ tab / n
+    for ep in range(epochs):
+        key, sub = jax.random.split(key)
+        idx = _batch_indices(sub, n, batch, steps)
+        fc, bc, ec = sched.epoch(ep, steps).coord_rows(layout, d)
+        if algo == "sgd":
+            w, buf, t0 = faulted_sgd_epoch(problem, w, buf, t0, x, y, lr,
+                                           mask, dcoord, idx, fc, bc, ec,
+                                           tau)
+        elif algo == "svrg":
+            mu = full_gradient(problem, w, x, y)
+            w, buf, t0 = faulted_svrg_epoch(problem, w, w, mu, buf, t0, x,
+                                            y, lr, mask, dcoord, idx, fc,
+                                            bc, ec, tau)
+        elif algo == "saga":
+            w, tab, avg, buf, t0 = faulted_saga_epoch(
+                problem, w, tab, avg, buf, t0, x, y, lr, mask, dcoord,
+                idx, fc, bc, ec, tau)
+        else:
+            raise ValueError(f"unknown algo {algo}")
+    return np.asarray(w)
+
+
+def run_faulted_fused(problem: Problem, x, y, layout: PartyLayout,
+                      trace: FaultTrace, tau: int, epochs: int, lr: float,
+                      batch: int, algo: str = "sgd", seed: int = 0,
+                      delays_q=None, engine_config=None,
+                      active_only: bool = False,
+                      checkpoint_dir: Optional[str] = None,
+                      resume_from: Optional[str] = None) -> np.ndarray:
+    """Faulted VFB² on the fused engine: whole membership-masked epochs
+    (survivor-aware secure aggregation, fault-gated ring buffers) are one
+    compiled dispatch each.  Same init/key stream as
+    :func:`run_faulted_reference` (pinned at 1e-5 across secure modes).
+
+    ``checkpoint_dir=``: atomically checkpoint the FULL engine state —
+    iterate, delay ring buffers, step counter, RNG key (and SAGA's
+    ϑ̃-table/average) — after every epoch.  ``resume_from=``: restore and
+    continue; a run killed mid-epoch resumes from the last epoch boundary
+    and is **bit-exact** vs the uninterrupted run (each epoch is a
+    deterministic function of the checkpointed state).
+    """
+    from repro.checkpoint.ckpt import (checkpoint_step, load_checkpoint,
+                                       save_checkpoint)
+    from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
+
+    n, d = np.asarray(x).shape
+    steps = max(1, n // batch)
+    if trace.steps != epochs * steps:
+        raise ValueError(f"trace horizon {trace.steps} != epochs*steps "
+                         f"= {epochs * steps}")
+    sched = trace.compile(layout.m)
+    delays_q = _base_delays(layout, tau, sched, delays_q, seed)
+    cfg = engine_config if engine_config is not None \
+        else EngineConfig(donate=True)
+    eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
+    dq = jnp.asarray(delays_q)
+    wq = eng.pack_w(np.zeros(d, np.float32))
+    bufq = jnp.zeros((layout.q, tau + 1, eng.dp), jnp.float32)
+    t0 = jnp.zeros((), jnp.int32)
+    key = jax.random.PRNGKey(seed)
+    if algo == "saga":
+        tabq, avgq = eng.saga_init(wq, key)
+
+    def state():
+        st = {"wq": np.asarray(wq), "bufq": np.asarray(bufq),
+              "t0": np.asarray(t0), "key": np.asarray(key)}
+        if algo == "saga":
+            st["tabq"] = np.asarray(tabq)
+            st["avgq"] = np.asarray(avgq)
+        return st
+
+    ep0 = 0
+    if resume_from is not None:
+        st = load_checkpoint(resume_from, state())
+        ep0 = checkpoint_step(resume_from)
+        wq = jnp.asarray(st["wq"])
+        bufq = jnp.asarray(st["bufq"])
+        t0 = jnp.asarray(st["t0"])
+        key = jnp.asarray(st["key"])
+        if algo == "saga":
+            tabq = jnp.asarray(st["tabq"])
+            avgq = jnp.asarray(st["avgq"])
+    for ep in range(ep0, epochs):
+        key, sub = jax.random.split(key)
+        fwdq, bwdq, extraq = sched.epoch(ep, steps).party_rows()
+        if algo == "sgd":
+            wq, bufq, t0 = eng.faulted_sgd_epoch(
+                wq, bufq, t0, dq, fwdq, bwdq, extraq, lr, sub, batch,
+                steps, tau)
+        elif algo == "svrg":
+            muq = eng.full_gradient(wq, sub)
+            wq, bufq, t0 = eng.faulted_svrg_epoch(
+                wq, wq, muq, bufq, t0, dq, fwdq, bwdq, extraq, lr, sub,
+                batch, steps, tau)
+        elif algo == "saga":
+            wq, tabq, avgq, bufq, t0 = eng.faulted_saga_epoch(
+                wq, tabq, avgq, bufq, t0, dq, fwdq, bwdq, extraq, lr,
+                sub, batch, steps, tau)
+        else:
+            raise ValueError(f"unknown algo {algo}")
+        if checkpoint_dir is not None:
+            save_checkpoint(checkpoint_dir, state(), step=ep + 1)
+    return eng.unpack_w(wq)
+
+
+# ---------------------------------------------------------------------------
+# deep (nonlinear-encoder) fault oracles + runners
+# ---------------------------------------------------------------------------
+
+def _deep_ring_init(w1, b1, w2, tau: int):
+    ring = lambda a: jnp.zeros((tau + 1,) + a.shape, jnp.float32)
+    return [(ring(w1[p]), ring(b1[p]), ring(w2[p]))
+            for p in range(len(w1))]
+
+
+def _deep_fault_sgd_step(problem, blocks, y, w1, b1, w2, head, bufs, tg,
+                         ib, lr, delays, f_row, b_row, e_row, tau):
+    """One sequential deep faulted SGD step (party loop; the oracle)."""
+    q = len(w1)
+    yb = y[ib]
+    bsz = ib.shape[0]
+    hs = [jnp.tanh(blocks[p][ib] @ w1[p] + b1[p]) for p in range(q)]
+    z = sum(float(f_row[p]) * (hs[p] @ w2[p]) for p in range(q))
+    th_l = problem.theta(z @ head, yb) / bsz
+    th_z = th_l[:, None] * head
+    g_head = z.T @ th_l + problem.lam * problem.reg_grad(head)
+    slot = int(tg) % (tau + 1)
+    for p in range(q):
+        du = (th_z @ w2[p].T) * (1.0 - hs[p] * hs[p])
+        g_w1 = blocks[p][ib].T @ du + problem.lam * problem.reg_grad(w1[p])
+        g_b1 = du.sum(axis=0) + problem.lam * problem.reg_grad(b1[p])
+        g_w2 = hs[p].T @ th_z + problem.lam * problem.reg_grad(w2[p])
+        bw1, bb1, bw2 = bufs[p]
+        if b_row[p] > 0:
+            bw1 = bw1.at[slot].set(g_w1)
+            bb1 = bb1.at[slot].set(g_b1)
+            bw2 = bw2.at[slot].set(g_w2)
+        bufs[p] = (bw1, bb1, bw2)
+        eff = max(int(tg) - int(delays[p] + e_row[p]), 0) % (tau + 1)
+        if b_row[p] > 0:
+            w1[p] = w1[p] - lr * bw1[eff]
+            b1[p] = b1[p] - lr * bb1[eff]
+            w2[p] = w2[p] - lr * bw2[eff]
+    return w1, b1, w2, head - lr * g_head, bufs
+
+
+def _deep_fault_svrg_step(problem, blocks, y, w1, b1, w2, head, snap, mu,
+                          bufs, tg, ib, lr, delays, f_row, b_row, e_row,
+                          tau):
+    """One sequential deep faulted SVRG step: the per-leaf variance-reduced
+    directions enter the rings; the replicated head applies fresh."""
+    q = len(w1)
+    w1s, b1s, w2s, heads = snap
+    mu_w1, mu_b1, mu_w2, mu_head = mu
+    yb = y[ib]
+    bsz = ib.shape[0]
+    hs1 = [jnp.tanh(blocks[p][ib] @ w1[p] + b1[p]) for p in range(q)]
+    hs0 = [jnp.tanh(blocks[p][ib] @ w1s[p] + b1s[p]) for p in range(q)]
+    z1 = sum(float(f_row[p]) * (hs1[p] @ w2[p]) for p in range(q))
+    z0 = sum(float(f_row[p]) * (hs0[p] @ w2s[p]) for p in range(q))
+    th1 = problem.theta(z1 @ head, yb) / bsz
+    th0 = problem.theta(z0 @ heads, yb) / bsz
+    thz1 = th1[:, None] * head
+    thz0 = th0[:, None] * heads
+    v_head = (z1.T @ th1 + problem.lam * problem.reg_grad(head)
+              - z0.T @ th0 - problem.lam * problem.reg_grad(heads)
+              + mu_head)
+    slot = int(tg) % (tau + 1)
+    for p in range(q):
+        du1 = (thz1 @ w2[p].T) * (1.0 - hs1[p] * hs1[p])
+        du0 = (thz0 @ w2s[p].T) * (1.0 - hs0[p] * hs0[p])
+        v_w1 = (blocks[p][ib].T @ du1 - blocks[p][ib].T @ du0
+                + problem.lam * (problem.reg_grad(w1[p])
+                                 - problem.reg_grad(w1s[p]))
+                + mu_w1[p])
+        v_b1 = (du1.sum(axis=0) - du0.sum(axis=0)
+                + problem.lam * (problem.reg_grad(b1[p])
+                                 - problem.reg_grad(b1s[p]))
+                + mu_b1[p])
+        v_w2 = (hs1[p].T @ thz1 - hs0[p].T @ thz0
+                + problem.lam * (problem.reg_grad(w2[p])
+                                 - problem.reg_grad(w2s[p]))
+                + mu_w2[p])
+        bw1, bb1, bw2 = bufs[p]
+        if b_row[p] > 0:
+            bw1 = bw1.at[slot].set(v_w1)
+            bb1 = bb1.at[slot].set(v_b1)
+            bw2 = bw2.at[slot].set(v_w2)
+        bufs[p] = (bw1, bb1, bw2)
+        eff = max(int(tg) - int(delays[p] + e_row[p]), 0) % (tau + 1)
+        if b_row[p] > 0:
+            w1[p] = w1[p] - lr * bw1[eff]
+            b1[p] = b1[p] - lr * bb1[eff]
+            w2[p] = w2[p] - lr * bw2[eff]
+    return w1, b1, w2, head - lr * v_head, bufs
+
+
+def _deep_full_grad_ref(problem, blocks, y, w1, b1, w2, head):
+    """Full-membership full-dataset deep BUM gradient (SVRG's μ̃ barrier)."""
+    q = len(w1)
+    n = y.shape[0]
+    hs = [jnp.tanh(blocks[p] @ w1[p] + b1[p]) for p in range(q)]
+    z = sum(hs[p] @ w2[p] for p in range(q))
+    th_l = problem.theta(z @ head, y) / n
+    th_z = th_l[:, None] * head
+    mu_head = z.T @ th_l + problem.lam * problem.reg_grad(head)
+    mu_w1, mu_b1, mu_w2 = [], [], []
+    for p in range(q):
+        du = (th_z @ w2[p].T) * (1.0 - hs[p] * hs[p])
+        mu_w1.append(blocks[p].T @ du
+                     + problem.lam * problem.reg_grad(w1[p]))
+        mu_b1.append(du.sum(axis=0) + problem.lam * problem.reg_grad(b1[p]))
+        mu_w2.append(hs[p].T @ th_z + problem.lam * problem.reg_grad(w2[p]))
+    return mu_w1, mu_b1, mu_w2, mu_head
+
+
+def run_deep_faulted_reference(problem: Problem, x, y,
+                               layout: PartyLayout, trace: FaultTrace,
+                               tau: int, epochs: int, lr: float,
+                               batch: int, algo: str = "sgd",
+                               seed: int = 0, hidden: int = 32,
+                               d_rep: int = 16, delays_q=None):
+    """Sequential deep fault oracle (the 1e-5 pin for the fused path).
+    Returns the final ``DeepVFLParams``."""
+    from repro.core import deep_vfl
+
+    n, d = np.asarray(x).shape
+    steps = max(1, n // batch)
+    if trace.steps != epochs * steps:
+        raise ValueError(f"trace horizon {trace.steps} != epochs*steps "
+                         f"= {epochs * steps}")
+    if algo not in ("sgd", "svrg"):
+        raise ValueError(f"deep faulted VFB² supports sgd/svrg; got {algo}")
+    sched = trace.compile(layout.m)
+    delays_q = _base_delays(layout, tau, sched, delays_q, seed)
+    key = jax.random.PRNGKey(seed)
+    params = deep_vfl.init_deep_vfl(key, layout, d, hidden, d_rep)
+    xj = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    blocks = [xj[:, lo:hi] for lo, hi in layout.bounds]
+    w1, b1, w2, head = (list(params.enc_w1), list(params.enc_b1),
+                        list(params.enc_w2), params.head)
+    bufs = _deep_ring_init(w1, b1, w2, tau)
+    t = 0
+    for ep in range(epochs):
+        key, sub = jax.random.split(key)
+        idx = _batch_indices(sub, n, batch, steps)
+        win = sched.epoch(ep, steps)
+        if algo == "svrg":
+            snap = (list(w1), list(b1), list(w2), head)
+            mu = _deep_full_grad_ref(problem, blocks, y, *snap)
+        for i in range(steps):
+            if algo == "sgd":
+                w1, b1, w2, head, bufs = _deep_fault_sgd_step(
+                    problem, blocks, y, w1, b1, w2, head, bufs, t,
+                    idx[i], lr, delays_q, win.fwd[i], win.bwd[i],
+                    win.extra[i], tau)
+            else:
+                w1, b1, w2, head, bufs = _deep_fault_svrg_step(
+                    problem, blocks, y, w1, b1, w2, head, snap, mu,
+                    bufs, t, idx[i], lr, delays_q, win.fwd[i],
+                    win.bwd[i], win.extra[i], tau)
+            t += 1
+    return deep_vfl.DeepVFLParams(enc_w1=tuple(w1), enc_b1=tuple(b1),
+                                  enc_w2=tuple(w2), head=head)
+
+
+def run_deep_faulted_fused(problem: Problem, x, y, layout: PartyLayout,
+                           trace: FaultTrace, tau: int, epochs: int,
+                           lr: float, batch: int, algo: str = "sgd",
+                           seed: int = 0, hidden: int = 32,
+                           d_rep: int = 16, delays_q=None,
+                           engine_config=None,
+                           checkpoint_dir: Optional[str] = None,
+                           resume_from: Optional[str] = None):
+    """Deep faulted VFB² on the fused engine (one dispatch per epoch);
+    same init/key stream as :func:`run_deep_faulted_reference`.  The
+    atomic checkpoint carries the full engine state — packed params,
+    encoder-gradient delay rings, step counter, RNG key."""
+    from repro.checkpoint.ckpt import (checkpoint_step, load_checkpoint,
+                                       save_checkpoint)
+    from repro.core import deep_vfl
+    from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
+
+    n, d = np.asarray(x).shape
+    steps = max(1, n // batch)
+    if trace.steps != epochs * steps:
+        raise ValueError(f"trace horizon {trace.steps} != epochs*steps "
+                         f"= {epochs * steps}")
+    if algo not in ("sgd", "svrg"):
+        raise ValueError(f"deep faulted VFB² supports sgd/svrg; got {algo}")
+    sched = trace.compile(layout.m)
+    delays_q = _base_delays(layout, tau, sched, delays_q, seed)
+    cfg = engine_config if engine_config is not None \
+        else EngineConfig(donate=True)
+    eng = FusedEngine(problem, x, y, layout, cfg)
+    key = jax.random.PRNGKey(seed)
+    pq = eng.pack_deep(deep_vfl.init_deep_vfl(key, layout, d, hidden,
+                                              d_rep))
+    bufq = eng.deep_delay_buffers(pq, tau)
+    dq = jnp.asarray(delays_q)
+    t0 = jnp.zeros((), jnp.int32)
+
+    def state():
+        return {"pq": jax.tree_util.tree_map(np.asarray, pq),
+                "bufq": jax.tree_util.tree_map(np.asarray, bufq),
+                "t0": np.asarray(t0), "key": np.asarray(key)}
+
+    ep0 = 0
+    if resume_from is not None:
+        st = load_checkpoint(resume_from, state())
+        ep0 = checkpoint_step(resume_from)
+        pq = jax.tree_util.tree_map(jnp.asarray, st["pq"])
+        bufq = jax.tree_util.tree_map(jnp.asarray, st["bufq"])
+        t0 = jnp.asarray(st["t0"])
+        key = jnp.asarray(st["key"])
+    for ep in range(ep0, epochs):
+        key, sub = jax.random.split(key)
+        fwdq, bwdq, extraq = sched.epoch(ep, steps).party_rows()
+        if algo == "sgd":
+            pq, bufq, t0 = eng.deep_faulted_sgd_epoch(
+                pq, bufq, t0, dq, fwdq, bwdq, extraq, lr, sub, batch,
+                steps, tau)
+        else:
+            muq = eng.deep_full_gradient(pq, sub)
+            pq, bufq, t0 = eng.deep_faulted_svrg_epoch(
+                pq, pq, muq, bufq, t0, dq, fwdq, bwdq, extraq, lr, sub,
+                batch, steps, tau)
+        if checkpoint_dir is not None:
+            save_checkpoint(checkpoint_dir, state(), step=ep + 1)
+    return eng.unpack_deep(pq)

@@ -19,6 +19,8 @@ Two executable forms of the same protocol:
 from __future__ import annotations
 
 import dataclasses
+import re
+import warnings
 from typing import List, Sequence, Tuple
 
 import jax
@@ -74,6 +76,63 @@ def secure_aggregate_host(
     xi1 = run(t1, masked, "xi1")   # step 4: masked sum over T1
     xi2 = run(t2, deltas, "xi2")   # step 5: mask sum over totally different T2
     return xi1 - xi2, transcript   # output: wᵀx = ξ1 − ξ2
+
+
+def secure_aggregate_survivors(
+    partials: Sequence[np.ndarray],
+    alive: Sequence[bool],
+    rng: np.random.Generator,
+    mask_scale: float = 1.0,
+) -> Tuple[np.ndarray, AggTranscript]:
+    """Algorithm 1 across a membership change (host reference).
+
+    The protocol is re-run over the *survivor* set only: (T1, T2) are
+    rebuilt over the survivors (``trees.survivor_tree_pair``, preserving
+    Definition 4), fresh masks are drawn (re-keying — no mask from the
+    pre-dropout configuration is reused), and crashed parties contribute
+    neither value nor mask.  With fewer than 3 survivors the two-tree
+    structure is degenerate, so the protocol **degrades to a
+    pairwise-cancelling masked psum** (Σδ ≡ 0 over survivors, every
+    transmitted value still masked) and emits a ``RuntimeWarning``.
+
+    Returns ``(survivor sum, transcript)`` with transcript rows indexed by
+    *original* party ids (crashed parties see nothing).
+    """
+    q = len(partials)
+    surv = [p for p in range(q) if alive[p]]
+    if not surv:
+        raise ValueError("secure aggregation needs >= 1 surviving party")
+    sub = [np.asarray(partials[p], dtype=np.float64) for p in surv]
+    transcript = AggTranscript(messages=[[] for _ in range(q)])
+    if len(surv) >= 3:
+        t1, t2, _ = trees_lib.survivor_tree_pair(q, surv)
+        val, sub_tr = secure_aggregate_host(sub, rng, t1, t2, mask_scale)
+        # route the compact-index transcript back to original party ids
+        for ci, p in enumerate(surv):
+            for tag, v in sub_tr.messages[ci]:
+                tag = re.sub(r"from(\d+)",
+                             lambda mo: f"from{surv[int(mo.group(1))]}", tag)
+                transcript.messages[p].append((tag, v))
+        return val, transcript
+    warnings.warn(
+        f"secure aggregation degraded: only {len(surv)} survivor(s) < 3, "
+        "two-tree protocol has no Definition-4 pair — falling back to "
+        "pairwise-cancelling masked psum (values stay masked; the "
+        "mask-sum/value-sum schedule separation is lost)", RuntimeWarning)
+    s = len(surv)
+    deltas = [mask_scale * rng.standard_normal(sub[0].shape)
+              for _ in range(s)]
+    total = np.sum(deltas, axis=0)
+    deltas = [d - total / s for d in deltas]          # Σδ ≡ 0 exactly
+    masked = [p + d for p, d in zip(sub, deltas)]
+    # psum = all-broadcast-reduce: every survivor sees every other
+    # survivor's masked value (and nothing unmasked)
+    for ci, p in enumerate(surv):
+        for cj, pj in enumerate(surv):
+            if ci != cj:
+                transcript.messages[pj].append(
+                    (f"psum:from{p}", masked[ci].copy()))
+    return np.sum(masked, axis=0), transcript
 
 
 # ---------------------------------------------------------------------------
@@ -196,4 +255,92 @@ def secure_psum(
     else:
         xi1 = jax.lax.psum(masked, axis_name)
         xi2 = jax.lax.psum(delta, axis_name)
+    return (xi1 - xi2).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# membership-aware forms (fault tolerance: party dropout / rejoin)
+# ---------------------------------------------------------------------------
+
+def _alive_fingerprint(av: jax.Array) -> jax.Array:
+    """int32 fingerprint of the gathered alive vector (``(q,)`` int32).
+
+    Folded into the mask key so every membership change re-keys the masks
+    (no mask stream from one configuration is reused in another).  Exact
+    bitmask for q <= 30; wider federations fold each flag sequentially
+    (q static, so the loop unrolls at trace time).
+    """
+    q = av.shape[0]
+    if q <= 30:
+        return jnp.sum(av * (2 ** jnp.arange(q, dtype=jnp.int32)))
+    fp = jnp.int32(0)
+    for i in range(q):
+        fp = fp * 2 + av[i]
+    return fp
+
+
+def secure_psum_ring_members(
+    partial: jax.Array,
+    axis_name: str,
+    key: jax.Array,
+    alive: jax.Array,
+    mask_scale: float = 1.0,
+) -> jax.Array:
+    """``secure_psum_ring`` on the *surviving sub-ring* (fault tolerance).
+
+    ``alive`` is this party's own scalar liveness flag (1.0 / 0.0).  The
+    pairwise-cancelling ring masks stop summing to zero when a member
+    vanishes, so on every membership change the ring is rebuilt over the
+    survivors: the alive vector is gathered, its fingerprint is folded
+    into the step key (re-keying), and mask seeds are assigned by **rank
+    in the surviving sub-ring** — survivor with rank r draws
+    PRG(k, r) − PRG(k, (r−1) mod n_alive), so Σδ ≡ 0 over survivors for
+    any survivor count (a lone survivor's two seeds coincide: δ = 0).
+    Crashed parties contribute neither value nor mask.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    out_dtype = partial.dtype
+    partial = partial.astype(jnp.float32)
+    alive = alive.astype(jnp.float32)
+    av = jax.lax.all_gather(alive, axis_name).astype(jnp.int32)   # (q,)
+    q = av.shape[0]
+    nal = jnp.maximum(av.sum(), 1)
+    rank = jnp.sum(jnp.where(jnp.arange(q) < idx, av, 0))
+    kk = jax.random.fold_in(key, _alive_fingerprint(av))
+    r_self = jax.random.normal(jax.random.fold_in(kk, rank),
+                               partial.shape, jnp.float32)
+    r_prev = jax.random.normal(jax.random.fold_in(kk, (rank - 1) % nal),
+                               partial.shape, jnp.float32)
+    masked = partial + mask_scale * (r_self - r_prev)
+    return jax.lax.psum(alive * masked, axis_name).astype(out_dtype)
+
+
+def secure_psum_members(
+    partial: jax.Array,
+    axis_name: str,
+    key: jax.Array,
+    alive: jax.Array,
+    mask_scale: float = 1.0,
+) -> jax.Array:
+    """Membership-safe two-tree lowering (fault tolerance).
+
+    Both reductions are psums over the survivor set — ξ₁ = Σ alive·(z+δ),
+    ξ₂ = Σ alive·δ — with the alive-set fingerprint folded into the mask
+    key (re-keying on every membership change).  The schedule-faithful
+    ``ppermute`` replay is **not** membership-safe (a crashed party sits
+    on the reduction path and would forward stale accumulator values), so
+    faulted epochs always use this lowering; the host reference
+    (``secure_aggregate_survivors``) carries the explicit rebuilt-tree
+    schedules and the < 3-survivor degrade warning.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    out_dtype = partial.dtype
+    partial = partial.astype(jnp.float32)
+    alive = alive.astype(jnp.float32)
+    av = jax.lax.all_gather(alive, axis_name).astype(jnp.int32)
+    kk = jax.random.fold_in(key, _alive_fingerprint(av))
+    pkey = jax.random.fold_in(kk, idx)
+    delta = mask_scale * jax.random.normal(pkey, partial.shape, jnp.float32)
+    xi1 = jax.lax.psum(alive * (partial + delta), axis_name)
+    xi2 = jax.lax.psum(alive * delta, axis_name)
     return (xi1 - xi2).astype(out_dtype)

@@ -43,6 +43,18 @@ and the paper's Theorems 1–6 apply verbatim.  ``pipelined_*`` oracles in
 read with the per-party delayed application above (the gradient entering
 party ℓ's ring buffer at step t is already a stale-read gradient), which
 is admissible with total delay τ + 1.
+
+Faults extend this model, they don't replace it
+-----------------------------------------------
+The elasticity layer (``core.faults``) formalizes a party **crash** as an
+*unbounded* delay: while down, the party's delay exceeds every finite τ
+(no write enters its ring, no update applies — the block freezes), and a
+**rejoin** resumes the bounded-staleness recursion mid-stream, replaying
+the last pre-crash ring entries until fresh gradients age through.  A
+**straggle(k)** event is plain bounded staleness (this module's model
+verbatim) with d_ℓ + k ≤ τ.  The fault oracles in ``core.faults`` are
+these delayed oracles with per-step per-coordinate liveness channels, and
+the engine's ``faulted_*`` epochs are pinned against them.
 """
 from __future__ import annotations
 

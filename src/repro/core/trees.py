@@ -84,6 +84,34 @@ def binary_tree(q: int, order: Sequence[int] | None = None) -> ReductionTree:
     return t
 
 
+def survivor_tree_pair(
+    q: int, survivors: Sequence[int],
+) -> Tuple[ReductionTree, ReductionTree, List[int]]:
+    """Rebuild a Definition-4 (T1, T2) pair after a membership change.
+
+    ``survivors`` are the original party ids still alive.  The returned
+    trees live in the *compact* index space ``0..s-1``; the third element
+    maps compact index → original party id (``surv[ci]``), which callers
+    use to route values in and transcript entries back out.
+
+    Raises ``ValueError`` when fewer than 3 parties survive: the two-tree
+    structure is then degenerate (no pair of significantly different trees
+    with proper subtrees exists), and callers must degrade to the
+    pairwise-cancelling masked psum with an explicit warning
+    (``secure_agg.secure_aggregate_survivors`` does).
+    """
+    surv = sorted(set(int(p) for p in survivors))
+    if any(p < 0 or p >= q for p in surv):
+        raise ValueError(f"survivor ids must be in [0, {q}); got {surv}")
+    s = len(surv)
+    if s < 3:
+        raise ValueError(
+            f"two-tree rebuild needs >= 3 survivors, got {s}; degrade to "
+            "masked psum (secure_aggregate_survivors handles this)")
+    t1, t2 = default_tree_pair(s)
+    return t1, t2, surv
+
+
 def default_tree_pair(q: int) -> Tuple[ReductionTree, ReductionTree]:
     """A (T1, T2) pair satisfying Definition 4 for q >= 2.
 

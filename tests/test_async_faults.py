@@ -1,0 +1,130 @@
+"""Thread-sim fault injection: plan validation, realized crash/rejoin
+events and frozen blocks, device-replayable realized traces, and the
+explicit wall-clock timeout contract."""
+import numpy as np
+import pytest
+
+from repro.core import losses
+from repro.core.algorithms import PartyLayout
+from repro.core.async_engine import ThreadFaultPlan, run_async, run_sync
+
+D = 24
+Q = 4
+
+
+@pytest.fixture(scope="module")
+def ds():
+    from repro.data.synthetic import classification_dataset
+    d = classification_dataset("af", 600, D, seed=3, noise=0.4)
+    return d.x_train, d.y_train
+
+
+@pytest.fixture(scope="module")
+def layout():
+    return PartyLayout.even(D, Q, 2)
+
+
+PROB = losses.logistic_l2(1e-3)
+
+
+# -- plan validation ------------------------------------------------------
+
+def test_plan_validate_errors(layout):
+    with pytest.raises(ValueError, match="outside"):
+        ThreadFaultPlan(crash_at={Q: 5}).validate(layout)
+    with pytest.raises(ValueError, match="without a"):
+        ThreadFaultPlan(rejoin_at={1: 5}).validate(layout)
+    with pytest.raises(ValueError, match="rejoin count"):
+        ThreadFaultPlan(crash_at={1: 9}, rejoin_at={1: 4}).validate(layout)
+    with pytest.raises(ValueError, match="every active party"):
+        ThreadFaultPlan(crash_at={0: 4, 1: 6}).validate(layout)
+    ThreadFaultPlan(crash_at={1: 4, 3: 8}, rejoin_at={1: 12}).validate(layout)
+
+
+def test_sanitize_orders_and_drops_racy_events():
+    from repro.core.async_engine import _sanitize_events
+    raw = [("drop_msg", 1, 3),    # same instant as the crash: dropped
+           ("crash", 1, 3),
+           ("rejoin", 1, 5),
+           ("rejoin", 2, 4),      # rejoin of a live party: dropped
+           ("crash", 0, 99)]      # clamped into the horizon
+    ev = _sanitize_events(raw, q=3, steps=8)
+    kinds = [(e.kind, e.party, e.step) for e in ev]
+    assert kinds == [("crash", 1, 3), ("rejoin", 1, 5), ("crash", 0, 7)]
+
+
+# -- realized faults under real concurrency -------------------------------
+
+@pytest.mark.slow
+def test_crash_freezes_block_and_records_trace(ds, layout):
+    x, y = ds
+    lo, hi = layout.bounds[3]
+    plan = ThreadFaultPlan(crash_at={3: 8})   # party 3 down for good
+    res = run_async(PROB, x, y, layout, lr=0.2, batch=32, total_epochs=2.0,
+                    seed=0, secure=True, fault_plan=plan)
+    assert res.fault_trace is not None
+    kinds = {(e.kind, e.party) for e in res.fault_trace.events}
+    assert ("crash", 3) in kinds
+    # the crashed party's block froze at its pre-crash value; with the
+    # crash landing within the first few updates that is ~the zero init
+    live = np.concatenate([res.w[:lo], res.w[hi:]])
+    assert np.abs(res.w[lo:hi]).max() < np.abs(live).max()
+    assert np.abs(live).max() > 0
+
+
+@pytest.mark.slow
+def test_rejoin_recorded_and_trace_replays_on_device(ds, layout):
+    x, y = ds
+    plan = ThreadFaultPlan(crash_at={2: 6}, rejoin_at={2: 20})
+    res = run_async(PROB, x, y, layout, lr=0.2, batch=32, total_epochs=2.0,
+                    seed=1, secure=True, fault_plan=plan)
+    tr = res.fault_trace
+    kinds = [(e.kind, e.party) for e in tr.events]
+    assert ("crash", 2) in kinds and ("rejoin", 2) in kinds
+    # the realized trace compiles (dominator availability included) ...
+    tr.compile(layout.m)
+    # ... and replays deterministically on the fused engine
+    from repro.core import faults
+    steps = 2 * (x.shape[0] // 32)
+    rep = tr.with_steps(steps)
+    w = faults.run_faulted_fused(PROB, x, y, layout, rep, tau=2, epochs=2,
+                                 lr=0.2, batch=32, seed=1)
+    assert np.all(np.isfinite(w)) and np.abs(w).max() > 0
+
+
+@pytest.mark.slow
+def test_secure_survivor_aggregation_in_flight(ds, layout):
+    """With <3 survivors contributing, the dominator's survivor-aware
+    secure aggregation degrades loudly, never silently."""
+    x, y = ds
+    plan = ThreadFaultPlan(crash_at={1: 4, 2: 4, 3: 4})
+    with pytest.warns(RuntimeWarning, match="degraded"):
+        res = run_async(PROB, x, y, layout, lr=0.2, batch=32,
+                        total_epochs=1.0, seed=2, secure=True,
+                        fault_plan=plan)
+    assert np.all(np.isfinite(res.w))
+
+
+# -- wall-clock contract --------------------------------------------------
+
+@pytest.mark.slow
+def test_timeout_is_loud_and_reports_realized_epochs(ds, layout):
+    x, y = ds
+    with pytest.warns(RuntimeWarning, match="wall-clock bound"):
+        res = run_async(PROB, x, y, layout, lr=0.2, batch=16,
+                        total_epochs=500.0, seed=0, secure=False,
+                        max_wall=0.5)
+    assert res.timed_out
+    assert 0.0 <= res.epochs < 500.0
+
+
+@pytest.mark.slow
+def test_completed_run_reports_epochs(ds, layout):
+    x, y = ds
+    res = run_async(PROB, x, y, layout, lr=0.2, batch=32, total_epochs=1.0,
+                    seed=0, secure=False)
+    assert not res.timed_out
+    assert res.epochs == pytest.approx(1.0, abs=0.25)
+    sync = run_sync(PROB, x, y, layout, lr=0.2, batch=32, total_epochs=1.0,
+                    seed=0)
+    assert sync.epochs == 1.0

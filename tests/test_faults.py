@@ -1,0 +1,274 @@
+"""Elastic fault tolerance: fused faulted epochs vs sequential fault
+oracles (1e-5 across algorithms × secure modes × linear/deep), trace
+validation, and preemption-safe bit-exact resume."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import faults, losses
+from repro.core.algorithms import PartyLayout
+from repro.core.engine import EngineConfig
+
+TAU = 2
+EPOCHS = 2
+BATCH = 8
+STEPS = 6  # n // batch
+
+
+@pytest.fixture(scope="module")
+def ds():
+    rng = np.random.default_rng(7)
+    n, d = 48, 12
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = ((rng.random(n) > 0.5).astype(np.float32) * 2 - 1)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def layout():
+    return PartyLayout.even(12, 4, 2)
+
+
+@pytest.fixture(scope="module")
+def trace(layout):
+    # hand-built: a crash + rejoin, a straggler, a dropped broadcast, and
+    # a permanent dropout in the second epoch
+    ev = (faults.FaultEvent(2, 3, "crash"),
+          faults.FaultEvent(5, 3, "rejoin"),
+          faults.FaultEvent(3, 1, "straggle", k=1),
+          faults.FaultEvent(4, 2, "drop_msg"),
+          faults.FaultEvent(7, 2, "crash"))
+    return faults.FaultTrace(q=layout.q, steps=EPOCHS * STEPS, events=ev)
+
+
+PROB = losses.logistic_l2(1e-3)
+
+
+# -- trace compilation / validation ---------------------------------------
+
+def test_compile_liveness_channels(layout, trace):
+    sched = trace.compile(layout.m)
+    fwd, bwd, extra = sched.fwd, sched.bwd, sched.extra
+    assert fwd.shape == (EPOCHS * STEPS, layout.q)
+    # crash: both channels zero from step 2, back at 5
+    assert fwd[2:5, 3].sum() == 0 and bwd[2:5, 3].sum() == 0
+    assert fwd[5:, 3].min() == 1 and bwd[5:, 3].min() == 1
+    # drop_msg: forward-only participation that step
+    assert fwd[4, 2] == 1 and bwd[4, 2] == 0
+    # straggle: extra delay recorded at that step only
+    assert extra[3, 1] == 1 and extra.sum() == 1
+    # permanent dropout from step 7
+    assert fwd[7:, 2].sum() == 0
+
+
+@pytest.mark.parametrize("events,err", [
+    ((faults.FaultEvent(1, 2, "crash"), faults.FaultEvent(3, 2, "crash")),
+     "crashed twice"),
+    ((faults.FaultEvent(1, 2, "rejoin"),), "rejoin of live"),
+    ((faults.FaultEvent(1, 2, "crash"),
+      faults.FaultEvent(2, 2, "straggle", k=1)), "crashed party"),
+    ((faults.FaultEvent(1, 2, "crash"),
+      faults.FaultEvent(2, 2, "drop_msg")), "crashed party"),
+])
+def test_illegal_event_sequences(layout, events, err):
+    tr = faults.FaultTrace(q=layout.q, steps=6, events=events)
+    with pytest.raises(ValueError, match=err):
+        tr.compile(layout.m)
+
+
+def test_dominator_availability_enforced(layout):
+    # both active parties (0, 1) down at once -> nobody holds the labels
+    ev = (faults.FaultEvent(1, 0, "crash"), faults.FaultEvent(1, 1, "crash"))
+    tr = faults.FaultTrace(q=layout.q, steps=4, events=ev)
+    with pytest.raises(ValueError, match="dominator availability"):
+        tr.compile(layout.m)
+    # without the m argument only total survivorship is checked
+    tr.compile()
+
+
+def test_all_parties_down_rejected():
+    ev = tuple(faults.FaultEvent(1, p, "crash") for p in range(3))
+    tr = faults.FaultTrace(q=3, steps=3, events=ev)
+    with pytest.raises(ValueError, match="surviving party"):
+        tr.compile()
+
+
+def test_delay_budget_validated(ds, layout, trace):
+    x, y = ds
+    with pytest.raises(ValueError, match="delay budget"):
+        faults.run_faulted_fused(PROB, x, y, layout, trace, tau=TAU,
+                                 epochs=EPOCHS, lr=0.3, batch=BATCH,
+                                 delays_q=[0, TAU, 0, 0])  # base+straggle>τ
+
+
+# -- fused vs sequential fault oracle (the tentpole pin) ------------------
+
+@pytest.mark.parametrize("algo", ["sgd", "svrg", "saga"])
+@pytest.mark.parametrize("secure", ["off", "two_tree", "ring"])
+def test_faulted_fused_matches_oracle(ds, layout, trace, algo, secure):
+    x, y = ds
+    w_ref = faults.run_faulted_reference(PROB, x, y, layout, trace,
+                                         tau=TAU, epochs=EPOCHS, lr=0.3,
+                                         batch=BATCH, algo=algo, seed=1)
+    cfg = EngineConfig(secure=secure, donate=True)
+    w_fused = faults.run_faulted_fused(PROB, x, y, layout, trace, tau=TAU,
+                                       epochs=EPOCHS, lr=0.3, batch=BATCH,
+                                       algo=algo, seed=1,
+                                       engine_config=cfg)
+    np.testing.assert_allclose(w_fused, w_ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("algo", ["sgd", "svrg"])
+@pytest.mark.parametrize("secure", ["off", "two_tree", "ring"])
+def test_deep_faulted_fused_matches_oracle(ds, layout, trace, algo, secure):
+    x, y = ds
+    p_ref = faults.run_deep_faulted_reference(
+        PROB, x, y, layout, trace, tau=TAU, epochs=EPOCHS, lr=0.1,
+        batch=BATCH, algo=algo, seed=1, hidden=8, d_rep=6)
+    cfg = EngineConfig(secure=secure, donate=True)
+    p_fused = faults.run_deep_faulted_fused(
+        PROB, x, y, layout, trace, tau=TAU, epochs=EPOCHS, lr=0.1,
+        batch=BATCH, algo=algo, seed=1, hidden=8, d_rep=6,
+        engine_config=cfg)
+    for a, b in zip(
+            list(p_fused.enc_w1) + list(p_fused.enc_b1)
+            + list(p_fused.enc_w2) + [p_fused.head],
+            list(p_ref.enc_w1) + list(p_ref.enc_b1)
+            + list(p_ref.enc_w2) + [p_ref.head]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_random_trace_runs_and_pins(ds, layout):
+    x, y = ds
+    tr = faults.random_trace(layout, EPOCHS * STEPS, rate=0.15, seed=5)
+    w_ref = faults.run_faulted_reference(PROB, x, y, layout, tr, tau=TAU,
+                                         epochs=EPOCHS, lr=0.3,
+                                         batch=BATCH, algo="sgd", seed=2)
+    w_fused = faults.run_faulted_fused(PROB, x, y, layout, tr, tau=TAU,
+                                       epochs=EPOCHS, lr=0.3, batch=BATCH,
+                                       algo="sgd", seed=2)
+    np.testing.assert_allclose(w_fused, w_ref, atol=1e-5)
+
+
+def test_no_fault_trace_matches_delayed_path(ds, layout):
+    """An empty trace with zero base delays must equal the existing
+    bounded-delay runner with zero delays (the fault layer is a strict
+    extension, not a fork)."""
+    from repro.core import staleness
+    x, y = ds
+    tr = faults.FaultTrace(q=layout.q, steps=EPOCHS * STEPS)
+    w_f = faults.run_faulted_fused(PROB, x, y, layout, tr, tau=TAU,
+                                   epochs=EPOCHS, lr=0.3, batch=BATCH,
+                                   algo="sgd", seed=3,
+                                   delays_q=np.zeros(layout.q, np.int32))
+    w_d = staleness.run_delayed_fused(PROB, x, y, layout, tau=0,
+                                      epochs=EPOCHS, lr=0.3, batch=BATCH,
+                                      seed=3)
+    np.testing.assert_allclose(w_f, w_d, atol=1e-5)
+
+
+# -- preemption-safe resume ----------------------------------------------
+
+class _Preempt(Exception):
+    pass
+
+
+def _kill_after(monkeypatch, step_to_kill):
+    """Monkeypatch save_checkpoint to preempt right after a given epoch's
+    (atomic) checkpoint lands — simulating a kill mid-run."""
+    from repro.checkpoint import ckpt
+
+    orig = ckpt.save_checkpoint
+
+    def killer(path, tree, step=0):
+        orig(path, tree, step=step)
+        if step == step_to_kill:
+            raise _Preempt()
+
+    monkeypatch.setattr(ckpt, "save_checkpoint", killer)
+
+
+@pytest.mark.parametrize("algo", ["sgd", "svrg", "saga"])
+def test_kill_and_resume_bit_exact(ds, layout, monkeypatch, tmp_path, algo):
+    x, y = ds
+    epochs = 4
+    tr = faults.random_trace(layout, epochs * STEPS, rate=0.1, seed=9)
+    w_full = faults.run_faulted_fused(PROB, x, y, layout, tr, tau=TAU,
+                                      epochs=epochs, lr=0.3, batch=BATCH,
+                                      algo=algo, seed=1)
+    ck = os.path.join(tmp_path, "ck")
+    _kill_after(monkeypatch, 2)
+    with pytest.raises(_Preempt):
+        faults.run_faulted_fused(PROB, x, y, layout, tr, tau=TAU,
+                                 epochs=epochs, lr=0.3, batch=BATCH,
+                                 algo=algo, seed=1, checkpoint_dir=ck)
+    monkeypatch.undo()
+    w_res = faults.run_faulted_fused(PROB, x, y, layout, tr, tau=TAU,
+                                     epochs=epochs, lr=0.3, batch=BATCH,
+                                     algo=algo, seed=1, resume_from=ck)
+    assert np.array_equal(w_res, w_full)   # bit-exact, not approx
+
+
+def test_deep_kill_and_resume_bit_exact(ds, layout, monkeypatch, tmp_path):
+    x, y = ds
+    epochs = 3
+    tr = faults.random_trace(layout, epochs * STEPS, rate=0.1, seed=9)
+    p_full = faults.run_deep_faulted_fused(
+        PROB, x, y, layout, tr, tau=TAU, epochs=epochs, lr=0.1,
+        batch=BATCH, algo="svrg", seed=1, hidden=8, d_rep=6)
+    ck = os.path.join(tmp_path, "ck")
+    _kill_after(monkeypatch, 1)
+    with pytest.raises(_Preempt):
+        faults.run_deep_faulted_fused(
+            PROB, x, y, layout, tr, tau=TAU, epochs=epochs, lr=0.1,
+            batch=BATCH, algo="svrg", seed=1, hidden=8, d_rep=6,
+            checkpoint_dir=ck)
+    monkeypatch.undo()
+    p_res = faults.run_deep_faulted_fused(
+        PROB, x, y, layout, tr, tau=TAU, epochs=epochs, lr=0.1,
+        batch=BATCH, algo="svrg", seed=1, hidden=8, d_rep=6,
+        resume_from=ck)
+    for a, b in zip(
+            list(p_res.enc_w1) + [p_res.head],
+            list(p_full.enc_w1) + [p_full.head]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("algo", ["sgd", "saga"])
+def test_train_kill_and_resume_bit_exact(ds, layout, monkeypatch, tmp_path,
+                                         engine, algo):
+    """The top-level trainers carry the same preemption contract."""
+    from repro.core.algorithms import train
+    x, y = ds
+    full = train(PROB, x, y, layout, algo=algo, epochs=4, lr=0.3,
+                 batch=BATCH, engine=engine)
+    ck = os.path.join(tmp_path, "ck")
+    _kill_after(monkeypatch, 2)
+    with pytest.raises(_Preempt):
+        train(PROB, x, y, layout, algo=algo, epochs=4, lr=0.3, batch=BATCH,
+              engine=engine, checkpoint_dir=ck)
+    monkeypatch.undo()
+    res = train(PROB, x, y, layout, algo=algo, epochs=4, lr=0.3,
+                batch=BATCH, engine=engine, resume_from=ck)
+    assert np.array_equal(res.w, full.w)
+    assert len(res.history) == 4
+    assert [h["objective"] for h in res.history] \
+        == pytest.approx([h["objective"] for h in full.history])
+
+
+def test_deep_train_resume(ds, layout, monkeypatch, tmp_path):
+    from repro.core.algorithms import train
+    x, y = ds
+    kw = dict(algo="sgd", epochs=3, lr=0.1, batch=BATCH, deep=True,
+              hidden=8, d_rep=6, engine="reference")
+    full = train(PROB, x, y, layout, **kw)
+    ck = os.path.join(tmp_path, "ck")
+    _kill_after(monkeypatch, 1)
+    with pytest.raises(_Preempt):
+        train(PROB, x, y, layout, checkpoint_dir=ck, **kw)
+    monkeypatch.undo()
+    res = train(PROB, x, y, layout, resume_from=ck, **kw)
+    assert np.array_equal(res.w, full.w)
+    assert len(res.history) == 3

@@ -1,0 +1,143 @@
+"""Secure aggregation across membership changes: survivor tree rebuild
+keeps Definition 4, ring re-keying keeps Σδ ≡ 0 over the survivors, the
+< 3-survivor degrade warns explicitly, and transcripts across a dropout
+boundary never expose an unmasked partial."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import trees
+from repro.core.secure_agg import (secure_aggregate_survivors,
+                                   secure_psum_members,
+                                   secure_psum_ring_members)
+
+Q = 5
+
+
+# -- tree rebuild ---------------------------------------------------------
+
+@pytest.mark.parametrize("dead", range(Q))
+def test_survivor_trees_keep_definition_4(dead):
+    surv = [p for p in range(Q) if p != dead]
+    t1, t2, ids = trees.survivor_tree_pair(Q, surv)
+    assert ids == surv
+    assert trees.significantly_different(t1, t2)
+
+
+def test_survivor_trees_need_three():
+    with pytest.raises(ValueError, match=">= 3 survivors"):
+        trees.survivor_tree_pair(Q, [0, 4])
+    with pytest.raises(ValueError, match="survivor ids"):
+        trees.survivor_tree_pair(Q, [0, 1, Q])
+
+
+# -- host protocol over survivors ----------------------------------------
+
+def _partials(rng, q=Q, shape=(6,)):
+    return [rng.standard_normal(shape) for _ in range(q)]
+
+
+def test_survivor_sum_exact_and_rekeyed():
+    rng = np.random.default_rng(0)
+    parts = _partials(rng)
+    alive = [True, True, False, True, True]
+    val, _ = secure_aggregate_survivors(parts, alive, np.random.default_rng(1))
+    want = sum(p for p, a in zip(parts, alive) if a)
+    np.testing.assert_allclose(val, want, atol=1e-9)
+
+
+def test_degrade_below_three_survivors_warns_but_sums():
+    rng = np.random.default_rng(0)
+    parts = _partials(rng)
+    alive = [True, False, False, False, True]
+    with pytest.warns(RuntimeWarning, match="degraded"):
+        val, tr = secure_aggregate_survivors(parts, alive,
+                                             np.random.default_rng(1))
+    np.testing.assert_allclose(val, parts[0] + parts[4], atol=1e-9)
+    # even degraded, nothing a party saw equals any raw partial
+    for p in range(Q):
+        for seen in tr.seen_by(p):
+            for raw in parts:
+                assert not np.allclose(seen, raw, atol=1e-6)
+    # crashed parties observed nothing at all
+    assert tr.seen_by(1) == [] and tr.seen_by(2) == [] and tr.seen_by(3) == []
+
+
+def test_transcript_audit_across_dropout_boundary():
+    """Full round, then party 2 drops, then another round: in neither
+    configuration does any transmitted value match any raw partial, and
+    the dead party's transcript is empty post-dropout."""
+    rng_data = np.random.default_rng(3)
+    rng_mask = np.random.default_rng(4)
+    parts = _partials(rng_data)
+    from repro.core.secure_agg import secure_aggregate_host
+    val0, tr0 = secure_aggregate_host(parts, rng_mask)
+    np.testing.assert_allclose(val0, sum(parts), atol=1e-9)
+    parts1 = _partials(rng_data)
+    alive = [True, True, False, True, True]
+    val1, tr1 = secure_aggregate_survivors(parts1, alive, rng_mask)
+    np.testing.assert_allclose(
+        val1, sum(p for p, a in zip(parts1, alive) if a), atol=1e-9)
+    for tr, raw in ((tr0, parts), (tr1, parts1)):
+        for p in range(Q):
+            for seen in tr.seen_by(p):
+                for r in raw:
+                    assert not np.allclose(seen, r, atol=1e-6)
+    assert tr1.seen_by(2) == []
+
+
+def test_no_survivors_rejected():
+    with pytest.raises(ValueError, match="surviving party"):
+        secure_aggregate_survivors(_partials(np.random.default_rng(0)),
+                                   [False] * Q, np.random.default_rng(1))
+
+
+# -- device lowerings over survivors -------------------------------------
+
+def _device_sum(fn, z, alive, key):
+    mapped = jax.vmap(lambda zz, aa: fn(zz, "p", key, aa),
+                      axis_name="p", in_axes=(0, 0))
+    return np.asarray(mapped(jnp.asarray(z, jnp.float32),
+                             jnp.asarray(alive, jnp.float32)))
+
+
+@pytest.mark.parametrize("fn", [secure_psum_members,
+                                secure_psum_ring_members])
+@pytest.mark.parametrize("alive", [
+    [1, 1, 1, 1, 1],
+    [1, 1, 0, 1, 1],
+    [1, 0, 0, 1, 0],
+    [1, 0, 0, 0, 0],   # lone survivor: ring seeds coincide, δ = 0
+])
+def test_member_psum_exact_over_survivors(fn, alive):
+    rng = np.random.default_rng(11)
+    z = rng.standard_normal((Q, 7)).astype(np.float32)
+    key = jax.random.PRNGKey(42)
+    out = _device_sum(fn, z, alive, key)
+    want = (np.asarray(alive, np.float32)[:, None] * z).sum(axis=0)
+    for p in range(Q):  # every party receives the same survivor sum
+        np.testing.assert_allclose(out[p], want, atol=1e-4)
+
+
+def test_member_psum_rekeys_on_membership_change():
+    """The masked value a party transmits must differ between membership
+    configurations (fingerprint folded into the key = re-keying)."""
+    key = jax.random.PRNGKey(7)
+    z = jnp.ones((Q, 4), jnp.float32)
+
+    def masked_ring(zz, aa):
+        # reproduce the pre-psum masked value party 0 would transmit
+        av = aa.astype(jnp.int32)
+        nal = jnp.maximum(av.sum(), 1)
+        from repro.core.secure_agg import _alive_fingerprint
+        kk = jax.random.fold_in(key, _alive_fingerprint(av))
+        r_self = jax.random.normal(jax.random.fold_in(kk, 0), (4,))
+        r_prev = jax.random.normal(
+            jax.random.fold_in(kk, (0 - 1) % nal), (4,))
+        return zz + (r_self - r_prev)
+
+    full = masked_ring(z[0], jnp.ones(Q, jnp.float32))
+    drop = masked_ring(z[0], jnp.asarray([1, 1, 0, 1, 1], jnp.float32))
+    assert not np.allclose(np.asarray(full), np.asarray(drop), atol=1e-6)
