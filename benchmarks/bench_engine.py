@@ -158,21 +158,11 @@ def best_of(fn, repeat: int, warmup: int = 1) -> float:
         best = min(best, time.perf_counter() - t0)
     return best
 
-HOST_TRANSFER_PRIMS = {
-    "callback", "pure_callback", "io_callback", "debug_callback",
-    "infeed", "outfeed", "device_put", "host_local_array_to_global_array",
-}
-
-
-def count_host_transfers(jaxpr) -> int:
-    """Recursively count host-transfer primitives in a (closed) jaxpr.
-
-    Delegates to the engine's shared jaxpr walker (it recurses through
-    every param value, including tuples/lists of jaxprs — ``lax.cond``
-    branches, custom-call sub-jaxprs — so a callback hidden anywhere in
-    the epoch program is counted).
-    """
-    return count_primitives(jaxpr, HOST_TRANSFER_PRIMS)
+# Host-transfer census now lives in repro.analysis.walkers (the one copy
+# of the walker machinery); re-exported here so existing imports such as
+# ``from benchmarks.bench_engine import count_host_transfers`` keep working.
+from repro.analysis.walkers import (HOST_TRANSFER_PRIMS,  # noqa: F401,E402
+                                    count_host_transfers)
 
 
 def run(quick: bool = False):

@@ -1,0 +1,37 @@
+"""Static analysis over compiled jaxprs and post-SPMD HLO (PR 7).
+
+Three passes and one CLI:
+
+* :mod:`repro.analysis.taint` — leakage taint analysis: proves every
+  party-private value crossing a party boundary carries a per-party
+  (and, under membership changes, membership-keyed) PRNG mask offset;
+* :mod:`repro.analysis.schedule` — schedule audits: the unified jaxpr
+  walkers (host transfers, kernel-launch census), the donation/aliasing
+  checker, and the ring-buffer staleness verifier;
+* :mod:`repro.analysis.volume` — per-epoch collective-volume accounting
+  from post-SPMD HLO (grows ``launch.hlo_analysis``'s parser).
+
+``python -m repro.analysis`` lints the full engine entry-point matrix
+against the committed manifest ``analysis/INVARIANTS.json``; see
+``repro.analysis.runner``.
+
+This ``__init__`` stays light (walkers + passes only): the entry-point
+registry imports ``core.engine``, which itself re-exports the walkers
+from here — importing it eagerly would be circular.
+"""
+from repro.analysis.walkers import (CROSS_PARTY_PRIMS,        # noqa: F401
+                                    HOST_TRANSFER_PRIMS,
+                                    count_cross_party,
+                                    count_host_transfers,
+                                    count_primitive,
+                                    count_primitives,
+                                    primitive_histogram,
+                                    scan_body_primitive_counts,
+                                    sub_jaxprs)
+from repro.analysis.taint import (TaintFinding,               # noqa: F401
+                                  analyze_party_jaxpr,
+                                  finding_codes)
+from repro.analysis.schedule import (DonationAudit,           # noqa: F401
+                                     RingAudit,
+                                     donation_audit,
+                                     ring_audit)

@@ -1,0 +1,16 @@
+"""``python -m repro.analysis`` — the lint CLI.
+
+Forces 4 host platform devices *before* jax initializes so the
+collective-volume stage can form a real ("model",) mesh on CPU; this is
+a no-op when the flag (or real hardware) is already present.
+"""
+import os
+
+_flag = "--xla_force_host_platform_device_count=4"
+_existing = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _existing:
+    os.environ["XLA_FLAGS"] = f"{_existing} {_flag}".strip()
+
+from repro.analysis.runner import main  # noqa: E402
+
+raise SystemExit(main())

@@ -1,0 +1,327 @@
+"""The lintable engine entry-point matrix.
+
+Builds small fixture engines for every security mode and traces each
+shipped epoch entry point — linear and deep, SGD/SVRG/SAGA, multi-
+dominator, pipelined, delayed and faulted — through
+``FusedEngine.party_program``, then runs the three analysis passes over
+the traces:
+
+* leakage taint (``repro.analysis.taint``) on the per-party program,
+  with the party's raw feature block (``local[0]``) as the taint source
+  — the value whose privacy the protocol protects.  Liveness flags and
+  aggregates that already crossed a masked boundary are not sources:
+  membership is protocol-public metadata;
+* ring-buffer staleness (``repro.analysis.schedule.ring_audit``) on the
+  τ-entries;
+* structural census (host transfers must be zero, cross-party
+  collectives must be present) on the whole-epoch jaxpr.
+
+Everything here traces only — no epoch is compiled or executed — so the
+full matrix lints in seconds on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.schedule import ring_audit
+from repro.analysis.taint import analyze_party_jaxpr, finding_codes
+from repro.analysis.walkers import count_cross_party, count_host_transfers
+from repro.core import deep_vfl, losses
+from repro.core.algorithms import PartyLayout
+from repro.core.engine import EngineConfig, FusedEngine
+
+# fixture dimensions — small enough that tracing the whole matrix is fast
+N, D, Q, M = 48, 12, 4, 2
+BATCH, STEPS, TAU = 8, 3, 2
+HIDDEN, DREP = 4, 3
+
+#: security modes of the shipped engine ("two_tree_sf" = two_tree with the
+#: schedule-faithful ppermute replay of the paper's T1/T2 round structure)
+SECURE_MODES = ("off", "two_tree", "ring", "two_tree_sf")
+
+
+@dataclasses.dataclass
+class Entry:
+    """One traceable engine entry point."""
+
+    name: str                 # jit name, e.g. "sgd", "deep_delayed2"
+    trace: Callable           # (eng, fix) -> whole-epoch jaxpr (triggers
+    #                           party-program recording as a side effect)
+    tau: Optional[int] = None  # ring-buffer audit expected iff set
+    membership: bool = False   # taint analysis under membership changes
+    gated: bool = False        # rings are liveness-gated (faulted epochs)
+
+
+@dataclasses.dataclass
+class EntryReport:
+    """Analysis results for one entry under one security mode."""
+
+    name: str
+    secure: str
+    taint: Dict[str, int]          # finding-code histogram (empty = clean)
+    host_transfers: int
+    cross_party: int
+    rings: List[dict]              # RingAudit.to_dict() per ring
+    membership: bool
+    gated: bool
+
+    @property
+    def key(self) -> str:
+        return f"{self.secure}/{self.name}"
+
+    def to_dict(self) -> dict:
+        return {"taint": dict(self.taint),
+                "host_transfers": self.host_transfers,
+                "cross_party": self.cross_party,
+                "rings": self.rings}
+
+
+class _Fixture:
+    """Deterministic tiny dataset + per-mode engines."""
+
+    def __init__(self, secure: str, use_kernel: bool = False):
+        key = jax.random.key(0)
+        self.key = key
+        self.x = jax.random.normal(key, (N, D), jnp.float32)
+        self.y = jnp.where(
+            jax.random.normal(jax.random.fold_in(key, 1), (N,)) > 0,
+            1.0, -1.0)
+        self.layout = PartyLayout.even(D, Q, M)
+        self.prob = losses.logistic_l2(1e-3)
+        mode, sf = (("two_tree", True) if secure == "two_tree_sf"
+                    else (secure, False))
+        self.cfg = EngineConfig(secure=mode, schedule_faithful=sf,
+                                use_kernel=use_kernel,
+                                interpret=use_kernel)
+        self.eng = FusedEngine(self.prob, self.x, self.y, self.layout,
+                               self.cfg)
+        self.w = self.eng.pack_w(jnp.zeros(D, jnp.float32))
+        self.dp = self.w.shape[1]
+        self.delays = jnp.full((Q,), 1, jnp.int32)
+        self.delays_qm = jnp.full((Q, M), 1, jnp.int32)
+        self.buf = jnp.zeros((Q, TAU + 1, self.dp), jnp.float32)
+        self.bufm = jnp.zeros((Q, TAU + 1, self.dp, M), jnp.float32)
+        self.fwdq = jnp.ones((Q, STEPS), jnp.float32)
+        self.bwdq = jnp.ones((Q, STEPS), jnp.float32)
+        self.extraq = jnp.zeros((Q, STEPS), jnp.int32)
+        self._deep_pq = None
+
+    @property
+    def deep_pq(self):
+        if self._deep_pq is None:
+            params = deep_vfl.init_deep_vfl(self.key, self.layout, D,
+                                            HIDDEN, DREP)
+            self._deep_pq = self.eng.pack_deep(params)
+        return self._deep_pq
+
+
+def _entries() -> List[Entry]:
+    k = jax.random.key(7)
+
+    def t(method, *args):
+        return lambda eng, fx: jax.make_jaxpr(
+            lambda a0: getattr(eng, method)(a0, *args))
+
+    # each closure traces via make_jaxpr so the engine records the party
+    # program without compiling or running the epoch
+    def sgd(eng, fx):
+        return jax.make_jaxpr(
+            lambda w: eng.sgd_epoch(w, 0.1, k, BATCH, STEPS))(fx.w)
+
+    def svrg(eng, fx):
+        return jax.make_jaxpr(
+            lambda w, mu: eng.svrg_epoch(w, w, mu, 0.1, k, BATCH, STEPS)
+        )(fx.w, jnp.zeros_like(fx.w))
+
+    def saga(eng, fx):
+        tabq = jnp.zeros((Q, N), jnp.float32)
+        avgq = jnp.zeros((Q, fx.dp), jnp.float32)
+        return jax.make_jaxpr(
+            lambda w, tb, av: eng.saga_epoch(w, tb, av, 0.1, k, BATCH,
+                                             STEPS))(fx.w, tabq, avgq)
+
+    def multi_sgd(eng, fx):
+        return jax.make_jaxpr(
+            lambda w: eng.multi_sgd_epoch(w, 0.1, k, BATCH, STEPS))(fx.w)
+
+    def pipelined_sgd(eng, fx):
+        return jax.make_jaxpr(
+            lambda w: eng.pipelined_sgd_epoch(w, 0.1, k, BATCH, STEPS)
+        )(fx.w)
+
+    def delayed(eng, fx):
+        return jax.make_jaxpr(
+            lambda w, b: eng.delayed_sgd_epoch(w, b, 0, fx.delays, 0.1, k,
+                                               BATCH, STEPS, TAU)
+        )(fx.w, fx.buf)
+
+    def multi_delayed(eng, fx):
+        return jax.make_jaxpr(
+            lambda w, b: eng.multi_delayed_sgd_epoch(
+                w, b, 0, fx.delays_qm, 0.1, k, BATCH, STEPS, TAU)
+        )(fx.w, fx.bufm)
+
+    def faulted_sgd(eng, fx):
+        return jax.make_jaxpr(
+            lambda w, b: eng.faulted_sgd_epoch(
+                w, b, 0, fx.delays, fx.fwdq, fx.bwdq, fx.extraq, 0.1, k,
+                BATCH, STEPS, TAU)
+        )(fx.w, fx.buf)
+
+    def deep_sgd(eng, fx):
+        return jax.make_jaxpr(
+            lambda p: eng.deep_sgd_epoch(p, 0.05, k, BATCH, STEPS)
+        )(fx.deep_pq)
+
+    def deep_multi_sgd(eng, fx):
+        return jax.make_jaxpr(
+            lambda p: eng.deep_multi_sgd_epoch(p, 0.05, k, BATCH, STEPS)
+        )(fx.deep_pq)
+
+    def deep_svrg(eng, fx):
+        mu = jax.tree_util.tree_map(jnp.zeros_like, fx.deep_pq)
+        return jax.make_jaxpr(
+            lambda p, m: eng.deep_svrg_epoch(p, p, m, 0.05, k, BATCH,
+                                             STEPS))(fx.deep_pq, mu)
+
+    def deep_pipelined_sgd(eng, fx):
+        return jax.make_jaxpr(
+            lambda p: eng.deep_pipelined_sgd_epoch(p, 0.05, k, BATCH,
+                                                   STEPS))(fx.deep_pq)
+
+    def deep_delayed(eng, fx):
+        buf = eng.deep_delay_buffers(fx.deep_pq, TAU)
+        return jax.make_jaxpr(
+            lambda p, b: eng.deep_delayed_sgd_epoch(
+                p, b, 0, fx.delays, 0.05, k, BATCH, STEPS, TAU)
+        )(fx.deep_pq, buf)
+
+    def deep_faulted_sgd(eng, fx):
+        buf = eng.deep_delay_buffers(fx.deep_pq, TAU)
+        return jax.make_jaxpr(
+            lambda p, b: eng.deep_faulted_sgd_epoch(
+                p, b, 0, fx.delays, fx.fwdq, fx.bwdq, fx.extraq, 0.05, k,
+                BATCH, STEPS, TAU)
+        )(fx.deep_pq, buf)
+
+    return [
+        Entry("sgd", sgd),
+        Entry("svrg", svrg),
+        Entry("saga", saga),
+        Entry("multi_sgd", multi_sgd),
+        Entry("pipelined_sgd", pipelined_sgd),
+        Entry(f"delayed{TAU}", delayed, tau=TAU),
+        Entry(f"multi_delayed{TAU}", multi_delayed, tau=TAU),
+        Entry(f"faulted_sgd{TAU}", faulted_sgd, tau=TAU, membership=True,
+              gated=True),
+        Entry("deep_sgd", deep_sgd),
+        Entry("deep_multi_sgd", deep_multi_sgd),
+        Entry("deep_svrg", deep_svrg),
+        Entry("deep_pipelined_sgd", deep_pipelined_sgd),
+        Entry(f"deep_delayed{TAU}", deep_delayed, tau=TAU),
+        Entry(f"deep_faulted_sgd{TAU}", deep_faulted_sgd, tau=TAU,
+              membership=True, gated=True),
+    ]
+
+
+#: entry names for the quick (test-sized) matrix
+QUICK = ("sgd", f"delayed{TAU}", f"faulted_sgd{TAU}", "deep_sgd")
+
+
+def entry_names() -> List[str]:
+    return [e.name for e in _entries()]
+
+
+def analyze_matrix(secure_modes: Sequence[str] = SECURE_MODES,
+                   names: Optional[Sequence[str]] = None,
+                   progress: Optional[Callable[[str], None]] = None,
+                   ) -> List[EntryReport]:
+    """Trace and analyze the entry-point matrix.
+
+    Returns one :class:`EntryReport` per (security mode, entry).  Taint
+    sources are the party's raw feature block; faulted entries are
+    analyzed under ``membership=True`` so masks must also be keyed on the
+    alive-set fingerprint.
+    """
+    reports: List[EntryReport] = []
+    entries = [e for e in _entries()
+               if names is None or e.name in set(names)]
+    for secure in secure_modes:
+        fx = _Fixture(secure)
+        for ent in entries:
+            if progress is not None:
+                progress(f"{secure}/{ent.name}")
+            epoch_jx = ent.trace(fx.eng, fx)
+            pp = fx.eng.party_program(ent.name)
+            pj = pp.trace()
+            findings = analyze_party_jaxpr(pj, [0], axis=pp.axis,
+                                           membership=ent.membership)
+            rings = ([a.to_dict() for a in ring_audit(pj, ent.tau)]
+                     if ent.tau is not None else [])
+            reports.append(EntryReport(
+                name=ent.name, secure=secure,
+                taint=finding_codes(findings),
+                host_transfers=count_host_transfers(epoch_jx),
+                cross_party=count_cross_party(pj),
+                rings=rings, membership=ent.membership, gated=ent.gated))
+    return reports
+
+
+def check_reports(reports: Sequence[EntryReport]) -> List[str]:
+    """Hard lint gates over a set of entry reports.  Returns violation
+    messages (empty = pass)."""
+    errors: List[str] = []
+    for r in reports:
+        where = r.key
+        if r.secure == "off":
+            if r.taint.get("unmasked-boundary", 0) < 1:
+                errors.append(
+                    f"{where}: secure=off must flag at least one "
+                    f"unmasked boundary crossing (analyzer vacuity?) — "
+                    f"got {r.taint}")
+        else:
+            if r.taint:
+                errors.append(f"{where}: secure mode leaks: {r.taint}")
+        if r.host_transfers != 0:
+            errors.append(f"{where}: {r.host_transfers} host-transfer "
+                          f"primitives in the fused epoch (must be 0)")
+        if r.cross_party < 1:
+            errors.append(f"{where}: no cross-party collective in the "
+                          f"party program (walker vacuity?)")
+        for ring in r.rings:
+            if not ring["bounded"]:
+                errors.append(f"{where}: ring carry {ring['carry']} "
+                              f"staleness bound NOT proven: "
+                              f"{ring['notes']}")
+            if bool(ring["gated"]) != r.gated:
+                errors.append(f"{where}: ring carry {ring['carry']} "
+                              f"gating mismatch (expected gated="
+                              f"{r.gated}, audit says {ring['gated']})")
+        if r.rings == [] and any(
+                c.isdigit() for c in r.name) and "delayed" in r.name:
+            errors.append(f"{where}: expected ring buffers, audit found "
+                          f"none")
+    return errors
+
+
+def kernel_census(names: Sequence[str] = ("sgd", "pipelined_sgd"),
+                  ) -> Dict[str, List[int]]:
+    """Per-scan-body ``pallas_call`` counts on the kernel path.
+
+    The sequential SGD epoch launches forward + backward (2 per step);
+    the pipelined epoch fuses them into one split-batch launch per
+    interior step — the structural headline of the pipelined schedule.
+    """
+    from repro.analysis.walkers import scan_body_primitive_counts
+    fx = _Fixture("ring", use_kernel=True)
+    out: Dict[str, List[int]] = {}
+    for ent in _entries():
+        if ent.name not in set(names):
+            continue
+        jx = ent.trace(fx.eng, fx)
+        out[ent.name] = scan_body_primitive_counts(jx, "pallas_call")
+    return out

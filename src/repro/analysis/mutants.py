@@ -1,0 +1,116 @@
+"""Known-bad aggregation mutants — the analyzer's self-test.
+
+A static analyzer that never fires is worse than none, so the lint run
+opens by analyzing three *deliberately broken* aggregation kernels (each
+a realistic way to get Algorithm 1 wrong) plus two shipped-secure
+positive controls.  The gate: every mutant must produce its named
+finding and every control must be clean — otherwise the analyzer itself
+is broken and the matrix results are meaningless.
+
+The mutants:
+
+* ``off_psum`` — partials cross the party boundary with no mask at all
+  (``secure="off"`` in kernel form) → ``unmasked-boundary``;
+* ``equal_seeded`` — a two-tree-shaped reduction whose mask key is NOT
+  folded with ``axis_index``: every party draws the *same* δ, so any
+  observer subtracts the public Σδ and recovers Σz from ξ₁ per party
+  pair differences → ``mask-not-party-distinct``;
+* ``no_rekey`` — ring masks correctly per-party but NOT re-keyed on the
+  alive-set fingerprint: after a dropout the surviving masks no longer
+  cancel pairwise, and mask streams are reused across membership
+  configurations → ``mask-not-membership-keyed`` (caught only under
+  ``membership=True``, which is how faulted entries are analyzed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.taint import (EQUAL_SEEDED, NO_REKEY, UNMASKED,
+                                  analyze_party_jaxpr, finding_codes)
+from repro.core import secure_agg
+
+AXIS = "model"
+Q = 4
+_SHAPE = (8,)
+
+
+def _trace(fn, *args):
+    return jax.make_jaxpr(fn, axis_env=[(AXIS, Q)])(*args)
+
+
+def off_psum(z):
+    """Mutant: unmasked cross-party reduction."""
+    return jax.lax.psum(z, AXIS)
+
+
+def equal_seeded(z, key):
+    """Mutant: two-tree masking with one shared seed for every party."""
+    delta = jax.random.normal(key, z.shape, jnp.float32)   # no fold_in(idx)!
+    xi1 = jax.lax.psum(z + delta, AXIS)
+    xi2 = jax.lax.psum(delta, AXIS)
+    return xi1 - xi2
+
+
+def no_rekey(z, key, alive):
+    """Mutant: per-party ring masks without the alive-set re-key."""
+    idx = jax.lax.axis_index(AXIS)
+    q = jax.lax.psum(1, AXIS)
+    r_self = jax.random.normal(jax.random.fold_in(key, idx), z.shape)
+    r_prev = jax.random.normal(jax.random.fold_in(key, (idx - 1) % q),
+                               z.shape)
+    masked = z + (r_self - r_prev)
+    return jax.lax.psum(alive * masked, AXIS)
+
+
+def control_two_tree(z, key):
+    """Positive control: the shipped two-tree masked reduction."""
+    return secure_agg.secure_psum(z, AXIS, key)
+
+
+def control_ring_members(z, key, alive):
+    """Positive control: the shipped membership-aware ring reduction."""
+    return secure_agg.secure_psum_ring_members(z, AXIS, key, alive)
+
+
+@dataclasses.dataclass
+class MutantResult:
+    name: str
+    expected: Dict[str, int]   # required finding codes (empty = clean)
+    actual: Dict[str, int]
+
+    @property
+    def ok(self) -> bool:
+        if not self.expected:
+            return not self.actual
+        return all(self.actual.get(code, 0) >= n
+                   for code, n in self.expected.items())
+
+    def to_dict(self) -> dict:
+        return {"expected": dict(self.expected),
+                "actual": dict(self.actual), "ok": self.ok}
+
+
+def run_selftest() -> List[MutantResult]:
+    """Analyze every mutant and control; see module docstring."""
+    z = jnp.zeros(_SHAPE, jnp.float32)
+    key = jax.random.key(0)
+    alive = jnp.float32(1.0)
+    cases = [
+        ("off_psum", _trace(off_psum, z), False, {UNMASKED: 1}),
+        ("equal_seeded", _trace(equal_seeded, z, key), False,
+         {EQUAL_SEEDED: 1}),
+        ("no_rekey", _trace(no_rekey, z, key, alive), True, {NO_REKEY: 1}),
+        ("control_two_tree", _trace(control_two_tree, z, key), False, {}),
+        ("control_ring_members", _trace(control_ring_members, z, key, alive),
+         True, {}),
+    ]
+    results = []
+    for name, jx, membership, expected in cases:
+        findings = analyze_party_jaxpr(jx, [0], axis=AXIS,
+                                       membership=membership)
+        results.append(MutantResult(name, expected, finding_codes(findings)))
+    return results

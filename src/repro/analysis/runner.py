@@ -1,0 +1,214 @@
+"""Lint runner: orchestrates the analysis passes and gates on the
+committed invariants manifest (``analysis/INVARIANTS.json``).
+
+Stages, in order:
+
+1. **mutant self-test** — three known-bad aggregation kernels must each
+   produce their named finding, two shipped-secure controls must be
+   clean (guards against analyzer vacuity; see ``mutants.py``);
+2. **entry-point matrix** — trace every shipped epoch entry under every
+   security mode and apply the hard gates (``entrypoints.check_reports``);
+3. **kernel census** — per-scan-body ``pallas_call`` launch counts for
+   the sequential-vs-pipelined schedules;
+4. **donation audit** — compile one donated epoch and verify XLA honored
+   the aliasing (``input_output_alias`` in the executable header);
+5. **collective volume** — per-epoch collective bytes from post-SPMD
+   HLO; advisory by default (backend/version sensitive), hardened by
+   ``--strict-hlo``; skipped when no 4-device mesh can be formed.
+
+The run's report is compared against the committed manifest: structural
+keys (taint codes, host transfers, ring verdicts, kernel launches,
+donation) must match exactly; collective volumes warn on drift.
+``--update`` regenerates the manifest; ``--ci`` emits GitHub ``::error``
+annotations and the process exits nonzero on any violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Optional
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+DEFAULT_MANIFEST = REPO_ROOT / "analysis" / "INVARIANTS.json"
+
+
+def _normalize_rings(rings: List[dict]) -> List[dict]:
+    """The version-stable core of a ring audit: slots + verdicts."""
+    return [{"length": r["length"], "bounded": bool(r["bounded"]),
+             "gated": bool(r["gated"])} for r in rings]
+
+
+def build_report(quick: bool = False, with_volume: bool = True,
+                 progress=None) -> Dict:
+    from repro.analysis import entrypoints as ep
+    from repro.analysis import mutants as mu
+    from repro.analysis import volume as vol
+
+    report: Dict = {"version": 1}
+
+    results = mu.run_selftest()
+    report["mutants"] = {r.name: r.to_dict() for r in results}
+
+    modes = ("off", "ring") if quick else ep.SECURE_MODES
+    names = ep.QUICK if quick else None
+    reps = ep.analyze_matrix(secure_modes=modes, names=names,
+                             progress=progress)
+    report["matrix"] = {
+        r.key: {"taint": dict(r.taint),
+                "host_transfers": r.host_transfers,
+                "cross_party": r.cross_party,
+                "rings": _normalize_rings(r.rings)}
+        for r in reps}
+    report["_matrix_errors"] = ep.check_reports(reps)
+
+    report["kernels"] = ep.kernel_census()
+
+    report["donation"] = _donation_report()
+
+    if with_volume:
+        v = vol.collective_volume(progress=progress)
+        if v is not None:
+            report["collectives"] = v
+    return report
+
+
+def _donation_report() -> dict:
+    """Compile one donated SGD epoch and parse the alias table."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import entrypoints as ep
+    from repro.analysis.schedule import donation_audit
+
+    fx = ep._Fixture("ring")
+    key = jax.random.key(5)
+    lowered = jax.jit(
+        lambda wq: fx.eng.sgd_epoch(wq, 0.1, key, ep.BATCH, ep.STEPS),
+        donate_argnums=(0,)).lower(fx.w)
+    audit = donation_audit(lowered.compile().as_text(), [0])
+    return audit.to_dict()
+
+
+def check_report(report: Dict, manifest: Optional[Dict],
+                 strict_hlo: bool = False):
+    """Return (errors, warnings) for a report vs the committed manifest."""
+    errors: List[str] = []
+    warnings: List[str] = []
+
+    for name, r in report["mutants"].items():
+        if not r["ok"]:
+            errors.append(f"mutant self-test '{name}': expected "
+                          f"{r['expected']}, analyzer found {r['actual']}")
+    errors.extend(report.get("_matrix_errors", []))
+    if not report["donation"]["ok"]:
+        errors.append(
+            f"donation audit: expected params "
+            f"{report['donation']['expected_params']} to alias outputs, "
+            f"compiled alias table has "
+            f"{report['donation']['aliased_params']}")
+
+    if manifest is None:
+        warnings.append("no invariants manifest — run with --update to "
+                        "commit one (structural gates still enforced)")
+        return errors, warnings
+
+    for key, want in manifest.get("matrix", {}).items():
+        got = report["matrix"].get(key)
+        if got is None:
+            warnings.append(f"manifest entry {key} not analyzed this run")
+            continue
+        for field in ("taint", "host_transfers", "rings"):
+            if got[field] != want[field]:
+                errors.append(f"{key}: {field} drifted from manifest: "
+                              f"{want[field]} -> {got[field]}")
+        if got["cross_party"] < 1:
+            errors.append(f"{key}: cross-party collectives vanished")
+    for key in report["matrix"]:
+        if key not in manifest.get("matrix", {}):
+            warnings.append(f"{key} analyzed but not in manifest "
+                            f"(--update to record)")
+
+    if report["kernels"] != manifest.get("kernels"):
+        errors.append(f"kernel launch census drifted from manifest: "
+                      f"{manifest.get('kernels')} -> {report['kernels']}")
+
+    want_coll = manifest.get("collectives")
+    got_coll = report.get("collectives")
+    if want_coll and got_coll:
+        for key, want in want_coll.items():
+            got = got_coll.get(key)
+            if got is None:
+                continue
+            if got != want:
+                msg = (f"collective volume {key} drifted from manifest: "
+                       f"{want} -> {got}")
+                (errors if strict_hlo else warnings).append(msg)
+    elif want_coll and not got_coll:
+        warnings.append("collective volumes in manifest but no mesh "
+                        "available this run")
+    return errors, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static security & schedule linter over the fused "
+                    "engine's jaxprs and compiled HLO.")
+    ap.add_argument("--quick", action="store_true",
+                    help="small entry subset, off/ring modes only")
+    ap.add_argument("--ci", action="store_true",
+                    help="GitHub ::error:: annotations on violations")
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate the invariants manifest from this run")
+    ap.add_argument("--strict-hlo", action="store_true",
+                    help="treat collective-volume drift as an error")
+    ap.add_argument("--no-volume", action="store_true",
+                    help="skip the HLO collective-volume stage")
+    ap.add_argument("--manifest", type=pathlib.Path,
+                    default=DEFAULT_MANIFEST)
+    ap.add_argument("--json", type=pathlib.Path, default=None,
+                    help="write the machine-readable report here")
+    args = ap.parse_args(argv)
+
+    progress = (lambda s: print(f"  .. {s}", flush=True)) \
+        if not args.ci else None
+    report = build_report(quick=args.quick,
+                          with_volume=not args.no_volume,
+                          progress=progress)
+
+    manifest = None
+    if args.manifest.exists():
+        manifest = json.loads(args.manifest.read_text())
+    errors, warnings = check_report(report, manifest,
+                                    strict_hlo=args.strict_hlo)
+
+    public = {k: v for k, v in report.items() if not k.startswith("_")}
+    if args.json:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(public, indent=1, sort_keys=True)
+                             + "\n")
+    if args.update:
+        if errors:
+            print("refusing to --update: structural gates failing",
+                  file=sys.stderr)
+        else:
+            args.manifest.parent.mkdir(parents=True, exist_ok=True)
+            args.manifest.write_text(
+                json.dumps(public, indent=1, sort_keys=True) + "\n")
+            print(f"wrote {args.manifest}")
+
+    n_entries = len(report["matrix"])
+    n_rings = sum(len(v["rings"]) for v in report["matrix"].values())
+    print(f"analysis: {n_entries} entries, "
+          f"{len(report['mutants'])} self-tests, {n_rings} ring audits, "
+          f"{len(report.get('collectives', {}))} HLO volume accounts")
+    for w in warnings:
+        print(f"::warning::{w}" if args.ci else f"warning: {w}")
+    for e in errors:
+        print(f"::error::{e}" if args.ci else f"ERROR: {e}")
+    if errors:
+        return 1
+    print("analysis: all gates passed")
+    return 0

@@ -1,0 +1,86 @@
+"""Per-epoch collective-volume accounting from post-SPMD HLO.
+
+Grows ``launch.hlo_analysis``'s collective-bytes parser into a per-epoch
+account: for each (security mode, entry) pair the fused epoch is lowered
+on a real ``("model",)`` mesh, compiled, and the partitioned HLO's
+collective instructions are summed per kind.  This is the measured
+counterpart of the taint pass — taint proves *what* crosses the party
+boundary is masked; this measures *how much* crosses, per epoch, per
+mode (e.g. the ring lowering's single all-reduce vs two-tree's two).
+
+Needs >= Q devices to form the mesh.  On CPU runs, set
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` **before** jax is
+imported (``python -m repro.analysis`` does this for you); when fewer
+devices are available the account is skipped, not failed — XLA's
+collective lowering varies across backends/versions, so volumes are
+advisory by default (``--strict-hlo`` hardens them).
+
+Caveat inherited from ``hlo_analysis``: HLO counts a ``while``
+(``lax.scan``) body ONCE, not trip-count times — numbers are per
+*distinct collective site*, steady across step counts.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import collective_stats
+
+#: entries with a measured collective account (small on purpose: each
+#: needs a real compile, ~seconds apiece vs milliseconds for a trace)
+DEFAULT_ENTRIES = ("sgd", "delayed")
+DEFAULT_MODES = ("off", "two_tree", "ring")
+
+
+def mesh_available(q: int) -> bool:
+    return len(jax.devices()) >= q
+
+
+def collective_volume(secure_modes: Sequence[str] = DEFAULT_MODES,
+                      names: Sequence[str] = DEFAULT_ENTRIES,
+                      progress=None) -> Optional[Dict[str, dict]]:
+    """Compile selected epochs on a mesh and account collective traffic.
+
+    Returns ``{"<mode>/<entry>": {"counts": {kind: n}, "bytes": {kind:
+    b}, "total_bytes": b}}``, or None when no mesh can be formed.
+    """
+    from repro.analysis import entrypoints as ep
+
+    if not mesh_available(ep.Q):
+        return None
+    mesh = jax.sharding.Mesh(jax.devices()[:ep.Q], ("model",))
+    key = jax.random.key(3)
+    out: Dict[str, dict] = {}
+    for secure in secure_modes:
+        fx = ep._Fixture(secure)
+        eng = ep.FusedEngine(fx.prob, fx.x, fx.y, fx.layout, fx.cfg,
+                             mesh=mesh)
+        w = eng.pack_w(jnp.zeros(ep.D, jnp.float32))
+        cases = {
+            "sgd": lambda: jax.jit(
+                lambda wq: eng.sgd_epoch(wq, 0.1, key, ep.BATCH, ep.STEPS)
+            ).lower(w),
+            "delayed": lambda: jax.jit(
+                lambda wq, bq: eng.delayed_sgd_epoch(
+                    wq, bq, 0, fx.delays, 0.1, key, ep.BATCH, ep.STEPS,
+                    ep.TAU)
+            ).lower(w, jnp.zeros((ep.Q, ep.TAU + 1, w.shape[1]),
+                                 jnp.float32)),
+        }
+        for name in names:
+            if name not in cases:
+                continue
+            if progress is not None:
+                progress(f"compiling {secure}/{name}")
+            txt = cases[name]().compile().as_text()
+            stats = collective_stats(txt)
+            out[f"{secure}/{name}"] = {
+                "counts": {k: v for k, v in stats.count_by_kind.items()
+                           if v},
+                "bytes": {k: v for k, v in stats.bytes_by_kind.items()
+                          if v},
+                "total_bytes": stats.total_bytes,
+            }
+    return out

@@ -277,61 +277,48 @@ def pack_mask(layout: PartyLayout, active_only: bool = False) -> jax.Array:
 # ---------------------------------------------------------------------------
 # jaxpr audits (shared by tests and benchmarks)
 # ---------------------------------------------------------------------------
+# The walker implementations moved to ``repro.analysis.walkers`` (PR 7's
+# static-analysis subsystem); these re-exports keep every existing import
+# (tests, benchmarks, notebooks) working unchanged.
 
-def _sub_jaxprs(v):
-    """Yield every jaxpr hiding in an eqn param value (ClosedJaxpr, raw
-    Jaxpr, or tuples/lists of either — cond branches, pjit bodies...)."""
-    inner = getattr(v, "jaxpr", None)
-    if inner is not None:                      # ClosedJaxpr
-        yield inner
-    elif hasattr(v, "eqns"):                   # raw Jaxpr
-        yield v
-    elif isinstance(v, (tuple, list)):
-        for item in v:
-            yield from _sub_jaxprs(item)
+from repro.analysis.walkers import (count_primitive,  # noqa: F401,E402
+                                    count_primitives,
+                                    scan_body_primitive_counts,
+                                    sub_jaxprs as _sub_jaxprs)
 
 
-def count_primitives(jaxpr, names) -> int:
-    """Recursively count occurrences of any primitive in ``names`` (a
-    name or a set of names) in a (closed) jaxpr."""
-    names = {names} if isinstance(names, str) else names
-    j = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
-    total = 0
-    for eqn in j.eqns:
-        if eqn.primitive.name in names:
-            total += 1
-        for v in eqn.params.values():
-            for sub in _sub_jaxprs(v):
-                total += count_primitives(sub, names)
-    return total
+@dataclasses.dataclass(frozen=True)
+class PartyProgram:
+    """The per-party program of one fused epoch, recorded at trace time.
 
-
-def count_primitive(jaxpr, name: str) -> int:
-    """Recursively count occurrences of primitive ``name`` in a jaxpr."""
-    return count_primitives(jaxpr, name)
-
-
-def scan_body_primitive_counts(jaxpr, name: str):
-    """Per-``scan``-body occurrence counts of primitive ``name``.
-
-    The scan body executes once per step of a fused epoch, so this is the
-    audit for "N kernel invocations per step": the sequential SGD epoch
-    shows [2] (forward + backward launch) and the pipelined epoch [1]
-    (the single split-batch fused launch) for ``name='pallas_call'``.
+    ``fn(local, shared)`` is the function the engine maps over the party
+    axis (shard_map or vmap-with-axis-name — identical collective
+    semantics).  ``local_avals`` are the per-party slices of the
+    party-stacked operands (leading q axis stripped), ``shared_avals``
+    the replicated operands.  ``repro.analysis.taint`` retraces ``fn``
+    with ``jax.make_jaxpr(..., axis_env=[(axis, q)])`` so cross-party
+    collectives stay first-class primitives — the representation the
+    leakage taint pass runs on.  By the ``_bind`` call convention the
+    first leaf of ``local`` is always the party's private feature block:
+    that is the taint source.
     """
-    counts = []
 
-    def walk(j):
-        for eqn in j.eqns:
-            subs = [s for v in eqn.params.values() for s in _sub_jaxprs(v)]
-            if eqn.primitive.name == "scan":
-                counts.extend(count_primitive(s, name) for s in subs)
-            else:
-                for s in subs:
-                    walk(s)
+    fn: object
+    local_avals: object     # pytree of ShapeDtypeStruct (per-party slice)
+    shared_avals: object    # pytree of ShapeDtypeStruct (replicated)
+    axis: str
+    q: int
 
-    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
-    return counts
+    def trace(self):
+        """Per-party closed jaxpr with the party axis abstractly bound."""
+        return jax.make_jaxpr(self.fn, axis_env=[(self.axis, self.q)])(
+            self.local_avals, self.shared_avals)
+
+    @property
+    def n_local(self) -> int:
+        """Number of flattened ``local`` leaves (they lead the trace's
+        invars; leaf 0 is the party-private feature block)."""
+        return len(jax.tree_util.tree_leaves(self.local_avals))
 
 
 # ---------------------------------------------------------------------------
@@ -388,6 +375,10 @@ class FusedEngine:
         self._interpret = (jax.default_backend() != "tpu") if interp is None \
             else interp
         self._jitted = {}
+        # epoch name -> PartyProgram, recorded by _bind at trace time for
+        # the static-analysis subsystem (repro.analysis)
+        self._party_programs = {}
+        self._building = None
 
     # -- party-axis binding --------------------------------------------------
 
@@ -403,11 +394,34 @@ class FusedEngine:
                 sq = jax.tree_util.tree_map(lambda a: a[0], local)
                 out = party_fn(sq, shared)
                 return jax.tree_util.tree_map(lambda o: o[None], out)
-            return shard_map(island, mesh=self.mesh,
-                             in_specs=(P(self.cfg.axis), P()),
-                             out_specs=P(self.cfg.axis), check_vma=False)
-        return jax.vmap(party_fn, in_axes=(0, None), out_axes=0,
-                        axis_name=self.cfg.axis)
+            mapped = shard_map(island, mesh=self.mesh,
+                               in_specs=(P(self.cfg.axis), P()),
+                               out_specs=P(self.cfg.axis), check_vma=False)
+        else:
+            mapped = jax.vmap(party_fn, in_axes=(0, None), out_axes=0,
+                              axis_name=self.cfg.axis)
+        name = self._building
+        if name is None:
+            return mapped
+
+        def recording(local, shared):
+            # Runs at trace time of the jitted epoch (operands may be
+            # tracers): snapshot the per-party program + operand avals so
+            # repro.analysis can retrace the party function with the axis
+            # abstractly bound.  Convention: local leaf 0 is the party's
+            # private feature block (the taint source).
+            self._party_programs[name] = PartyProgram(
+                fn=party_fn,
+                local_avals=jax.tree_util.tree_map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                    local),
+                shared_avals=jax.tree_util.tree_map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                    shared),
+                axis=self.cfg.axis, q=self.q)
+            return mapped(local, shared)
+
+        return recording
 
     # -- X-block contractions (kernel-routed or jnp) -------------------------
 
@@ -556,8 +570,22 @@ class FusedEngine:
     def _epoch(self, name, builder):
         """Build-and-cache the jitted epoch function for this instance."""
         if name not in self._jitted:
-            self._jitted[name] = builder()
+            self._building = name
+            try:
+                self._jitted[name] = builder()
+            finally:
+                self._building = None
         return self._jitted[name]
+
+    def party_program(self, name: str) -> "PartyProgram":
+        """The recorded per-party program of a built epoch (see
+        :class:`PartyProgram`; the epoch must have been called — or at
+        least traced, e.g. under ``jax.make_jaxpr`` — once)."""
+        if name not in self._party_programs:
+            raise KeyError(
+                f"no party program recorded for {name!r}; trace the epoch "
+                f"first (built: {sorted(self._party_programs)})")
+        return self._party_programs[name]
 
     def _donate(self, *argnames):
         """``donate_argnames`` for an epoch jit, honoring ``cfg.donate``."""

@@ -52,6 +52,15 @@ Dominator availability: every step must keep at least one *active* party
 (p < m) alive — someone has to hold the labels and compute ϑ.
 ``FaultTrace.compile`` validates this.
 
+Static verification: ``repro.analysis.schedule.ring_audit`` proves over
+the traced jaxpr that every ring-buffer read in the faulted epochs stays
+within the (τ+1)-slot window under the documented precondition that
+delays and step counters are nonnegative, and — because a crash is an
+unbounded delay — that each read is *gated*: the buffered contribution
+flows into the update only through a membership-dependent select, never
+unconditionally.  The CI lint job (``python -m repro.analysis --ci``)
+re-checks both facts against ``analysis/INVARIANTS.json`` on every push.
+
 Execution forms
 ---------------
 * ``faulted_{sgd,svrg,saga}_epoch`` — sequential coordinate-space oracles

@@ -15,6 +15,15 @@ Two executable forms of the same protocol:
   structure with ``lax.ppermute`` for schedule-faithful lowering), the
   masks are reduced over the *significantly different* T2, and the mask sum
   is subtracted.  Output step (paper): ``wᵀx = ξ1 − ξ2``.
+
+The masking invariants the TPU form relies on — every value crossing the
+party axis is mask-offset, masks are seeded per-party-distinct
+(``fold_in(key, axis_index)``), and membership-dependent epochs re-key on
+the alive-set fingerprint — are machine-checked statically:
+``repro.analysis.taint`` runs a leakage taint pass over the per-party
+jaxprs of every engine epoch (see ``analysis/INVARIANTS.json`` and the CI
+lint job), so a refactor here that weakens a mask fails the lint gate
+before it ever runs.
 """
 from __future__ import annotations
 

@@ -27,9 +27,19 @@ _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
                      "all-to-all", "collective-permute")
 
+# one matcher for "<lhs shapes> <kind>[-start|-done](": the lazy shapes
+# group spans the whole LHS — including nested tuples like
+# "(f32[8]{0}, (f32[4]{0}, pred[]))" that the old first-')'-truncating
+# regex cut short — and the suffix group lets callers skip the -done half
+# of async pairs (counting starts only, no double-counting).
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<shapes>.*?)\s*\b(?P<kind>" + "|".join(_COLLECTIVE_KINDS)
+    + r")(?P<suffix>-start|-done)?\(")
+
 
 def _shape_bytes(shape_str: str) -> int:
-    """'f32[16,128]' -> byte size; tuples handled by caller."""
+    """'f32[16,128]' -> byte size ('pred[]' -> 1); tuples handled by
+    caller."""
     m = _SHAPE_RE.match(shape_str.strip())
     if not m:
         return 0
@@ -43,15 +53,11 @@ def _shape_bytes(shape_str: str) -> int:
 
 def _line_output_bytes(line: str) -> int:
     """Bytes of the op's output (LHS shape), tuple-aware."""
-    m = re.search(r"=\s*(\(?)([^)=]*?)\)?\s*(all-gather|all-reduce|"
-                  r"reduce-scatter|all-to-all|collective-permute)", line)
+    m = _COLLECTIVE_RE.search(line)
     if not m:
         return 0
-    shapes_part = m.group(2)
-    total = 0
-    for sm in _SHAPE_RE.finditer(shapes_part):
-        total += _shape_bytes(sm.group(0))
-    return total
+    return sum(_shape_bytes(sm.group(0))
+               for sm in _SHAPE_RE.finditer(m.group("shapes")))
 
 
 @dataclasses.dataclass
@@ -68,15 +74,13 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
     bytes_by: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
     count_by: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
     for line in hlo_text.splitlines():
-        ls = line.strip()
         # match op instructions only (e.g. "%x = f32[..] all-reduce(...)"),
         # including -start/-done async forms (count starts only)
-        for kind in _COLLECTIVE_KINDS:
-            if re.search(rf"=\s*[^=]*\b{kind}(-start)?\(", ls):
-                b = _line_output_bytes(ls)
-                bytes_by[kind] += b
-                count_by[kind] += 1
-                break
+        m = _COLLECTIVE_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        bytes_by[m.group("kind")] += _line_output_bytes(line)
+        count_by[m.group("kind")] += 1
     return CollectiveStats(bytes_by, count_by)
 
 

@@ -1,0 +1,78 @@
+"""Golden-text tests for ``launch.hlo_analysis``'s collective parser.
+
+The parser reads post-SPMD HLO text, so these fixtures are verbatim
+HLO-shaped lines — including the nested-tuple and ``pred[]`` scalar
+outputs that the pre-PR-7 regex truncated at the first ``)``.
+"""
+from repro.launch.hlo_analysis import (_line_output_bytes, _shape_bytes,
+                                       collective_stats)
+
+
+def test_shape_bytes_basic():
+    assert _shape_bytes("f32[16,128]") == 16 * 128 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("s32[3,3]") == 36
+    assert _shape_bytes("not-a-shape") == 0
+
+
+def test_shape_bytes_scalar_pred():
+    # dims string is empty for scalars: one element, 1 byte for pred
+    assert _shape_bytes("pred[]") == 1
+    assert _shape_bytes("f32[]") == 4
+
+
+def test_line_bytes_plain():
+    line = "  %ar = f32[8]{0} all-reduce(%p), replica_groups={}"
+    assert _line_output_bytes(line) == 32
+
+
+def test_line_bytes_flat_tuple():
+    line = ("  %t = (f32[8]{0}, f32[4]{0}) all-reduce(%a, %b), "
+            "replica_groups={}")
+    assert _line_output_bytes(line) == 32 + 16
+
+
+def test_line_bytes_nested_tuple_with_pred():
+    # the old regex stopped at the first ')', dropping the inner tuple
+    line = ("  %t = (f32[8]{0}, (f32[4]{0}, pred[])) all-gather(%a, %b), "
+            "dimensions={0}")
+    assert _line_output_bytes(line) == 32 + 16 + 1
+
+
+def test_line_bytes_non_collective():
+    assert _line_output_bytes("  %x = f32[8]{0} add(%a, %b)") == 0
+
+
+GOLDEN = """\
+HloModule jit_epoch, input_output_alias={ {0}: (0, {}, may-alias) }
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8]{0} parameter(0)
+  %ar = f32[8]{0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = f32[8]{0} collective-permute(%ar), source_target_pairs={{0,1},{1,2}}
+  %ags = (f32[2]{0}, f32[8]{0}) all-gather-start(%p0), dimensions={0}
+  %agd = f32[8]{0} all-gather-done(%ags)
+  %rs = f32[2]{0} reduce-scatter(%ar), dimensions={0}, to_apply=%add
+  ROOT %out = f32[8]{0} add(%agd, %cp)
+}
+"""
+
+
+def test_collective_stats_golden():
+    stats = collective_stats(GOLDEN)
+    assert stats.count_by_kind["all-reduce"] == 1
+    assert stats.bytes_by_kind["all-reduce"] == 32
+    assert stats.count_by_kind["collective-permute"] == 1
+    # async pair: the -start is counted once, the -done is skipped
+    assert stats.count_by_kind["all-gather"] == 1
+    assert stats.bytes_by_kind["all-gather"] == 8 + 32
+    assert stats.count_by_kind["reduce-scatter"] == 1
+    assert stats.bytes_by_kind["reduce-scatter"] == 8
+    assert stats.count_by_kind["all-to-all"] == 0
+    assert stats.total_bytes == 32 + 32 + 40 + 8
+
+
+def test_collective_stats_ignores_plain_ops():
+    stats = collective_stats("%x = f32[1024]{0} add(%a, %b)\n")
+    assert stats.total_bytes == 0
+    assert sum(stats.count_by_kind.values()) == 0
