@@ -59,6 +59,7 @@ def main() -> None:
         "deep_pipelined": lambda: bench_engine.run_deep_pipelined(
             quick=args.quick),
         "faults": lambda: bench_engine.run_faults(quick=args.quick),
+        "guards": lambda: bench_engine.run_guards(quick=args.quick),
         "roofline": bench_roofline.run,
     }
     if args.ci:

@@ -4,7 +4,10 @@ Builds small fixture engines for every security mode and traces each
 shipped epoch entry point — linear and deep, SGD/SVRG/SAGA, multi-
 dominator, pipelined, delayed and faulted — through
 ``FusedEngine.party_program``, then runs the three analysis passes over
-the traces:
+the traces.  Guarded (health-telemetry) epochs lint like faulted ones —
+``membership=True`` so the finiteness quarantine's alive-set drops force
+mask re-keying, with the ``is_finite`` declassification rule
+(``repro.analysis.taint``) covering the health verdict itself:
 
 * leakage taint (``repro.analysis.taint``) on the per-party program,
   with the party's raw feature block (``local[0]``) as the taint source
@@ -108,6 +111,7 @@ class _Fixture:
         self.fwdq = jnp.ones((Q, STEPS), jnp.float32)
         self.bwdq = jnp.ones((Q, STEPS), jnp.float32)
         self.extraq = jnp.zeros((Q, STEPS), jnp.int32)
+        self.corruptq = jnp.zeros((Q, STEPS), jnp.int32)
         self._deep_pq = None
 
     @property
@@ -172,6 +176,13 @@ def _entries() -> List[Entry]:
                 BATCH, STEPS, TAU)
         )(fx.w, fx.buf)
 
+    def guarded_sgd(eng, fx):
+        return jax.make_jaxpr(
+            lambda w, b: eng.guarded_sgd_epoch(
+                w, b, 0, fx.delays, fx.fwdq, fx.bwdq, fx.extraq,
+                fx.corruptq, 0.1, k, BATCH, STEPS, TAU)
+        )(fx.w, fx.buf)
+
     def deep_sgd(eng, fx):
         return jax.make_jaxpr(
             lambda p: eng.deep_sgd_epoch(p, 0.05, k, BATCH, STEPS)
@@ -208,6 +219,14 @@ def _entries() -> List[Entry]:
                 BATCH, STEPS, TAU)
         )(fx.deep_pq, buf)
 
+    def deep_guarded_sgd(eng, fx):
+        buf = eng.deep_delay_buffers(fx.deep_pq, TAU)
+        return jax.make_jaxpr(
+            lambda p, b: eng.deep_guarded_sgd_epoch(
+                p, b, 0, fx.delays, fx.fwdq, fx.bwdq, fx.extraq,
+                fx.corruptq, 0.05, k, BATCH, STEPS, TAU)
+        )(fx.deep_pq, buf)
+
     return [
         Entry("sgd", sgd),
         Entry("svrg", svrg),
@@ -218,6 +237,8 @@ def _entries() -> List[Entry]:
         Entry(f"multi_delayed{TAU}", multi_delayed, tau=TAU),
         Entry(f"faulted_sgd{TAU}", faulted_sgd, tau=TAU, membership=True,
               gated=True),
+        Entry(f"guarded_sgd{TAU}_1", guarded_sgd, tau=TAU,
+              membership=True, gated=True),
         Entry("deep_sgd", deep_sgd),
         Entry("deep_multi_sgd", deep_multi_sgd),
         Entry("deep_svrg", deep_svrg),
@@ -225,11 +246,14 @@ def _entries() -> List[Entry]:
         Entry(f"deep_delayed{TAU}", deep_delayed, tau=TAU),
         Entry(f"deep_faulted_sgd{TAU}", deep_faulted_sgd, tau=TAU,
               membership=True, gated=True),
+        Entry(f"deep_guarded_sgd{TAU}_1", deep_guarded_sgd, tau=TAU,
+              membership=True, gated=True),
     ]
 
 
 #: entry names for the quick (test-sized) matrix
-QUICK = ("sgd", f"delayed{TAU}", f"faulted_sgd{TAU}", "deep_sgd")
+QUICK = ("sgd", f"delayed{TAU}", f"faulted_sgd{TAU}",
+         f"guarded_sgd{TAU}_1", "deep_sgd")
 
 
 def entry_names() -> List[str]:
@@ -277,6 +301,17 @@ def check_reports(reports: Sequence[EntryReport]) -> List[str]:
     errors: List[str] = []
     for r in reports:
         where = r.key
+        if ("faulted" in r.name or "guarded" in r.name) \
+                and not r.membership:
+            # membership-varying entry points (faulted schedules, the
+            # guarded health-quarantine epochs) must be analyzed under
+            # membership=True so boundary masks are required to re-key on
+            # the alive-set fingerprint — a guarded epoch whose quarantine
+            # drops a party but keeps the old mask streams is a replay
+            # oracle (PR 6's re-key rule extended to health-driven drops)
+            errors.append(f"{where}: membership-varying entry analyzed "
+                          f"without membership=True (masks not required "
+                          f"to be membership-keyed)")
         if r.secure == "off":
             if r.taint.get("unmasked-boundary", 0) < 1:
                 errors.append(

@@ -192,6 +192,27 @@ class _Analyzer:
             self.write(env, eqn.outvars[0], union)
             return
 
+        if name == "is_finite":
+            # Declassification: the finiteness verdict of a party-private
+            # value is protocol-public.  Boundary values are masked
+            # *additively* (masked = z + δ with finite δ), so the masked
+            # message is non-finite iff the raw partial is — every
+            # aggregator already learns ``isfinite(z)`` from the message
+            # it legitimately receives.  The guarded epochs' health flags
+            # (``jnp.isfinite(zc)`` → liveness quarantine → alive-set
+            # fingerprint) therefore drop taint here; stream and axis
+            # provenance still propagate so a fingerprint derived from the
+            # verdict keeps its membership pedigree.  Caveat (same stance
+            # as the module docstring): a program that deliberately
+            # *encodes* secret bits as inf/NaN patterns before calling
+            # is_finite would launder them past this rule — the shipped
+            # protocols only ever take finiteness of raw forward messages.
+            out = Props(False, union.streams, union.party_dep,
+                        union.alive_dep)
+            for v in eqn.outvars:
+                self.write(env, v, out)
+            return
+
         if name == "random_bits":
             # a fresh PRNG stream; its quality flags come from the key's
             # provenance (fold_in(axis_index) => party-distinct;

@@ -8,26 +8,71 @@ one, never a torn write.  This is the property the preemption-safe
 ``train(..., resume_from=...)`` path relies on: killing a trainer at any
 instant leaves a loadable checkpoint behind.
 
-Layout: ``<path>/checkpoint.npz`` holding every leaf (keyed by its pytree
-key-path) plus a ``__manifest__`` JSON entry recording the step counter,
-the treedef string, and the key list.  ``load_checkpoint`` validates both
-the manifest treedef and every leaf shape against the ``like`` template,
-raising ``ValueError`` naming the offending key on mismatch.  The legacy
-two-file layout (``arrays.npz`` + ``manifest.json``) is still readable.
+Layout: a **retention ring** of per-step bundles
+``<path>/checkpoint-{step:08d}.npz``, each holding every leaf (keyed by
+its pytree key-path) plus a ``__manifest__`` JSON entry recording the step
+counter, the treedef string, and the key list.  ``save_checkpoint`` keeps
+the newest ``keep_last`` bundles (default 1 — the pre-ring disk
+footprint) and garbage-collects older ones only after the new bundle is
+durably in place, so a reader never observes an empty directory.  The
+supervisor's divergence rollback (``core.supervisor``) sets
+``keep_last > 1`` and loads a specific earlier step with
+``load_checkpoint(path, like, step=...)``.
+
+``load_checkpoint`` validates both the manifest treedef and every leaf
+shape against the ``like`` template, raising ``ValueError`` naming the
+offending key on mismatch.  Legacy layouts — the single fixed-name
+``checkpoint.npz`` bundle and the two-file ``arrays.npz`` +
+``manifest.json`` form — are still readable.
 """
 from __future__ import annotations
 
 import io
 import json
 import os
+import re
 import tempfile
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-_BUNDLE = "checkpoint.npz"
+_BUNDLE = "checkpoint.npz"          # legacy fixed-name bundle
 _MANIFEST_KEY = "__manifest__"
+_STEP_RE = re.compile(r"^checkpoint-(\d{8})\.npz$")
+
+
+def _step_bundle(step: int) -> str:
+    return f"checkpoint-{step:08d}.npz"
+
+
+def checkpoint_steps(path: str) -> List[int]:
+    """Sorted step numbers of the per-step bundles under ``path``."""
+    if not os.path.isdir(path):
+        return []
+    steps = []
+    for name in os.listdir(path):
+        m = _STEP_RE.match(name)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_checkpoint(path: str) -> Optional[str]:
+    """Path of the newest checkpoint bundle under ``path`` (or ``None``).
+
+    Prefers the per-step ring; falls back to the legacy fixed-name bundle
+    so pre-ring checkpoint directories keep resolving.
+    """
+    steps = checkpoint_steps(path)
+    if steps:
+        return os.path.join(path, _step_bundle(steps[-1]))
+    legacy = os.path.join(path, _BUNDLE)
+    if os.path.exists(legacy):
+        return legacy
+    if os.path.exists(os.path.join(path, "arrays.npz")):
+        return os.path.join(path, "arrays.npz")
+    return None
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -37,8 +82,15 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
-def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
-    """Atomically write ``tree`` under ``path`` (a checkpoint directory)."""
+def save_checkpoint(path: str, tree: Any, step: int = 0,
+                    keep_last: Optional[int] = 1) -> None:
+    """Atomically write ``tree`` as the step-``step`` bundle under ``path``.
+
+    After the bundle is durably in place, bundles older than the newest
+    ``keep_last`` are unlinked (per-file unlink is atomic; a concurrent
+    reader sees either the old ring or the pruned one, never a torn
+    bundle).  ``keep_last=None`` keeps everything.
+    """
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
     treedef = jax.tree_util.tree_structure(tree)
@@ -55,38 +107,86 @@ def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
             f.write(buf.getvalue())
             f.flush()
             os.fsync(f.fileno())
-        os.replace(tmp, os.path.join(path, _BUNDLE))
+        os.replace(tmp, os.path.join(path, _step_bundle(int(step))))
     except BaseException:
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
+    # a pre-ring fixed-name bundle is superseded the moment a ring bundle
+    # exists; drop it so latest_checkpoint can't resolve stale state
+    legacy = os.path.join(path, _BUNDLE)
+    if os.path.exists(legacy):
+        os.unlink(legacy)
+    if keep_last is not None:
+        if keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+        for s in checkpoint_steps(path)[:-keep_last]:
+            try:
+                os.unlink(os.path.join(path, _step_bundle(s)))
+            except FileNotFoundError:
+                pass                # concurrent GC already got it
 
 
-def _read_bundle(path: str) -> Tuple[Any, Optional[dict]]:
-    """Return (npz data, manifest dict or None); handles both layouts."""
-    bundle = os.path.join(path, _BUNDLE)
-    if os.path.exists(bundle):
-        data = np.load(bundle)
-        manifest = json.loads(bytes(data[_MANIFEST_KEY]).decode())
+def discard_after(path: str, step: int) -> None:
+    """Unlink every ring bundle NEWER than ``step`` (rollback helper).
+
+    After a divergence rollback the supervisor re-trains from ``step``;
+    later bundles record the diverged trajectory and must not win a
+    subsequent ``latest_checkpoint`` resolution.
+    """
+    for s in checkpoint_steps(path):
+        if s > step:
+            try:
+                os.unlink(os.path.join(path, _step_bundle(s)))
+            except FileNotFoundError:
+                pass
+
+
+def _read_bundle(path: str,
+                 step: Optional[int] = None) -> Tuple[Any, Optional[dict]]:
+    """Return (npz data, manifest dict or None); handles every layout.
+
+    ``path`` may be a checkpoint directory (newest ring bundle, or the
+    ``step``-specific one when given) or a direct bundle file path.
+    """
+    if os.path.isfile(path):
+        data = np.load(path)
+        manifest = None
+        if _MANIFEST_KEY in data:
+            manifest = json.loads(bytes(data[_MANIFEST_KEY]).decode())
         return data, manifest
-    # legacy layout: arrays.npz + manifest.json (pre-atomic checkpoints)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    manifest = None
-    mpath = os.path.join(path, "manifest.json")
-    if os.path.exists(mpath):
-        with open(mpath) as f:
-            manifest = json.load(f)
-    return data, manifest
+    if step is not None:
+        bundle = os.path.join(path, _step_bundle(int(step)))
+        if not os.path.exists(bundle):
+            raise ValueError(
+                f"no step-{step} checkpoint under {path!r} "
+                f"(have steps {checkpoint_steps(path)})")
+        return _read_bundle(bundle)
+    newest = latest_checkpoint(path)
+    if newest is None:
+        raise FileNotFoundError(f"no checkpoint bundle under {path!r}")
+    if os.path.basename(newest) == "arrays.npz":
+        # legacy two-file layout: arrays.npz + manifest.json
+        data = np.load(newest)
+        manifest = None
+        mpath = os.path.join(path, "manifest.json")
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                manifest = json.load(f)
+        return data, manifest
+    return _read_bundle(newest)
 
 
-def load_checkpoint(path: str, like: Any) -> Any:
+def load_checkpoint(path: str, like: Any, step: Optional[int] = None) -> Any:
     """Restore a pytree shaped ``like`` from ``path``.
 
+    ``path`` may be a checkpoint directory or a bundle file;
+    ``step=`` selects a specific ring bundle (default: the newest).
     Raises ``ValueError`` naming the mismatched key when a stored leaf's
     shape disagrees with the template, when a key is missing, or when the
     manifest's treedef disagrees with ``like``'s structure.
     """
-    data, manifest = _read_bundle(path)
+    data, manifest = _read_bundle(path, step)
     leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)
     if manifest is not None and "treedef" in manifest \
@@ -108,8 +208,8 @@ def load_checkpoint(path: str, like: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def checkpoint_step(path: str) -> int:
-    _, manifest = _read_bundle(path)
+def checkpoint_step(path: str, step: Optional[int] = None) -> int:
+    _, manifest = _read_bundle(path, step)
     if manifest is None:
         raise ValueError(f"checkpoint at {path!r} has no manifest")
     return manifest["step"]

@@ -461,6 +461,9 @@ class TrainResult:
     # deep (nonlinear-encoder) runs carry the full DeepVFLParams here;
     # ``w`` is then the shared head vector (the active parties' model)
     params: object = None
+    # supervised runs (supervise=True) record every divergence rollback
+    # here (core.supervisor.HealEvent dicts); empty list = no heals
+    heals: Optional[List[dict]] = None
 
 
 def _eval(problem, w, x, y):
@@ -503,6 +506,10 @@ def train(
     deep_params=None,           # deep: DeepVFLParams warm start (w0 analogue)
     checkpoint_dir: Optional[str] = None,  # atomic per-epoch checkpoints
     resume_from: Optional[str] = None,     # bit-exact preemption resume
+    keep_last: Optional[int] = 1,          # checkpoint ring depth
+    supervise: bool = False,               # divergence rollback supervisor
+    supervisor_config=None,    # core.supervisor.SupervisorConfig
+    horizon_epochs: Optional[int] = None,  # objs allocation horizon
 ) -> TrainResult:
     """``checkpoint_dir=`` atomically checkpoints the FULL trainer state
     after every epoch (iterate, RNG key, objective history — plus SAGA's
@@ -510,7 +517,25 @@ def train(
     killed at any instant resumes from the last epoch boundary and is
     **bit-exact** vs the uninterrupted run: each epoch is a deterministic
     function of the checkpointed state, and the checkpoint write itself is
-    atomic (see ``checkpoint.ckpt``)."""
+    atomic (see ``checkpoint.ckpt``).  ``keep_last=`` sets the retention
+    ring depth (older bundles are GC'd after each save; None keeps all).
+
+    ``supervise=True`` hands the run to ``core.supervisor``: training
+    proceeds in ring-depth segments, the objective trajectory is watched
+    for divergence (non-finite or spike over a trailing window), and a
+    diverged run is rolled back to the last healthy checkpoint with the
+    learning rate backed off, under a bounded retry budget.  Requires
+    ``checkpoint_dir=``; rollback events ride ``result.heals``."""
+    if supervise:
+        from repro.core.supervisor import supervised_train  # lazy: cycle
+        return supervised_train(
+            problem, x, y, layout, algo=algo, epochs=epochs, lr=lr,
+            batch=batch, seed=seed, active_only=active_only, w0=w0,
+            engine=engine, engine_config=engine_config,
+            multi_dominator=multi_dominator, pipelined=pipelined,
+            deep=deep, hidden=hidden, d_rep=d_rep,
+            deep_params=deep_params, checkpoint_dir=checkpoint_dir,
+            config=supervisor_config)
     n, d = x.shape
     m = layout.m
     if deep:
@@ -520,12 +545,13 @@ def train(
         return _train_deep(problem, x, y, layout, algo, epochs, lr, batch,
                            seed, active_only, engine, engine_config,
                            multi_dominator, pipelined, hidden, d_rep,
-                           deep_params, checkpoint_dir, resume_from)
+                           deep_params, checkpoint_dir, resume_from,
+                           keep_last, horizon_epochs)
     if engine == "fused":
         return _train_fused(problem, x, y, layout, algo, epochs, lr, batch,
                             seed, active_only, w0, engine_config,
                             multi_dominator, pipelined, checkpoint_dir,
-                            resume_from)
+                            resume_from, keep_last, horizon_epochs)
     if engine != "reference":
         raise ValueError(f"unknown engine {engine}")
     from repro.checkpoint.ckpt import (checkpoint_step, load_checkpoint,
@@ -542,7 +568,7 @@ def train(
         theta_tab = problem.theta(x @ w, y)          # Alg. 6 step 2 (init pass)
         avg = x.T @ theta_tab / n
 
-    objs = np.full(epochs, np.nan)
+    objs = np.full(max(horizon_epochs or 0, epochs), np.nan)
 
     def _state():
         st = {"w": np.asarray(w), "key": np.asarray(key),
@@ -603,14 +629,16 @@ def train(
                      "algo": algo})
         objs[ep] = hist[-1]["objective"]
         if checkpoint_dir is not None:
-            save_checkpoint(checkpoint_dir, _state(), step=ep + 1)
+            save_checkpoint(checkpoint_dir, _state(), step=ep + 1,
+                            keep_last=keep_last)
     return TrainResult(w=np.asarray(w), history=hist)
 
 
 def _train_deep(problem, x, y, layout, algo, epochs, lr, batch, seed,
                 active_only, engine, engine_config, multi_dominator,
                 pipelined, hidden, d_rep, deep_params,
-                checkpoint_dir=None, resume_from=None) -> TrainResult:
+                checkpoint_dir=None, resume_from=None, keep_last=1,
+                horizon_epochs=None) -> TrainResult:
     """Deep VFB² routing: nonlinear party-local encoders (``core.deep_vfl``
     is the sequential oracle; the fused engine's ``deep_*_epoch`` methods
     the hot path).  ``active_only=True`` freezes passive encoders (the
@@ -628,7 +656,8 @@ def _train_deep(problem, x, y, layout, algo, epochs, lr, batch, seed,
             batch=batch, seed=seed, hidden=hidden, d_rep=d_rep,
             freeze_passive=active_only, params=deep_params,
             multi_dominator=multi_dominator, pipelined=pipelined,
-            checkpoint_dir=checkpoint_dir, resume_from=resume_from)
+            checkpoint_dir=checkpoint_dir, resume_from=resume_from,
+            keep_last=keep_last, horizon_epochs=horizon_epochs)
         hist = [{"epoch": i + 1, "objective": o, "algo": f"deep_{algo}"}
                 for i, o in enumerate(objs)]
         return TrainResult(w=np.asarray(params.head), history=hist,
@@ -639,14 +668,15 @@ def _train_deep(problem, x, y, layout, algo, epochs, lr, batch, seed,
                              batch, seed, active_only, engine_config,
                              hidden, d_rep, deep_params,
                              multi_dominator, pipelined, checkpoint_dir,
-                             resume_from)
+                             resume_from, keep_last, horizon_epochs)
 
 
 def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
                       active_only, engine_config, hidden, d_rep,
                       deep_params=None, multi_dominator=False,
                       pipelined=False, checkpoint_dir=None,
-                      resume_from=None) -> TrainResult:
+                      resume_from=None, keep_last=1,
+                      horizon_epochs=None) -> TrainResult:
     """Deep hot-path trainer: every nonlinear epoch is ONE device dispatch
     (encoder forward, masked secure aggregation of the (B, d_rep) vector
     partials, ϑ_z = ϑ_logit·head BUM broadcast, and Jacobian-transpose
@@ -681,7 +711,7 @@ def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
         svrg_epoch = eng.deep_pipelined_svrg_epoch if pipelined \
             else eng.deep_svrg_epoch
     hist = []
-    objs = np.full(epochs, np.nan)
+    objs = np.full(max(horizon_epochs or 0, epochs), np.nan)
 
     def _state():
         return {"pq": jax.tree_util.tree_map(np.asarray, pq),
@@ -706,7 +736,8 @@ def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
                      "algo": f"deep_{algo}", "engine": "fused"})
         objs[ep] = hist[-1]["objective"]
         if checkpoint_dir is not None:
-            save_checkpoint(checkpoint_dir, _state(), step=ep + 1)
+            save_checkpoint(checkpoint_dir, _state(), step=ep + 1,
+                            keep_last=keep_last)
     params = eng.unpack_deep(pq)
     return TrainResult(w=np.asarray(params.head), history=hist,
                        params=params)
@@ -715,7 +746,8 @@ def _train_deep_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
 def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
                  active_only, w0, engine_config,
                  multi_dominator=False, pipelined=False,
-                 checkpoint_dir=None, resume_from=None) -> TrainResult:
+                 checkpoint_dir=None, resume_from=None, keep_last=1,
+                 horizon_epochs=None) -> TrainResult:
     """Hot-path trainer: every epoch is ONE device dispatch (secure
     aggregation, ϑ, and BUM updates all inside the compiled program).
     ``multi_dominator=True`` routes through the engine's m-active-party
@@ -740,7 +772,7 @@ def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
     if algo == "saga":
         tabq, avgq = eng.saga_init(wq, key)
 
-    objs = np.full(epochs, np.nan)
+    objs = np.full(max(horizon_epochs or 0, epochs), np.nan)
 
     def _state():
         st = {"wq": np.asarray(wq), "key": np.asarray(key),
@@ -796,7 +828,8 @@ def _train_fused(problem, x, y, layout, algo, epochs, lr, batch, seed,
                      "algo": algo, "engine": "fused"})
         objs[ep] = hist[-1]["objective"]
         if checkpoint_dir is not None:
-            save_checkpoint(checkpoint_dir, _state(), step=ep + 1)
+            save_checkpoint(checkpoint_dir, _state(), step=ep + 1,
+                            keep_last=keep_last)
     return TrainResult(w=eng.unpack_w(wq), history=hist)
 
 

@@ -69,6 +69,33 @@ class AsyncResult:
 
 
 @dataclasses.dataclass
+class TransportKnobs:
+    """Timing constants of the thread transport, hoisted into knobs.
+
+    The defaults are the historical hard-coded values; chaos tests
+    tighten them to make delivery failures (and therefore realized
+    ``drop_msg`` events) deterministic instead of racing the scheduler.
+
+    * ``put_timeout`` — per-attempt inbox put timeout on the no-fault
+      path (the bounded-τ₂ blocking retry loop re-arms on expiry);
+    * ``get_timeout`` — collaborator inbox poll timeout;
+    * ``crashed_poll`` — a crashed dominator's idle re-check period;
+    * ``frozen_poll`` — a crashed collaborator's idle re-check period.
+    """
+
+    put_timeout: float = 0.05
+    get_timeout: float = 0.05
+    crashed_poll: float = 0.005
+    frozen_poll: float = 0.002
+
+    def validate(self) -> None:
+        for name in ("put_timeout", "get_timeout", "crashed_poll",
+                     "frozen_poll"):
+            if getattr(self, name) <= 0:
+                raise ValueError(f"TransportKnobs.{name} must be > 0")
+
+
+@dataclasses.dataclass
 class ThreadFaultPlan:
     """Fault injection for the thread simulation.
 
@@ -170,6 +197,7 @@ def run_async(
     secure: bool = True,
     max_wall: float = 120.0,
     fault_plan: Optional[ThreadFaultPlan] = None,
+    transport: Optional[TransportKnobs] = None,
 ) -> AsyncResult:
     """Run VFB² asynchronously until ``total_epochs`` sample-passes happen.
 
@@ -204,6 +232,8 @@ def run_async(
     ev_lock = threading.Lock()
     if fault_plan is not None:
         fault_plan.validate(layout)
+    knobs = transport if transport is not None else TransportKnobs()
+    knobs.validate()
 
     def cur_step() -> int:
         return min(shared.update_count // q, steps_total - 1)
@@ -248,7 +278,7 @@ def run_async(
         if fault_plan is None:
             while not stop.is_set():
                 try:  # bounded inboxes = bounded communication delay τ₂
-                    inboxes[p].put(msg, timeout=0.05)
+                    inboxes[p].put(msg, timeout=knobs.put_timeout)
                     return
                 except queue.Full:
                     continue
@@ -270,7 +300,7 @@ def run_async(
         rng = np.random.default_rng(seed + 1000 + a)
         while not stop.is_set():
             if down[a].is_set():        # crashed dominator: fully silent
-                time.sleep(0.005)
+                time.sleep(knobs.crashed_poll)
                 continue
             ib = rng.integers(0, n, size=batch)
             w_hat = shared.read_inconsistent()
@@ -300,10 +330,10 @@ def run_async(
         lo, hi = layout.bounds[p]
         while not stop.is_set():
             if down[p].is_set():        # crashed party: block frozen
-                time.sleep(0.002)
+                time.sleep(knobs.frozen_poll)
                 continue
             try:
-                theta, ib = inboxes[p].get(timeout=0.05)
+                theta, ib = inboxes[p].get(timeout=knobs.get_timeout)
             except queue.Empty:
                 continue
             time.sleep(base_delay * speed_factors[p])

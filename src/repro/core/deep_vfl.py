@@ -327,7 +327,9 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
                    params: DeepVFLParams | None = None, algo: str = "sgd",
                    multi_dominator: bool = False, pipelined: bool = False,
                    checkpoint_dir: str | None = None,
-                   resume_from: str | None = None):
+                   resume_from: str | None = None,
+                   keep_last: int | None = 1,
+                   horizon_epochs: int | None = None):
     """BUM training of the deep VFL model (the sequential oracle).
 
     Gradients are computed the protocol way: ϑ_logit at the active party,
@@ -367,7 +369,7 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
     steps = max(1, n // batch)
     kw = dict(problem=problem, freeze=freeze_passive, m=m, q=q, mdom=mm)
     hist = []
-    objs = np.full(epochs, np.nan)
+    objs = np.full(max(horizon_epochs or 0, epochs), np.nan)
 
     def _state():
         return {"pt": jax.tree_util.tree_map(np.asarray, pt),
@@ -416,7 +418,8 @@ def train_deep_vfl(problem: Problem, x: np.ndarray, y: np.ndarray,
         hist.append(_objective(problem, params, blocks, yj))
         objs[ep] = hist[-1]
         if checkpoint_dir is not None:
-            save_checkpoint(checkpoint_dir, _state(), step=ep + 1)
+            save_checkpoint(checkpoint_dir, _state(), step=ep + 1,
+                            keep_last=keep_last)
     params = _to_params(pt)
     return params, hist
 

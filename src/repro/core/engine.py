@@ -122,6 +122,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.algorithms import PartyLayout, _batch_indices
+from repro.core.faults import HealthStats, apply_corruption
 from repro.core.losses import Problem
 from repro.core.secure_agg import (secure_psum, secure_psum_members,
                                    secure_psum_ring,
@@ -1157,6 +1158,238 @@ class FusedEngine:
             self.xs, wq, tabq, avgq, bufq, delays_q, fwdq, bwdq, extraq,
             self.maskq, self.y, lr, key, t0, batch, steps)
         return wq, tabq, avgq, bufq, t0 + steps
+
+    # -- guarded epochs (corrupt-value faults + in-graph health telemetry) ----
+    #
+    # The faulted epochs with one more per-step channel (``corruptq``,
+    # (q, steps) int32 codes — see ``faults.apply_corruption``) and a
+    # static ``guard`` flag.  Each step corrupts the party's forward
+    # partial BEFORE aggregation, computes a finiteness verdict, and —
+    # when guarding — quarantines a non-finite party through the same
+    # membership machinery as a crash: the sanitized partial (zeroed; a
+    # masked NaN would re-poison via 0·NaN) enters ``_agg_members`` with
+    # the shrunken alive-set, whose gathered fingerprint re-keys the
+    # per-step masks (Definition 4 holds over the healthy survivors).
+    # Quarantine is forward-only: the party still receives ϑ, writes its
+    # ring, and applies.  Per-step HealthStats (finiteness, effective
+    # liveness, partial/direction norms) accumulate as scan outputs —
+    # entirely in-graph, zero mid-epoch host transfers, still ONE
+    # dispatch per epoch (the guards bench audits the jaxpr).  The
+    # finiteness verdict itself is protocol-public (additive masks can't
+    # hide a NaN/Inf: the masked value is non-finite iff the raw one
+    # is), which is exactly the declassification ``analysis.taint``
+    # grants ``is_finite`` — see that module's docstring.
+
+    def _guard_fwd(self, z, cc, fl, guard: bool):
+        """Corrupt, verdict, sanitize: the guarded epochs' shared
+        forward-side step.  Returns (shippable partial, healthy flag,
+        effective forward liveness)."""
+        zc = apply_corruption(z, cc)
+        healthy = jnp.all(jnp.isfinite(zc)).astype(z.dtype)
+        if guard:
+            live = fl * healthy
+            zs = jnp.where(healthy > 0, zc, jnp.zeros_like(zc))
+        else:
+            live, zs = fl, zc
+        return zs, zc, healthy, live
+
+    def guarded_sgd_epoch(self, wq, bufq, t0, delays_q, fwdq, bwdq,
+                          extraq, corruptq, lr, key, batch: int,
+                          steps: int, tau: int, guard: bool = True):
+        """Guarded VFB²-SGD epoch: corrupt-value injection, finiteness
+        quarantine (``guard=True``), and health telemetry on the faulted
+        epoch's membership machinery.  Returns
+        ``(wq, bufq, t0', HealthStats)``; pinned against
+        ``faults.guarded_sgd_epoch`` at 1e-5."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, wp, buf, delay, fwd_p, bwd_p, extra_p, corr_p,
+                 maskp) = local
+                y, lr, idx, mkeys, t0 = shared
+
+                def body(carry, inp):
+                    wp, buf, t = carry
+                    ib, kt, fl, bl, ex, cc = inp
+                    xb = xp[ib]
+                    z = self._fwd(xb, wp[:, None])[:, 0]
+                    zs, zc, healthy, live = self._guard_fwd(z, cc, fl,
+                                                            guard)
+                    agg = self._agg_members(zs, kt, live)
+                    theta = prob.theta(agg, y[ib])
+                    g = self._bwd(xb, theta[:, None], ib.shape[0])[:, 0] \
+                        + prob.lam * prob.reg_grad(wp)
+                    slot = t % (tau + 1)
+                    put = jax.lax.dynamic_update_index_in_dim(buf, g, slot,
+                                                              0)
+                    buf = jnp.where(bl > 0, put, buf)
+                    eff = jnp.maximum(t - (delay + ex), 0) % (tau + 1)
+                    stale = jax.lax.dynamic_index_in_dim(buf, eff, 0,
+                                                         keepdims=False)
+                    hs = (healthy, live, jnp.max(jnp.abs(zc)),
+                          jnp.max(jnp.abs(g)))
+                    return (wp - lr * bl * maskp * stale, buf, t + 1), hs
+
+                (wp, buf, _), hs = jax.lax.scan(
+                    body, (wp, buf, t0),
+                    (idx, mkeys, fwd_p, bwd_p, extra_p, corr_p))
+                return wp, buf, hs
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate("wq", "bufq"))
+            def epoch(xs, wq, bufq, delays_q, fwdq, bwdq, extraq,
+                      corruptq, maskq, y, lr, key, t0, batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                return mapped((xs, wq, bufq, delays_q, fwdq, bwdq, extraq,
+                               corruptq, maskq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        wq, bufq, hs = self._epoch(
+            f"guarded_sgd{tau}_{int(bool(guard))}", build)(
+            self.xs, wq, bufq, delays_q, fwdq, bwdq, extraq, corruptq,
+            self.maskq, self.y, lr, key, t0, batch, steps)
+        return wq, bufq, t0 + steps, HealthStats(*hs)
+
+    def guarded_svrg_epoch(self, wq, wq_snap, muq, bufq, t0, delays_q,
+                           fwdq, bwdq, extraq, corruptq, lr, key,
+                           batch: int, steps: int, tau: int,
+                           guard: bool = True):
+        """Guarded VFB²-SVRG inner loop: the party's forward message is
+        both partial columns (iterate + snapshot) — one corrupt code
+        rewrites both and the finiteness verdict covers both, so a
+        party is healthy only if its whole message is."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, wp, wsp, mup, buf, delay, fwd_p, bwd_p, extra_p,
+                 corr_p, maskp) = local
+                y, lr, idx, mkeys, t0 = shared
+
+                def body(carry, inp):
+                    wp, buf, t = carry
+                    ib, kt, fl, bl, ex, cc = inp
+                    xb = xp[ib]
+                    z = self._fwd(xb, jnp.stack([wp, wsp], axis=1))
+                    zs, zc, healthy, live = self._guard_fwd(z, cc, fl,
+                                                            guard)
+                    agg = self._agg_members(zs, kt, live)
+                    th1 = prob.theta(agg[:, 0], y[ib])
+                    th0 = prob.theta(agg[:, 1], y[ib])
+                    gg = self._bwd(xb, jnp.stack([th1, th0], axis=1),
+                                   ib.shape[0])
+                    g1 = gg[:, 0] + prob.lam * prob.reg_grad(wp)
+                    g0 = gg[:, 1] + prob.lam * prob.reg_grad(wsp)
+                    v = g1 - g0 + mup
+                    slot = t % (tau + 1)
+                    put = jax.lax.dynamic_update_index_in_dim(buf, v, slot,
+                                                              0)
+                    buf = jnp.where(bl > 0, put, buf)
+                    eff = jnp.maximum(t - (delay + ex), 0) % (tau + 1)
+                    stale = jax.lax.dynamic_index_in_dim(buf, eff, 0,
+                                                         keepdims=False)
+                    hs = (healthy, live, jnp.max(jnp.abs(zc)),
+                          jnp.max(jnp.abs(v)))
+                    return (wp - lr * bl * maskp * stale, buf, t + 1), hs
+
+                (wp, buf, _), hs = jax.lax.scan(
+                    body, (wp, buf, t0),
+                    (idx, mkeys, fwd_p, bwd_p, extra_p, corr_p))
+                return wp, buf, hs
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, wq, wq_snap, muq, bufq, delays_q, fwdq, bwdq,
+                      extraq, corruptq, maskq, y, lr, key, t0, batch,
+                      steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                return mapped((xs, wq, wq_snap, muq, bufq, delays_q, fwdq,
+                               bwdq, extraq, corruptq, maskq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        wq, bufq, hs = self._epoch(
+            f"guarded_svrg{tau}_{int(bool(guard))}", build)(
+            self.xs, wq, wq_snap, muq, bufq, delays_q, fwdq, bwdq, extraq,
+            corruptq, self.maskq, self.y, lr, key, t0, batch, steps)
+        return wq, bufq, t0 + steps, HealthStats(*hs)
+
+    def guarded_saga_epoch(self, wq, tabq, avgq, bufq, t0, delays_q, fwdq,
+                           bwdq, extraq, corruptq, lr, key, batch: int,
+                           steps: int, tau: int, guard: bool = True):
+        """Guarded VFB²-SAGA: the faulted epoch's state-freshness split
+        (ϑ̃ table always fresh, per-party average gated by backward
+        liveness) with the corrupt channel on the forward partial."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, wp, tab, avgp, buf, delay, fwd_p, bwd_p, extra_p,
+                 corr_p, maskp) = local
+                y, lr, idx, mkeys, t0 = shared
+                n = y.shape[0]
+
+                def body(carry, inp):
+                    wp, tab, avgp, buf, t = carry
+                    ib, kt, fl, bl, ex, cc = inp
+                    xb = xp[ib]
+                    z = self._fwd(xb, wp[:, None])[:, 0]
+                    zs, zc, healthy, live = self._guard_fwd(z, cc, fl,
+                                                            guard)
+                    agg = self._agg_members(zs, kt, live)
+                    th_new = prob.theta(agg, y[ib])
+                    dth = (th_new - tab[ib])[:, None]
+                    raw = self._bwd(xb, dth, 1)[:, 0]
+                    v = raw / ib.shape[0] + avgp \
+                        + prob.lam * prob.reg_grad(wp)
+                    slot = t % (tau + 1)
+                    put = jax.lax.dynamic_update_index_in_dim(buf, v, slot,
+                                                              0)
+                    buf = jnp.where(bl > 0, put, buf)
+                    eff = jnp.maximum(t - (delay + ex), 0) % (tau + 1)
+                    stale = jax.lax.dynamic_index_in_dim(buf, eff, 0,
+                                                         keepdims=False)
+                    wp = wp - lr * bl * maskp * stale
+                    avgp = avgp + bl * raw / n      # private: frozen out
+                    tab = tab.at[ib].set(th_new)    # shared: always fresh
+                    hs = (healthy, live, jnp.max(jnp.abs(zc)),
+                          jnp.max(jnp.abs(v)))
+                    return (wp, tab, avgp, buf, t + 1), hs
+
+                (wp, tab, avgp, buf, _), hs = jax.lax.scan(
+                    body, (wp, tab, avgp, buf, t0),
+                    (idx, mkeys, fwd_p, bwd_p, extra_p, corr_p))
+                return wp, tab, avgp, buf, hs
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate(
+                                   "wq", "tabq", "avgq", "bufq"))
+            def epoch(xs, wq, tabq, avgq, bufq, delays_q, fwdq, bwdq,
+                      extraq, corruptq, maskq, y, lr, key, t0, batch,
+                      steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                return mapped((xs, wq, tabq, avgq, bufq, delays_q, fwdq,
+                               bwdq, extraq, corruptq, maskq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        wq, tabq, avgq, bufq, hs = self._epoch(
+            f"guarded_saga{tau}_{int(bool(guard))}", build)(
+            self.xs, wq, tabq, avgq, bufq, delays_q, fwdq, bwdq, extraq,
+            corruptq, self.maskq, self.y, lr, key, t0, batch, steps)
+        return wq, tabq, avgq, bufq, t0 + steps, HealthStats(*hs)
 
     def multi_delayed_sgd_epoch(self, wq, bufq, t0, delays_qm, lr, key,
                                 batch: int, steps: int, tau: int):
@@ -2238,6 +2471,227 @@ class FusedEngine:
             self.maskq, self.trainq, self.y, lr, key, t0, batch, steps)
         return pq, bufq, t0 + steps
 
+    # -- deep guarded epochs (corrupt-value faults + health telemetry) --------
+
+    def deep_guarded_sgd_epoch(self, pq, bufq, t0, delays_q, fwdq, bwdq,
+                               extraq, corruptq, lr, key, batch: int,
+                               steps: int, tau: int, guard: bool = True):
+        """Guarded deep VFB²-SGD: the corrupt channel rewrites the
+        party's (B, d_rep) vector partial before the survivor
+        aggregation; ``guard=True`` quarantines a non-finite partial
+        exactly like the linear guarded epochs (sanitize + drop from
+        the step's alive-set, masks re-key on the healthy survivors).
+        Returns ``(pq, bufq, t0', HealthStats)``; pinned against
+        ``faults.run_deep_guarded_reference`` at 1e-5."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, w1, b1, w2, head, bw1, bb1, bw2, delay, fwd_p,
+                 bwd_p, extra_p, corr_p, maskp, trainp) = local
+                y, lr, idx, mkeys, t0 = shared
+
+                def body(carry, inp):
+                    w1, b1, w2, head, bw1, bb1, bw2, t = carry
+                    ib, kt, fl, bl, ex, cc = inp
+                    xb = xp[ib]
+                    yb = y[ib]
+                    bsz = yb.shape[0]
+                    h = jnp.tanh(self._fwd(xb, w1) + b1)
+                    hr = self._fwd(h, w2)
+                    zs, zc, healthy, live = self._guard_fwd(hr, cc, fl,
+                                                            guard)
+                    z = self._agg_members(zs, kt, live)
+                    th_l = prob.theta(z @ head, yb) / bsz
+                    th_z = th_l[:, None] * head
+                    g_head = z.T @ th_l + prob.lam * prob.reg_grad(head)
+                    g_w2 = self._bwd(h, th_z, 1) \
+                        + prob.lam * prob.reg_grad(w2)
+                    du = (th_z @ w2.T) * (1.0 - h * h)
+                    g_w1 = self._bwd(xb, du, 1) \
+                        + prob.lam * prob.reg_grad(w1)
+                    g_b1 = du.sum(axis=0) + prob.lam * prob.reg_grad(b1)
+                    slot = t % (tau + 1)
+                    bw1 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bw1, g_w1,
+                                                            slot, 0), bw1)
+                    bb1 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bb1, g_b1,
+                                                            slot, 0), bb1)
+                    bw2 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bw2, g_w2,
+                                                            slot, 0), bw2)
+                    eff = jnp.maximum(t - (delay + ex), 0) % (tau + 1)
+                    s_w1 = jax.lax.dynamic_index_in_dim(bw1, eff, 0,
+                                                        keepdims=False)
+                    s_b1 = jax.lax.dynamic_index_in_dim(bb1, eff, 0,
+                                                        keepdims=False)
+                    s_w2 = jax.lax.dynamic_index_in_dim(bw2, eff, 0,
+                                                        keepdims=False)
+                    w1 = w1 - lr * bl * maskp[:, None] * s_w1
+                    b1 = b1 - lr * bl * trainp * s_b1
+                    w2 = w2 - lr * bl * trainp * s_w2
+                    head = head - lr * g_head       # dominator-fresh
+                    gnorm = jnp.maximum(
+                        jnp.maximum(jnp.max(jnp.abs(g_w1)),
+                                    jnp.max(jnp.abs(g_b1))),
+                        jnp.max(jnp.abs(g_w2)))
+                    hs = (healthy, live, jnp.max(jnp.abs(zc)), gnorm)
+                    return (w1, b1, w2, head, bw1, bb1, bw2, t + 1), hs
+
+                (w1, b1, w2, head, bw1, bb1, bw2, _), hs = jax.lax.scan(
+                    body, (w1, b1, w2, head, bw1, bb1, bw2, t0),
+                    (idx, mkeys, fwd_p, bwd_p, extra_p, corr_p))
+                return (w1, b1, w2, head), (bw1, bb1, bw2), hs
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit,
+                               static_argnames=("batch", "steps"),
+                               donate_argnames=self._donate("pq", "bufq"))
+            def epoch(xs, pq, bufq, delays_q, fwdq, bwdq, extraq,
+                      corruptq, maskq, trainq, y, lr, key, t0, batch,
+                      steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                w1q, b1q, w2q, headq = pq
+                bw1q, bb1q, bw2q = bufq
+                return mapped((xs, w1q, b1q, w2q, headq, bw1q, bb1q, bw2q,
+                               delays_q, fwdq, bwdq, extraq, corruptq,
+                               maskq, trainq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        pq, bufq, hs = self._epoch(
+            f"deep_guarded_sgd{tau}_{int(bool(guard))}", build)(
+            self.xs, pq, bufq, delays_q, fwdq, bwdq, extraq, corruptq,
+            self.maskq, self.trainq, self.y, lr, key, t0, batch, steps)
+        return pq, bufq, t0 + steps, HealthStats(*hs)
+
+    def deep_guarded_svrg_epoch(self, pq, pq_snap, muq, bufq, t0,
+                                delays_q, fwdq, bwdq, extraq, corruptq,
+                                lr, key, batch: int, steps: int, tau: int,
+                                guard: bool = True):
+        """Guarded deep VFB²-SVRG inner loop: the party's forward
+        message is both vector partials (iterate + snapshot, one
+        concatenated (B, 2·d_rep) block) — one corrupt code rewrites
+        both and the finiteness verdict covers both."""
+        prob = self.problem
+
+        def build():
+            def party(local, shared):
+                (xp, w1, b1, w2, head, w1s, b1s, w2s, heads, mu, bw1, bb1,
+                 bw2, delay, fwd_p, bwd_p, extra_p, corr_p, maskp,
+                 trainp) = local
+                y, lr, idx, mkeys, t0 = shared
+                mu_w1, mu_b1, mu_w2, mu_head = mu
+                hid = w1.shape[1]
+                dr = head.shape[0]
+
+                def body(carry, inp):
+                    w1, b1, w2, head, bw1, bb1, bw2, t = carry
+                    ib, kt, fl, bl, ex, cc = inp
+                    xb = xp[ib]
+                    yb = y[ib]
+                    bsz = yb.shape[0]
+                    uu = self._fwd(xb, jnp.concatenate([w1, w1s], axis=1))
+                    h = jnp.tanh(uu[:, :hid] + b1)
+                    hs_ = jnp.tanh(uu[:, hid:] + b1s)
+                    hr = jnp.concatenate(
+                        [self._fwd(h, w2), self._fwd(hs_, w2s)], axis=1)
+                    zsan, zc, healthy, live = self._guard_fwd(hr, cc, fl,
+                                                              guard)
+                    zz = self._agg_members(zsan, kt, live)
+                    z, zsnap = zz[:, :dr], zz[:, dr:]
+                    th1 = prob.theta(z @ head, yb) / bsz
+                    th0 = prob.theta(zsnap @ heads, yb) / bsz
+                    thz1 = th1[:, None] * head
+                    thz0 = th0[:, None] * heads
+                    v_head = (z.T @ th1 + prob.lam * prob.reg_grad(head)
+                              - zsnap.T @ th0 - prob.lam
+                              * prob.reg_grad(heads)
+                              + mu_head)
+                    v_w2 = (self._bwd(h, thz1, 1) - self._bwd(hs_, thz0, 1)
+                            + prob.lam * (prob.reg_grad(w2)
+                                          - prob.reg_grad(w2s))
+                            + mu_w2)
+                    du1 = (thz1 @ w2.T) * (1.0 - h * h)
+                    du0 = (thz0 @ w2s.T) * (1.0 - hs_ * hs_)
+                    duu = self._bwd(xb, jnp.concatenate([du1, du0],
+                                                        axis=1), 1)
+                    v_w1 = (duu[:, :hid] - duu[:, hid:]
+                            + prob.lam * (prob.reg_grad(w1)
+                                          - prob.reg_grad(w1s))
+                            + mu_w1)
+                    v_b1 = (du1.sum(axis=0) - du0.sum(axis=0)
+                            + prob.lam * (prob.reg_grad(b1)
+                                          - prob.reg_grad(b1s))
+                            + mu_b1)
+                    slot = t % (tau + 1)
+                    bw1 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bw1, v_w1,
+                                                            slot, 0), bw1)
+                    bb1 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bb1, v_b1,
+                                                            slot, 0), bb1)
+                    bw2 = jnp.where(
+                        bl > 0,
+                        jax.lax.dynamic_update_index_in_dim(bw2, v_w2,
+                                                            slot, 0), bw2)
+                    eff = jnp.maximum(t - (delay + ex), 0) % (tau + 1)
+                    s_w1 = jax.lax.dynamic_index_in_dim(bw1, eff, 0,
+                                                        keepdims=False)
+                    s_b1 = jax.lax.dynamic_index_in_dim(bb1, eff, 0,
+                                                        keepdims=False)
+                    s_w2 = jax.lax.dynamic_index_in_dim(bw2, eff, 0,
+                                                        keepdims=False)
+                    w1 = w1 - lr * bl * maskp[:, None] * s_w1
+                    b1 = b1 - lr * bl * trainp * s_b1
+                    w2 = w2 - lr * bl * trainp * s_w2
+                    head = head - lr * v_head       # dominator-fresh
+                    gnorm = jnp.maximum(
+                        jnp.maximum(jnp.max(jnp.abs(v_w1)),
+                                    jnp.max(jnp.abs(v_b1))),
+                        jnp.max(jnp.abs(v_w2)))
+                    hstat = (healthy, live, jnp.max(jnp.abs(zc)), gnorm)
+                    return (w1, b1, w2, head, bw1, bb1, bw2, t + 1), hstat
+
+                (w1, b1, w2, head, bw1, bb1, bw2, _), hstats = \
+                    jax.lax.scan(
+                        body, (w1, b1, w2, head, bw1, bb1, bw2, t0),
+                        (idx, mkeys, fwd_p, bwd_p, extra_p, corr_p))
+                return (w1, b1, w2, head), (bw1, bb1, bw2), hstats
+
+            mapped = self._bind(party)
+
+            @functools.partial(jax.jit, static_argnames=("batch", "steps"))
+            def epoch(xs, pq, pq_snap, muq, bufq, delays_q, fwdq, bwdq,
+                      extraq, corruptq, maskq, trainq, y, lr, key, t0,
+                      batch, steps):
+                idx = _batch_indices(key, y.shape[0], batch, steps)
+                w1q, b1q, w2q, headq = pq
+                w1s, b1s, w2s, headsq = pq_snap
+                bw1q, bb1q, bw2q = bufq
+                return mapped((xs, w1q, b1q, w2q, headq, w1s, b1s, w2s,
+                               headsq, muq, bw1q, bb1q, bw2q, delays_q,
+                               fwdq, bwdq, extraq, corruptq, maskq,
+                               trainq),
+                              (y, lr, idx, self._keys(key, steps), t0))
+
+            return epoch
+
+        pq, bufq, hs = self._epoch(
+            f"deep_guarded_svrg{tau}_{int(bool(guard))}", build)(
+            self.xs, pq, pq_snap, muq, bufq, delays_q, fwdq, bwdq, extraq,
+            corruptq, self.maskq, self.trainq, self.y, lr, key, t0, batch,
+            steps)
+        return pq, bufq, t0 + steps, HealthStats(*hs)
+
     def deep_multi_delay_buffers(self, pq, tau: int):
         """Zero-initialized per-(party, dominator) encoder gradient ring
         buffers for :meth:`deep_multi_delayed_sgd_epoch`: each dominator's
@@ -2831,6 +3285,25 @@ class FusedEngine:
         return jax.make_jaxpr(
             lambda xs, w, b: fn(xs, w, b, delays_q, fwdq, bwdq, extraq,
                                 self.maskq, self.y, lr, key, t0,
+                                batch=batch, steps=steps))(
+            self.xs, wq, bufq)
+
+    def guarded_sgd_epoch_jaxpr(self, wq, bufq, t0, delays_q, fwdq, bwdq,
+                                extraq, corruptq, lr, key, batch: int,
+                                steps: int, tau: int, guard: bool = True):
+        """The guarded epoch's jaxpr — the guards bench audits that
+        corrupt-value injection, the finiteness quarantine, and the
+        HealthStats telemetry all stay on device (zero host-transfer
+        primitives) and that the epoch is still ONE dispatch: the
+        telemetry accumulates as scan outputs, never as mid-epoch
+        fetches."""
+        self.guarded_sgd_epoch(wq, bufq, t0, delays_q, fwdq, bwdq, extraq,
+                               corruptq, lr, key, batch, steps, tau,
+                               guard=guard)                  # ensure built
+        fn = self._jitted[f"guarded_sgd{tau}_{int(bool(guard))}"]
+        return jax.make_jaxpr(
+            lambda xs, w, b: fn(xs, w, b, delays_q, fwdq, bwdq, extraq,
+                                corruptq, self.maskq, self.y, lr, key, t0,
                                 batch=batch, steps=steps))(
             self.xs, wq, bufq)
 

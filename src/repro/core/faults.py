@@ -48,6 +48,26 @@ Fault model (what each event means, at every tier)
     nothing, and applies nothing at step t.  One-step, forward-only
     participation.
 
+``corrupt(p, mode)`` at step t
+    Party p's forward partial for step t is corrupted **before**
+    aggregation: ``mode="nan"`` replaces it with NaN, ``"inf"`` with
+    +Inf, ``"blowup"`` scales it by ×10³.  Without guards a single
+    non-finite partial poisons the masked secure aggregate for every
+    party (additive Gaussian masks cannot hide a NaN/Inf — the masked
+    value is itself non-finite, which is also why the guard's
+    finiteness verdict is protocol-public, see ``analysis.taint``).
+    With ``guard=True`` the guarded epochs compute a per-step
+    finiteness verdict per party and **quarantine** a non-finite
+    contribution through the same membership machinery as a crash:
+    the party is dropped from the step's forward alive-set, the
+    per-step masks re-key on the gathered survivor fingerprint
+    (Definition 4 holds over the survivors), and the party otherwise
+    proceeds — it still receives ϑ, writes its ring, and applies
+    (forward-only exclusion, the mirror image of ``drop_msg``).  A
+    ``blowup`` partial is finite and passes the guard: catching it is
+    the training supervisor's job (``core.supervisor``), via the
+    in-graph norm telemetry (:class:`repro.core.engine.HealthStats`).
+
 Dominator availability: every step must keep at least one *active* party
 (p < m) alive — someone has to hold the labels and compute ϑ.
 ``FaultTrace.compile`` validates this.
@@ -78,7 +98,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
-from typing import List, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,17 +108,65 @@ from repro.core.algorithms import PartyLayout, _batch_indices, full_gradient
 from repro.core.losses import Problem
 from repro.core.staleness import party_delay_values
 
-KINDS = ("crash", "rejoin", "straggle", "drop_msg")
+KINDS = ("crash", "rejoin", "straggle", "drop_msg", "corrupt")
+
+# corrupt-value modes and their dense int32 codes (0 = no corruption)
+CORRUPT_MODES = ("nan", "inf", "blowup")
+CORRUPT_CODES = {"nan": 1, "inf": 2, "blowup": 3}
+BLOWUP_FACTOR = 1e3
 
 
 @dataclasses.dataclass(frozen=True)
 class FaultEvent:
-    """One fault at one (step, party).  ``k`` is straggle's extra delay."""
+    """One fault at one (step, party).  ``k`` is straggle's extra delay;
+    ``mode`` is corrupt's value class (``nan``/``inf``/``blowup``)."""
 
     step: int
     party: int
     kind: str
     k: int = 0
+    mode: str = ""
+
+
+def apply_corruption(z, code):
+    """Corrupt a party's forward partial per its dense int32 code.
+
+    The single definition BOTH tiers execute (sequential oracles and the
+    engine's guarded epochs import this), so corruption is bit-identical
+    across them: 0 → untouched, 1 → NaN, 2 → +Inf, 3 → ×10³ blowup.
+    ``code`` broadcasts (scalar per party-step).
+    """
+    z = jnp.where(code == 3, jnp.float32(BLOWUP_FACTOR) * z, z)
+    z = jnp.where(code == 1, jnp.float32(jnp.nan), z)
+    z = jnp.where(code == 2, jnp.float32(jnp.inf), z)
+    return z
+
+
+class HealthStats(NamedTuple):
+    """Per-(party, step) in-graph health telemetry, shape (q, steps) each.
+
+    Accumulated as scan outputs inside the party-mapped epoch (no
+    mid-epoch host transfers; the epoch stays ONE dispatch — the guards
+    bench jaxpr-audits both) and returned next to the updated state.  The
+    guarded sequential oracles produce the same arrays, so telemetry is
+    pinned alongside the iterates.  Privacy note: ``finite``/``alive``
+    are protocol-public (a masked partial is non-finite iff the raw one
+    is — additive masks cannot hide a NaN/Inf); the norm channels are
+    party-local diagnostics the supervisor reads, revealing only
+    magnitude summaries, never coordinates.
+    """
+
+    finite: jax.Array   # 1.0 ⇔ the party's shipped partial was finite
+    alive: jax.Array    # effective forward liveness (after quarantine)
+    pnorm: jax.Array    # max-|·| of the (possibly corrupted) partial
+    gnorm: jax.Array    # max-|·| of the buffered update direction
+
+    @staticmethod
+    def concat(parts: Sequence["HealthStats"]) -> "HealthStats":
+        """Stitch per-epoch stats along the step axis (host-side)."""
+        return HealthStats(*(np.concatenate([np.asarray(a) for a in leaf],
+                                            axis=1)
+                             for leaf in zip(*parts)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +198,7 @@ class FaultTrace:
         fwd = np.ones((self.steps, self.q), np.float32)
         bwd = np.ones((self.steps, self.q), np.float32)
         extra = np.zeros((self.steps, self.q), np.int32)
+        corrupt = np.zeros((self.steps, self.q), np.int32)
         down = np.zeros(self.q, bool)
         for ev in sorted(self.events, key=lambda e: (e.step, e.party)):
             if ev.kind not in KINDS:
@@ -161,6 +230,12 @@ class FaultTrace:
                 if ev.k < 0:
                     raise ValueError("straggle needs k >= 0")
                 extra[ev.step, ev.party] = ev.k
+            elif ev.kind == "corrupt":
+                if ev.mode not in CORRUPT_MODES:
+                    raise ValueError(
+                        f"corrupt needs mode in {CORRUPT_MODES}, got "
+                        f"{ev.mode!r} (step {ev.step}, party {ev.party})")
+                corrupt[ev.step, ev.party] = CORRUPT_CODES[ev.mode]
             else:  # drop_msg
                 bwd[ev.step, ev.party] = 0.0
         if fwd.sum(axis=1).min() < 1.0:
@@ -169,7 +244,7 @@ class FaultTrace:
             raise ValueError(
                 "dominator availability violated: some step has no "
                 f"active party (p < {m}) alive to compute ϑ")
-        return FaultSchedule(fwd=fwd, bwd=bwd, extra=extra)
+        return FaultSchedule(fwd=fwd, bwd=bwd, extra=extra, corrupt=corrupt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,17 +254,29 @@ class FaultSchedule:
     fwd: np.ndarray     # (steps, q) f32 — contributes forward partial
     bwd: np.ndarray     # (steps, q) f32 — receives ϑ, writes + applies
     extra: np.ndarray   # (steps, q) i32 — straggle's added delay
+    corrupt: Optional[np.ndarray] = None  # (steps, q) i32 corrupt codes
+
+    def codes(self) -> np.ndarray:
+        """Dense (steps, q) int32 corrupt codes (zeros when channel-free)."""
+        if self.corrupt is None:
+            return np.zeros(self.fwd.shape, np.int32)
+        return self.corrupt
 
     def epoch(self, e: int, steps: int) -> "FaultSchedule":
         """The window for epoch ``e`` of ``steps`` steps each."""
         sl = slice(e * steps, (e + 1) * steps)
         return FaultSchedule(fwd=self.fwd[sl], bwd=self.bwd[sl],
-                             extra=self.extra[sl])
+                             extra=self.extra[sl],
+                             corrupt=self.codes()[sl])
 
     def party_rows(self):
         """(q, steps) jnp arrays — the engine's party-local layout."""
         return (jnp.asarray(self.fwd.T), jnp.asarray(self.bwd.T),
                 jnp.asarray(self.extra.T))
+
+    def corrupt_rows(self):
+        """(q, steps) int32 corrupt codes — the engine's party layout."""
+        return jnp.asarray(self.codes().T)
 
     def coord_rows(self, layout: PartyLayout, d: int):
         """(steps, d) jnp arrays — the oracle's coordinate-space layout."""
@@ -204,12 +291,16 @@ class FaultSchedule:
 
 def random_trace(layout: PartyLayout, steps: int, *, rate: float = 0.08,
                  max_down: int = 3, max_straggle: int = 2,
-                 p_drop: float = 0.05, seed: int = 0) -> FaultTrace:
+                 p_drop: float = 0.05, p_corrupt: float = 0.0,
+                 corrupt_modes: Sequence[str] = CORRUPT_MODES,
+                 seed: int = 0) -> FaultTrace:
     """A random-but-deterministic chaos schedule (the bench suite's input).
 
     Party 0 (a dominator) never crashes, keeping dominator availability by
     construction; every crash schedules its rejoin ≤ ``max_down`` steps
     later (or never, if the horizon ends first — a permanent dropout).
+    ``p_corrupt > 0`` adds corrupt-value events with modes drawn uniformly
+    from ``corrupt_modes`` (guarded-epoch chaos input).
     """
     rng = np.random.default_rng(seed)
     events: List[FaultEvent] = []
@@ -235,6 +326,9 @@ def random_trace(layout: PartyLayout, steps: int, *, rate: float = 0.08,
                                                             max_straggle + 1))))
             elif u < rate + rate + p_drop:
                 events.append(FaultEvent(t, p, "drop_msg"))
+            elif u < rate + rate + p_drop + p_corrupt:
+                mode = corrupt_modes[int(rng.integers(len(corrupt_modes)))]
+                events.append(FaultEvent(t, p, "corrupt", mode=mode))
     return FaultTrace(q=layout.q, steps=steps, events=tuple(events))
 
 
@@ -720,3 +814,580 @@ def run_deep_faulted_fused(problem: Problem, x, y, layout: PartyLayout,
         if checkpoint_dir is not None:
             save_checkpoint(checkpoint_dir, state(), step=ep + 1)
     return eng.unpack_deep(pq)
+
+
+# ---------------------------------------------------------------------------
+# guarded (corrupt-value) oracles + runners — the self-healing layer's pins
+# ---------------------------------------------------------------------------
+#
+# The faulted oracles' ring mechanics with one more per-step per-party
+# channel: cp (corrupt codes) rewrites the party's forward partial before
+# aggregation via apply_corruption.  With guard=True the step's forward
+# alive-set excludes any party whose (corrupted) partial is non-finite —
+# the quarantined value is zeroed BEFORE the survivor sum (0·NaN is NaN,
+# so sanitize-then-mask, not mask-alone) and the engine's secure
+# aggregation re-keys its masks on the shrunken alive-set exactly as for
+# a crash.  With guard=False the corruption flows through untouched: one
+# NaN partial poisons every party's aggregate (the regression the guard
+# tests pin).  A ×10³ blowup is finite either way — it rides into the
+# aggregate and is the supervisor's job to catch from the norm telemetry.
+
+def _ownership(layout: PartyLayout, d: int) -> jnp.ndarray:
+    """(d, q) one-hot coordinate ownership: per-party forward partials
+    come out of the coordinate-space oracle via :func:`_party_cols`."""
+    own = np.zeros((d, layout.q), np.float32)
+    own[np.arange(d), layout.party_of_coord(d)] = 1.0
+    return jnp.asarray(own)
+
+
+def _party_cols(u, own):
+    """(B, d) per-coordinate products → (B, q) per-party partial columns.
+
+    NOT a plain ``u @ own``: once a party's weights are non-finite (guard
+    off, post-poisoning) the zero entries of the one-hot would leak NaN
+    into every other party's column (``NaN × 0 = NaN``), which the real
+    per-party engine — where each party only ever touches its own block —
+    cannot do.  The ``where`` keeps a party's genuine NaN and blocks the
+    cross-party leak."""
+    return jnp.where(own[None, :, :] > 0, u[:, :, None], 0.0).sum(axis=1)
+
+
+def _guard_partials(zcols, f, c, guard: bool, dtype):
+    """Corrupt per-party partial columns, then quarantine (or don't).
+
+    ``zcols``: list of (B, q) per-party forward partial columns (one
+    entry per forward message column — SVRG ships iterate + snapshot).
+    Returns (sanitized columns, healthy flags, effective liveness).
+    """
+    zc = [apply_corruption(z, c[None, :]) for z in zcols]
+    fin = jnp.ones(zc[0].shape[1], bool)
+    for z in zc:
+        fin = fin & jnp.all(jnp.isfinite(z), axis=0)
+    healthy = fin.astype(dtype)
+    if guard:
+        live = f * healthy
+        zs = [jnp.where(healthy[None, :] > 0, z, 0.0) for z in zc]
+    else:
+        live, zs = f, zc
+    return zs, zc, healthy, live
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "tau", "guard"))
+def guarded_sgd_epoch(problem: Problem, w, buf, t0, x, y, lr, mask, dcoord,
+                      own, idx, fp, bc, ec, cp, tau: int, guard: bool):
+    """One guarded VFB²-SGD epoch, sequential reference.
+
+    ``fp``/``cp``: (steps, q) party-space forward liveness / corrupt
+    codes; ``bc``/``ec``: coordinate-space backward liveness / straggle
+    delay (as in :func:`faulted_sgd_epoch`); ``own``: the (d, q)
+    ownership one-hot.  Returns per-step :class:`HealthStats` next to
+    the state — the fused telemetry's pin.
+    """
+
+    def body(carry, inp):
+        w, buf, t = carry
+        ib, f, b, e, c = inp
+        xb = x[ib]
+        zs, zc, healthy, live = _guard_partials(
+            [_party_cols(xb * w[None, :], own)], f, c, guard, w.dtype)
+        agg = zs[0] @ live                      # healthy-survivor aggregate
+        theta = problem.theta(agg, y[ib])
+        g = xb.T @ theta / ib.shape[0] + problem.lam * problem.reg_grad(w)
+        slot = t % (tau + 1)
+        row = jax.lax.dynamic_index_in_dim(buf, slot, 0, keepdims=False)
+        buf = jax.lax.dynamic_update_index_in_dim(
+            buf, jnp.where(b > 0, g, row), slot, 0)
+        eff = jnp.maximum(t - (dcoord + e), 0) % (tau + 1)
+        stale = jnp.take_along_axis(buf, eff[None, :], axis=0)[0]
+        pnorm = jnp.max(jnp.abs(zc[0]), axis=0)
+        gnorm = jnp.max(jnp.where(own > 0, jnp.abs(g)[:, None], 0.0),
+                        axis=0)
+        return (w - lr * mask * b * stale, buf, t + 1), \
+            (healthy, live, pnorm, gnorm)
+
+    (w, buf, t0), hs = jax.lax.scan(body, (w, buf, t0),
+                                    (idx, fp, bc, ec, cp))
+    return w, buf, t0, HealthStats(*(h.T for h in hs))
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "tau", "guard"))
+def guarded_svrg_epoch(problem: Problem, w, w_snap, mu, buf, t0, x, y, lr,
+                       mask, dcoord, own, idx, fp, bc, ec, cp, tau: int,
+                       guard: bool):
+    """Guarded VFB²-SVRG inner loop: the party's forward message is BOTH
+    partial columns (iterate + snapshot) — one corrupt code rewrites
+    both, and the finiteness verdict covers both (a party is healthy
+    only if its whole message is)."""
+
+    def body(carry, inp):
+        w, buf, t = carry
+        ib, f, b, e, c = inp
+        xb = x[ib]
+        zs, zc, healthy, live = _guard_partials(
+            [_party_cols(xb * w[None, :], own),
+             _party_cols(xb * w_snap[None, :], own)],
+            f, c, guard, w.dtype)
+        th1 = problem.theta(zs[0] @ live, y[ib])
+        th0 = problem.theta(zs[1] @ live, y[ib])
+        g1 = xb.T @ th1 / ib.shape[0] + problem.lam * problem.reg_grad(w)
+        g0 = xb.T @ th0 / ib.shape[0] \
+            + problem.lam * problem.reg_grad(w_snap)
+        v = g1 - g0 + mu
+        slot = t % (tau + 1)
+        row = jax.lax.dynamic_index_in_dim(buf, slot, 0, keepdims=False)
+        buf = jax.lax.dynamic_update_index_in_dim(
+            buf, jnp.where(b > 0, v, row), slot, 0)
+        eff = jnp.maximum(t - (dcoord + e), 0) % (tau + 1)
+        stale = jnp.take_along_axis(buf, eff[None, :], axis=0)[0]
+        pnorm = jnp.maximum(jnp.max(jnp.abs(zc[0]), axis=0),
+                            jnp.max(jnp.abs(zc[1]), axis=0))
+        gnorm = jnp.max(jnp.where(own > 0, jnp.abs(v)[:, None], 0.0),
+                        axis=0)
+        return (w - lr * mask * b * stale, buf, t + 1), \
+            (healthy, live, pnorm, gnorm)
+
+    (w, buf, t0), hs = jax.lax.scan(body, (w, buf, t0),
+                                    (idx, fp, bc, ec, cp))
+    return w, buf, t0, HealthStats(*(h.T for h in hs))
+
+
+@functools.partial(jax.jit, static_argnames=("problem", "tau", "guard"))
+def guarded_saga_epoch(problem: Problem, w, tab, avg, buf, t0, x, y, lr,
+                       mask, dcoord, own, idx, fp, bc, ec, cp, tau: int,
+                       guard: bool):
+    """Guarded VFB²-SAGA: same state-freshness split as the faulted
+    oracle (ϑ̃ table always fresh, per-party average gated by backward
+    liveness); the corrupt channel only touches the forward partial."""
+    n = x.shape[0]
+
+    def body(carry, inp):
+        w, tab, avg, buf, t = carry
+        ib, f, b, e, c = inp
+        xb = x[ib]
+        zs, zc, healthy, live = _guard_partials(
+            [_party_cols(xb * w[None, :], own)], f, c, guard, w.dtype)
+        th_new = problem.theta(zs[0] @ live, y[ib])
+        raw = xb.T @ (th_new - tab[ib])
+        v = raw / ib.shape[0] + avg + problem.lam * problem.reg_grad(w)
+        slot = t % (tau + 1)
+        row = jax.lax.dynamic_index_in_dim(buf, slot, 0, keepdims=False)
+        buf = jax.lax.dynamic_update_index_in_dim(
+            buf, jnp.where(b > 0, v, row), slot, 0)
+        eff = jnp.maximum(t - (dcoord + e), 0) % (tau + 1)
+        stale = jnp.take_along_axis(buf, eff[None, :], axis=0)[0]
+        w = w - lr * mask * b * stale
+        avg = avg + b * raw / n                 # private: frozen while out
+        tab = tab.at[ib].set(th_new)            # shared: always fresh
+        pnorm = jnp.max(jnp.abs(zc[0]), axis=0)
+        gnorm = jnp.max(jnp.where(own > 0, jnp.abs(v)[:, None], 0.0),
+                        axis=0)
+        return (w, tab, avg, buf, t + 1), (healthy, live, pnorm, gnorm)
+
+    (w, tab, avg, buf, t0), hs = jax.lax.scan(
+        body, (w, tab, avg, buf, t0), (idx, fp, bc, ec, cp))
+    return w, tab, avg, buf, t0, HealthStats(*(h.T for h in hs))
+
+
+def run_guarded_reference(problem: Problem, x, y, layout: PartyLayout,
+                          trace: FaultTrace, tau: int, epochs: int,
+                          lr: float, batch: int, algo: str = "sgd",
+                          seed: int = 0, delays_q=None,
+                          active_only: bool = False, guard: bool = True):
+    """Sequential guarded oracle driver (the fused path's 1e-5 pin).
+    Returns ``(w, HealthStats)`` — telemetry over the whole horizon."""
+    n, d = np.asarray(x).shape
+    steps = max(1, n // batch)
+    if trace.steps != epochs * steps:
+        raise ValueError(f"trace horizon {trace.steps} != epochs*steps "
+                         f"= {epochs * steps}")
+    sched = trace.compile(layout.m)
+    delays_q = _base_delays(layout, tau, sched, delays_q, seed)
+    dcoord = jnp.asarray(delays_q[layout.party_of_coord(d)])
+    own = _ownership(layout, d)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    w = jnp.zeros(d, jnp.float32)
+    mask = jnp.asarray(layout.update_mask(d, active_only))
+    buf = jnp.zeros((tau + 1, d), jnp.float32)
+    t0 = jnp.zeros((), jnp.int32)
+    key = jax.random.PRNGKey(seed)
+    if algo == "saga":
+        tab = problem.theta(x @ w, y)
+        avg = x.T @ tab / n
+    health = []
+    for ep in range(epochs):
+        key, sub = jax.random.split(key)
+        idx = _batch_indices(sub, n, batch, steps)
+        win = sched.epoch(ep, steps)
+        _, bc, ec = win.coord_rows(layout, d)
+        fp = jnp.asarray(win.fwd)
+        cp = jnp.asarray(win.codes())
+        if algo == "sgd":
+            w, buf, t0, hs = guarded_sgd_epoch(
+                problem, w, buf, t0, x, y, lr, mask, dcoord, own, idx,
+                fp, bc, ec, cp, tau, guard)
+        elif algo == "svrg":
+            mu = full_gradient(problem, w, x, y)
+            w, buf, t0, hs = guarded_svrg_epoch(
+                problem, w, w, mu, buf, t0, x, y, lr, mask, dcoord, own,
+                idx, fp, bc, ec, cp, tau, guard)
+        elif algo == "saga":
+            w, tab, avg, buf, t0, hs = guarded_saga_epoch(
+                problem, w, tab, avg, buf, t0, x, y, lr, mask, dcoord,
+                own, idx, fp, bc, ec, cp, tau, guard)
+        else:
+            raise ValueError(f"unknown algo {algo}")
+        health.append(hs)
+    return np.asarray(w), HealthStats.concat(health)
+
+
+def run_guarded_fused(problem: Problem, x, y, layout: PartyLayout,
+                      trace: FaultTrace, tau: int, epochs: int, lr: float,
+                      batch: int, algo: str = "sgd", seed: int = 0,
+                      delays_q=None, engine_config=None,
+                      active_only: bool = False, guard: bool = True,
+                      checkpoint_dir: Optional[str] = None,
+                      resume_from: Optional[str] = None,
+                      keep_last: Optional[int] = 1,
+                      horizon_epochs: Optional[int] = None):
+    """Guarded VFB² on the fused engine: corrupt-value injection, health
+    telemetry, and (with ``guard=True``) non-finite quarantine all ride
+    the one-dispatch epochs.  Same init/key stream as
+    :func:`run_guarded_reference` (iterates AND telemetry pinned at
+    1e-5).  Checkpoints carry the telemetry accumulated so far, so a
+    preempted run resumes bit-exact including its health history."""
+    from repro.checkpoint.ckpt import (checkpoint_step, load_checkpoint,
+                                       save_checkpoint)
+    from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
+
+    n, d = np.asarray(x).shape
+    steps = max(1, n // batch)
+    horizon = epochs if horizon_epochs is None \
+        else max(int(horizon_epochs), epochs)
+    if trace.steps < horizon * steps:
+        raise ValueError(f"trace horizon {trace.steps} < horizon*steps "
+                         f"= {horizon * steps}")
+    sched = trace.compile(layout.m)
+    delays_q = _base_delays(layout, tau, sched, delays_q, seed)
+    cfg = engine_config if engine_config is not None \
+        else EngineConfig(donate=True)
+    eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
+    dq = jnp.asarray(delays_q)
+    wq = eng.pack_w(np.zeros(d, np.float32))
+    bufq = jnp.zeros((layout.q, tau + 1, eng.dp), jnp.float32)
+    t0 = jnp.zeros((), jnp.int32)
+    key = jax.random.PRNGKey(seed)
+    if algo == "saga":
+        tabq, avgq = eng.saga_init(wq, key)
+    health = HealthStats(*(np.zeros((layout.q, horizon * steps),
+                           np.float32) for _ in range(4)))
+
+    def state():
+        st = {"wq": np.asarray(wq), "bufq": np.asarray(bufq),
+              "t0": np.asarray(t0), "key": np.asarray(key),
+              "health": jax.tree_util.tree_map(np.asarray, health)}
+        if algo == "saga":
+            st["tabq"] = np.asarray(tabq)
+            st["avgq"] = np.asarray(avgq)
+        return st
+
+    ep0 = 0
+    if resume_from is not None:
+        st = load_checkpoint(resume_from, state())
+        ep0 = checkpoint_step(resume_from)
+        wq = jnp.asarray(st["wq"])
+        bufq = jnp.asarray(st["bufq"])
+        t0 = jnp.asarray(st["t0"])
+        key = jnp.asarray(st["key"])
+        health = HealthStats(*st["health"])
+        if algo == "saga":
+            tabq = jnp.asarray(st["tabq"])
+            avgq = jnp.asarray(st["avgq"])
+    for ep in range(ep0, epochs):
+        key, sub = jax.random.split(key)
+        win = sched.epoch(ep, steps)
+        fwdq, bwdq, extraq = win.party_rows()
+        corruptq = win.corrupt_rows()
+        if algo == "sgd":
+            wq, bufq, t0, hs = eng.guarded_sgd_epoch(
+                wq, bufq, t0, dq, fwdq, bwdq, extraq, corruptq, lr, sub,
+                batch, steps, tau, guard=guard)
+        elif algo == "svrg":
+            muq = eng.full_gradient(wq, sub)
+            wq, bufq, t0, hs = eng.guarded_svrg_epoch(
+                wq, wq, muq, bufq, t0, dq, fwdq, bwdq, extraq, corruptq,
+                lr, sub, batch, steps, tau, guard=guard)
+        elif algo == "saga":
+            wq, tabq, avgq, bufq, t0, hs = eng.guarded_saga_epoch(
+                wq, tabq, avgq, bufq, t0, dq, fwdq, bwdq, extraq,
+                corruptq, lr, sub, batch, steps, tau, guard=guard)
+        else:
+            raise ValueError(f"unknown algo {algo}")
+        sl = slice(ep * steps, (ep + 1) * steps)
+        for dst, src in zip(health, hs):
+            dst[:, sl] = np.asarray(src)
+        if checkpoint_dir is not None:
+            save_checkpoint(checkpoint_dir, state(), step=ep + 1,
+                            keep_last=keep_last)
+    return eng.unpack_w(wq), health
+
+
+# -- deep guarded oracle steps + runners ------------------------------------
+
+def _deep_guard_fwd(zps, f_row, c_row, guard: bool):
+    """Corrupt + (maybe) quarantine the deep per-party vector partials.
+
+    ``zps``: per-party list of (B, d_rep) partial lists (one inner list
+    per forward message column).  Returns (aggregates per column,
+    per-party healthy flags, per-party effective liveness)."""
+    q = len(zps)
+    zcs = [[apply_corruption(z, jnp.int32(int(c_row[p])))
+            for z in zps[p]] for p in range(q)]
+    healthy = [float(all(bool(jnp.all(jnp.isfinite(z))) for z in zcs[p]))
+               for p in range(q)]
+    live = [float(f_row[p]) * (healthy[p] if guard else 1.0)
+            for p in range(q)]
+    cols = len(zps[0])
+    zs = [[jnp.where(healthy[p] > 0, z, 0.0) if guard else z
+           for z in zcs[p]] for p in range(q)]
+    aggs = [sum(live[p] * zs[p][j] for p in range(q)) for j in range(cols)]
+    return aggs, zcs, healthy, live
+
+
+def _leaf_norm(*gs):
+    """max-|·| across a party's update-direction leaves (telemetry)."""
+    return float(max(jnp.max(jnp.abs(g)) for g in gs))
+
+
+def _deep_guard_sgd_step(problem, blocks, y, w1, b1, w2, head, bufs, tg,
+                         ib, lr, delays, f_row, b_row, e_row, c_row, tau,
+                         guard, health, tcol):
+    """One sequential deep guarded SGD step (party loop; the oracle)."""
+    q = len(w1)
+    yb = y[ib]
+    bsz = ib.shape[0]
+    hs = [jnp.tanh(blocks[p][ib] @ w1[p] + b1[p]) for p in range(q)]
+    aggs, zcs, healthy, live = _deep_guard_fwd(
+        [[hs[p] @ w2[p]] for p in range(q)], f_row, c_row, guard)
+    z = aggs[0]
+    th_l = problem.theta(z @ head, yb) / bsz
+    th_z = th_l[:, None] * head
+    g_head = z.T @ th_l + problem.lam * problem.reg_grad(head)
+    slot = int(tg) % (tau + 1)
+    for p in range(q):
+        du = (th_z @ w2[p].T) * (1.0 - hs[p] * hs[p])
+        g_w1 = blocks[p][ib].T @ du + problem.lam * problem.reg_grad(w1[p])
+        g_b1 = du.sum(axis=0) + problem.lam * problem.reg_grad(b1[p])
+        g_w2 = hs[p].T @ th_z + problem.lam * problem.reg_grad(w2[p])
+        bw1, bb1, bw2 = bufs[p]
+        if b_row[p] > 0:
+            bw1 = bw1.at[slot].set(g_w1)
+            bb1 = bb1.at[slot].set(g_b1)
+            bw2 = bw2.at[slot].set(g_w2)
+        bufs[p] = (bw1, bb1, bw2)
+        eff = max(int(tg) - int(delays[p] + e_row[p]), 0) % (tau + 1)
+        if b_row[p] > 0:
+            w1[p] = w1[p] - lr * bw1[eff]
+            b1[p] = b1[p] - lr * bb1[eff]
+            w2[p] = w2[p] - lr * bw2[eff]
+        health.finite[p, tcol] = healthy[p]
+        health.alive[p, tcol] = live[p]
+        health.pnorm[p, tcol] = float(jnp.max(jnp.abs(zcs[p][0])))
+        health.gnorm[p, tcol] = _leaf_norm(g_w1, g_b1, g_w2)
+    return w1, b1, w2, head - lr * g_head, bufs
+
+
+def _deep_guard_svrg_step(problem, blocks, y, w1, b1, w2, head, snap, mu,
+                          bufs, tg, ib, lr, delays, f_row, b_row, e_row,
+                          c_row, tau, guard, health, tcol):
+    """One sequential deep guarded SVRG step: the party's forward message
+    is both vector partials (iterate + snapshot); one code corrupts
+    both, the verdict covers both."""
+    q = len(w1)
+    w1s, b1s, w2s, heads = snap
+    mu_w1, mu_b1, mu_w2, mu_head = mu
+    yb = y[ib]
+    bsz = ib.shape[0]
+    hs1 = [jnp.tanh(blocks[p][ib] @ w1[p] + b1[p]) for p in range(q)]
+    hs0 = [jnp.tanh(blocks[p][ib] @ w1s[p] + b1s[p]) for p in range(q)]
+    aggs, zcs, healthy, live = _deep_guard_fwd(
+        [[hs1[p] @ w2[p], hs0[p] @ w2s[p]] for p in range(q)],
+        f_row, c_row, guard)
+    z1, z0 = aggs
+    th1 = problem.theta(z1 @ head, yb) / bsz
+    th0 = problem.theta(z0 @ heads, yb) / bsz
+    thz1 = th1[:, None] * head
+    thz0 = th0[:, None] * heads
+    v_head = (z1.T @ th1 + problem.lam * problem.reg_grad(head)
+              - z0.T @ th0 - problem.lam * problem.reg_grad(heads)
+              + mu_head)
+    slot = int(tg) % (tau + 1)
+    for p in range(q):
+        du1 = (thz1 @ w2[p].T) * (1.0 - hs1[p] * hs1[p])
+        du0 = (thz0 @ w2s[p].T) * (1.0 - hs0[p] * hs0[p])
+        v_w1 = (blocks[p][ib].T @ du1 - blocks[p][ib].T @ du0
+                + problem.lam * (problem.reg_grad(w1[p])
+                                 - problem.reg_grad(w1s[p]))
+                + mu_w1[p])
+        v_b1 = (du1.sum(axis=0) - du0.sum(axis=0)
+                + problem.lam * (problem.reg_grad(b1[p])
+                                 - problem.reg_grad(b1s[p]))
+                + mu_b1[p])
+        v_w2 = (hs1[p].T @ thz1 - hs0[p].T @ thz0
+                + problem.lam * (problem.reg_grad(w2[p])
+                                 - problem.reg_grad(w2s[p]))
+                + mu_w2[p])
+        bw1, bb1, bw2 = bufs[p]
+        if b_row[p] > 0:
+            bw1 = bw1.at[slot].set(v_w1)
+            bb1 = bb1.at[slot].set(v_b1)
+            bw2 = bw2.at[slot].set(v_w2)
+        bufs[p] = (bw1, bb1, bw2)
+        eff = max(int(tg) - int(delays[p] + e_row[p]), 0) % (tau + 1)
+        if b_row[p] > 0:
+            w1[p] = w1[p] - lr * bw1[eff]
+            b1[p] = b1[p] - lr * bb1[eff]
+            w2[p] = w2[p] - lr * bw2[eff]
+        health.finite[p, tcol] = healthy[p]
+        health.alive[p, tcol] = live[p]
+        health.pnorm[p, tcol] = float(
+            max(jnp.max(jnp.abs(zcs[p][0])), jnp.max(jnp.abs(zcs[p][1]))))
+        health.gnorm[p, tcol] = _leaf_norm(v_w1, v_b1, v_w2)
+    return w1, b1, w2, head - lr * v_head, bufs
+
+
+def run_deep_guarded_reference(problem: Problem, x, y,
+                               layout: PartyLayout, trace: FaultTrace,
+                               tau: int, epochs: int, lr: float,
+                               batch: int, algo: str = "sgd",
+                               seed: int = 0, hidden: int = 32,
+                               d_rep: int = 16, delays_q=None,
+                               guard: bool = True):
+    """Sequential deep guarded oracle (the fused path's 1e-5 pin).
+    Returns ``(DeepVFLParams, HealthStats)``."""
+    from repro.core import deep_vfl
+
+    n, d = np.asarray(x).shape
+    steps = max(1, n // batch)
+    if trace.steps != epochs * steps:
+        raise ValueError(f"trace horizon {trace.steps} != epochs*steps "
+                         f"= {epochs * steps}")
+    if algo not in ("sgd", "svrg"):
+        raise ValueError(f"deep guarded VFB² supports sgd/svrg; got {algo}")
+    sched = trace.compile(layout.m)
+    delays_q = _base_delays(layout, tau, sched, delays_q, seed)
+    key = jax.random.PRNGKey(seed)
+    params = deep_vfl.init_deep_vfl(key, layout, d, hidden, d_rep)
+    xj = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    blocks = [xj[:, lo:hi] for lo, hi in layout.bounds]
+    w1, b1, w2, head = (list(params.enc_w1), list(params.enc_b1),
+                        list(params.enc_w2), params.head)
+    bufs = _deep_ring_init(w1, b1, w2, tau)
+    health = HealthStats(*(np.zeros((layout.q, epochs * steps), np.float32)
+                           for _ in range(4)))
+    t = 0
+    for ep in range(epochs):
+        key, sub = jax.random.split(key)
+        idx = _batch_indices(sub, n, batch, steps)
+        win = sched.epoch(ep, steps)
+        codes = win.codes()
+        if algo == "svrg":
+            snap = (list(w1), list(b1), list(w2), head)
+            mu = _deep_full_grad_ref(problem, blocks, y, *snap)
+        for i in range(steps):
+            if algo == "sgd":
+                w1, b1, w2, head, bufs = _deep_guard_sgd_step(
+                    problem, blocks, y, w1, b1, w2, head, bufs, t,
+                    idx[i], lr, delays_q, win.fwd[i], win.bwd[i],
+                    win.extra[i], codes[i], tau, guard, health, t)
+            else:
+                w1, b1, w2, head, bufs = _deep_guard_svrg_step(
+                    problem, blocks, y, w1, b1, w2, head, snap, mu,
+                    bufs, t, idx[i], lr, delays_q, win.fwd[i],
+                    win.bwd[i], win.extra[i], codes[i], tau, guard,
+                    health, t)
+            t += 1
+    params = deep_vfl.DeepVFLParams(enc_w1=tuple(w1), enc_b1=tuple(b1),
+                                    enc_w2=tuple(w2), head=head)
+    return params, health
+
+
+def run_deep_guarded_fused(problem: Problem, x, y, layout: PartyLayout,
+                           trace: FaultTrace, tau: int, epochs: int,
+                           lr: float, batch: int, algo: str = "sgd",
+                           seed: int = 0, hidden: int = 32,
+                           d_rep: int = 16, delays_q=None,
+                           engine_config=None, guard: bool = True,
+                           checkpoint_dir: Optional[str] = None,
+                           resume_from: Optional[str] = None,
+                           keep_last: Optional[int] = 1,
+                           horizon_epochs: Optional[int] = None):
+    """Deep guarded VFB² on the fused engine (one dispatch per epoch);
+    same init/key stream as :func:`run_deep_guarded_reference`.  Returns
+    ``(DeepVFLParams, HealthStats)``; checkpoints carry params, rings,
+    counters, AND the telemetry accumulated so far."""
+    from repro.checkpoint.ckpt import (checkpoint_step, load_checkpoint,
+                                       save_checkpoint)
+    from repro.core import deep_vfl
+    from repro.core.engine import EngineConfig, FusedEngine  # lazy: cycle
+
+    n, d = np.asarray(x).shape
+    steps = max(1, n // batch)
+    horizon = epochs if horizon_epochs is None \
+        else max(int(horizon_epochs), epochs)
+    if trace.steps < horizon * steps:
+        raise ValueError(f"trace horizon {trace.steps} < horizon*steps "
+                         f"= {horizon * steps}")
+    if algo not in ("sgd", "svrg"):
+        raise ValueError(f"deep guarded VFB² supports sgd/svrg; got {algo}")
+    sched = trace.compile(layout.m)
+    delays_q = _base_delays(layout, tau, sched, delays_q, seed)
+    cfg = engine_config if engine_config is not None \
+        else EngineConfig(donate=True)
+    eng = FusedEngine(problem, x, y, layout, cfg)
+    key = jax.random.PRNGKey(seed)
+    pq = eng.pack_deep(deep_vfl.init_deep_vfl(key, layout, d, hidden,
+                                              d_rep))
+    bufq = eng.deep_delay_buffers(pq, tau)
+    dq = jnp.asarray(delays_q)
+    t0 = jnp.zeros((), jnp.int32)
+    health = HealthStats(*(np.zeros((layout.q, horizon * steps),
+                           np.float32) for _ in range(4)))
+
+    def state():
+        return {"pq": jax.tree_util.tree_map(np.asarray, pq),
+                "bufq": jax.tree_util.tree_map(np.asarray, bufq),
+                "t0": np.asarray(t0), "key": np.asarray(key),
+                "health": jax.tree_util.tree_map(np.asarray, health)}
+
+    ep0 = 0
+    if resume_from is not None:
+        st = load_checkpoint(resume_from, state())
+        ep0 = checkpoint_step(resume_from)
+        pq = jax.tree_util.tree_map(jnp.asarray, st["pq"])
+        bufq = jax.tree_util.tree_map(jnp.asarray, st["bufq"])
+        t0 = jnp.asarray(st["t0"])
+        key = jnp.asarray(st["key"])
+        health = HealthStats(*st["health"])
+    for ep in range(ep0, epochs):
+        key, sub = jax.random.split(key)
+        win = sched.epoch(ep, steps)
+        fwdq, bwdq, extraq = win.party_rows()
+        corruptq = win.corrupt_rows()
+        if algo == "sgd":
+            pq, bufq, t0, hs = eng.deep_guarded_sgd_epoch(
+                pq, bufq, t0, dq, fwdq, bwdq, extraq, corruptq, lr, sub,
+                batch, steps, tau, guard=guard)
+        else:
+            muq = eng.deep_full_gradient(pq, sub)
+            pq, bufq, t0, hs = eng.deep_guarded_svrg_epoch(
+                pq, pq, muq, bufq, t0, dq, fwdq, bwdq, extraq, corruptq,
+                lr, sub, batch, steps, tau, guard=guard)
+        sl = slice(ep * steps, (ep + 1) * steps)
+        for dst, src in zip(health, hs):
+            dst[:, sl] = np.asarray(src)
+        if checkpoint_dir is not None:
+            save_checkpoint(checkpoint_dir, state(), step=ep + 1,
+                            keep_last=keep_last)
+    return eng.unpack_deep(pq), health

@@ -92,6 +92,7 @@ def secure_aggregate_survivors(
     alive: Sequence[bool],
     rng: np.random.Generator,
     mask_scale: float = 1.0,
+    strict: bool = False,
 ) -> Tuple[np.ndarray, AggTranscript]:
     """Algorithm 1 across a membership change (host reference).
 
@@ -102,7 +103,11 @@ def secure_aggregate_survivors(
     neither value nor mask.  With fewer than 3 survivors the two-tree
     structure is degenerate, so the protocol **degrades to a
     pairwise-cancelling masked psum** (Σδ ≡ 0 over survivors, every
-    transmitted value still masked) and emits a ``RuntimeWarning``.
+    transmitted value still masked) and emits a ``RuntimeWarning`` —
+    easy to miss in a long run, so ``strict=True`` raises a
+    ``RuntimeError`` at that boundary instead of degrading (the
+    deployment-policy switch: refuse to continue without the
+    mask-sum/value-sum schedule separation).
 
     Returns ``(survivor sum, transcript)`` with transcript rows indexed by
     *original* party ids (crashed parties see nothing).
@@ -123,6 +128,11 @@ def secure_aggregate_survivors(
                              lambda mo: f"from{surv[int(mo.group(1))]}", tag)
                 transcript.messages[p].append((tag, v))
         return val, transcript
+    if strict:
+        raise RuntimeError(
+            f"secure aggregation: only {len(surv)} survivor(s) < 3 and "
+            "strict=True — refusing to degrade below the two-tree "
+            "protocol (no Definition-4 tree pair exists)")
     warnings.warn(
         f"secure aggregation degraded: only {len(surv)} survivor(s) < 3, "
         "two-tree protocol has no Definition-4 pair — falling back to "

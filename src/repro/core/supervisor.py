@@ -1,0 +1,381 @@
+"""Self-healing training supervisor: divergence rollback + adaptive τ.
+
+The supervisor closes the loop the runtime guards open: the guarded
+epochs (``core.faults`` / ``FusedEngine.guarded_*``) *measure* health
+(per-step finiteness and norm telemetry) and *contain* non-finite
+partials, but nothing in the hot path reacts to a training run that is
+going wrong slowly — a ×10³ blown-up partial is finite, rides the
+masked aggregation untouched, and only shows up as a loss spike a few
+epochs later.  This module watches the per-epoch objective trajectory
+(and, for guarded runs, the :class:`~repro.core.faults.HealthStats`
+stream), detects divergence, and heals by rolling the trainer back to
+the last healthy atomic checkpoint:
+
+* **Detection** — an epoch is *diverged* when its objective is
+  non-finite, or exceeds ``spike_factor`` × the median of the trailing
+  ``window`` epochs (the spike test needs at least one trailing epoch;
+  epoch 0 can only be caught non-finite, epoch 1 catches geometric
+  blowups immediately).  Guarded runs additionally flag any step where
+  a non-finite partial *entered* the aggregate (``finite == 0`` while
+  the party was effectively live — only possible with ``guard=False``).
+
+* **Rollback** — training runs in segments of ``keep_last − 1`` epochs
+  against a retention ring of atomic per-epoch checkpoints
+  (``checkpoint.ckpt``), so the epoch *before* the first diverged one
+  is always still in the ring.  Healing unlinks every newer bundle
+  (``discard_after``) and resumes from the last healthy step — the
+  restored state is bit-exact the state saved at that epoch boundary.
+
+* **Backoff** — every heal multiplies the learning rate by
+  ``lr_backoff``; a bounded ``max_retries`` budget turns a run that
+  cannot be healed into a :class:`DivergenceError` instead of an
+  infinite rollback loop.
+
+* **Guard escalation** — when the diagnosis is a non-finite partial in
+  the aggregate and the run had ``guard=False``, retrying with the same
+  trace would re-poison deterministically; with
+  ``guard_escalation=True`` the supervisor turns the quarantine on for
+  the retry instead of only shrinking the learning rate.
+
+* **Adaptive τ** — the staleness analysis (Theorem 1's τ-dependent
+  rate) predicts that spikes correlated with large *realized* delays
+  are a staleness problem, not a step-size problem.  The controller
+  compares the realized per-epoch delay (base delay + recorded straggle
+  extras from the fault trace) of diverged epochs against healthy ones
+  and, when diverged epochs saw strictly larger delays, tightens the
+  effective bound: ``tau_eff ← tau_eff − tau_backoff`` and the base
+  delay vector is clamped to it on retry.  Clamping *delays* rather
+  than resizing the (τ+1)-slot ring buffers keeps every checkpoint
+  shape-compatible across heals.
+
+``algorithms.train(..., supervise=True)`` routes through
+:func:`supervised_train` (linear + deep, reference + fused engines);
+:func:`supervised_guarded_run` wraps the guarded fault runners with the
+same loop plus the health-stream diagnosis and the τ controller.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class DivergenceError(RuntimeError):
+    """Raised when the retry budget is exhausted without a healthy run."""
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    window: int = 3            # trailing epochs for the spike baseline
+    spike_factor: float = 5.0  # objective > factor × trailing median
+    max_retries: int = 3       # heal budget before DivergenceError
+    lr_backoff: float = 0.5    # lr multiplier per heal
+    tau_backoff: int = 1       # τ_eff decrement per delay-correlated heal
+    keep_last: int = 4         # checkpoint ring depth (≥ 2)
+    guard_escalation: bool = True  # turn guard on after aggregate poisoning
+
+    def __post_init__(self):
+        if self.keep_last < 2:
+            raise ValueError("supervised runs need keep_last >= 2 (the "
+                             "rollback target must stay in the ring)")
+        if self.window < 1 or self.spike_factor <= 1.0:
+            raise ValueError("window >= 1 and spike_factor > 1 required")
+
+    @property
+    def chunk(self) -> int:
+        """Epochs per segment: with ``keep_last − 1`` per segment the
+        epoch before the first in-segment divergence is still ringed."""
+        return self.keep_last - 1
+
+
+def first_divergence(objs: Sequence[float], cfg: SupervisorConfig,
+                     base0: Optional[float] = None) -> Optional[int]:
+    """Index of the first diverged epoch in an objective trajectory
+    (non-finite, or > ``spike_factor`` × trailing-window median).
+
+    ``base0`` is the pre-training objective: with it, an epoch that
+    diverges *immediately* (no trailing epochs yet) is still caught and
+    rolled back to a fresh start instead of being mistaken for the last
+    healthy state."""
+    for i, o in enumerate(objs):
+        if not np.isfinite(o):
+            return i
+        trail = list(objs[max(0, i - cfg.window):i])
+        if not trail and base0 is not None and np.isfinite(base0):
+            trail = [base0]
+        if trail:
+            base = float(np.median(trail))
+            if np.isfinite(base) and o > cfg.spike_factor * max(base, 1e-12):
+                return i
+    return None
+
+
+def poisoned_steps(health) -> np.ndarray:
+    """(q, steps) bool: a non-finite partial ENTERED the aggregate.
+
+    ``finite == 0`` alone is a corruption *event* (normal — the guard
+    quarantines it); poisoning is ``finite == 0`` while the party was
+    still effectively live, which only ``guard=False`` allows."""
+    fin = np.asarray(health.finite)
+    alive = np.asarray(health.alive)
+    return (fin == 0) & (alive > 0)
+
+
+def delay_correlated(realized: Sequence[float], diverged: Sequence[int],
+                     total: int) -> bool:
+    """True when diverged epochs saw strictly larger realized delays
+    than healthy ones (the adaptive-τ trigger)."""
+    diverged = set(int(e) for e in diverged)
+    bad = [realized[e] for e in diverged if e < len(realized)]
+    good = [realized[e] for e in range(min(total, len(realized)))
+            if e not in diverged]
+    if not bad or not good:
+        return False
+    return float(np.mean(bad)) > float(np.mean(good))
+
+
+@dataclasses.dataclass
+class HealEvent:
+    attempt: int
+    diverged_epoch: int        # 1-based epoch that tripped detection
+    rollback_step: int         # checkpoint step resumed from (0 = fresh)
+    reason: str                # "nonfinite" | "spike" | "poisoned"
+    lr: float                  # lr AFTER backoff
+    tau_eff: Optional[int] = None  # τ bound AFTER tightening (guarded)
+    guard: Optional[bool] = None   # guard state AFTER escalation
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Supervisor:
+    """Retry-budget bookkeeping shared by both supervised loops."""
+
+    def __init__(self, cfg: Optional[SupervisorConfig] = None):
+        self.cfg = cfg or SupervisorConfig()
+        self.heals: List[HealEvent] = []
+
+    def charge(self, event: HealEvent) -> HealEvent:
+        self.heals.append(event)
+        if len(self.heals) > self.cfg.max_retries:
+            raise DivergenceError(
+                f"training still diverging after {self.cfg.max_retries} "
+                f"rollbacks (last: epoch {event.diverged_epoch}, "
+                f"{event.reason})")
+        return event
+
+
+def _rollback(checkpoint_dir: str, step: int) -> Optional[str]:
+    """Discard every bundle newer than ``step``; None = fresh start."""
+    from repro.checkpoint.ckpt import discard_after
+
+    discard_after(checkpoint_dir, step)
+    return checkpoint_dir if step > 0 else None
+
+
+def supervised_train(problem, x, y, layout, *, algo: str = "svrg",
+                     epochs: int = 20, lr: float = 0.5, batch: int = 32,
+                     seed: int = 0, active_only: bool = False, w0=None,
+                     engine: str = "fused", engine_config=None,
+                     multi_dominator: bool = False, pipelined: bool = False,
+                     deep: bool = False, hidden: int = 32, d_rep: int = 16,
+                     deep_params=None, checkpoint_dir: Optional[str] = None,
+                     config: Optional[SupervisorConfig] = None):
+    """Run ``algorithms.train`` under supervision (the
+    ``train(..., supervise=True)`` implementation, linear + deep).
+
+    Training proceeds in ring-depth segments; after each, the recorded
+    objective trajectory is diagnosed and a diverged run is rolled back
+    to the last healthy checkpoint with the learning rate backed off.
+    Returns the final ``TrainResult`` with ``result.heals`` recording
+    every rollback."""
+    from repro.core.algorithms import train
+
+    if checkpoint_dir is None:
+        raise ValueError("supervise=True needs checkpoint_dir= (the "
+                         "rollback ring lives there)")
+    sup = Supervisor(config)
+    cfg = sup.cfg
+    lr_now = float(lr)
+    # pre-training objective: the spike baseline for an epoch-0 blowup
+    # (same init as the trainers: zeros / w0, seeded deep init)
+    if deep:
+        from repro.core import deep_vfl
+        import jax
+
+        d = np.asarray(x).shape[1]
+        p0 = deep_params if deep_params is not None else \
+            deep_vfl.init_deep_vfl(jax.random.PRNGKey(seed), layout, d,
+                                   hidden, d_rep)
+        base0 = _deep_objective(problem, p0, x, y, layout)
+    else:
+        wz = np.zeros(np.asarray(x).shape[1], np.float32) \
+            if w0 is None else np.asarray(w0)
+        base0 = _linear_objective(problem, wz, x, y)
+    done, resume, res = 0, None, None
+    while done < epochs:
+        seg_end = min(done + cfg.chunk, epochs)
+        res = train(problem, x, y, layout, algo=algo, epochs=seg_end,
+                    lr=lr_now, batch=batch, seed=seed,
+                    active_only=active_only, w0=w0, engine=engine,
+                    engine_config=engine_config,
+                    multi_dominator=multi_dominator, pipelined=pipelined,
+                    deep=deep, hidden=hidden, d_rep=d_rep,
+                    deep_params=deep_params, checkpoint_dir=checkpoint_dir,
+                    resume_from=resume, keep_last=cfg.keep_last,
+                    horizon_epochs=epochs)
+        objs = [h["objective"] for h in res.history]
+        bad = first_divergence(objs, cfg, base0=base0)
+        if bad is None:
+            done, resume = seg_end, checkpoint_dir
+            continue
+        target = bad                    # objs[bad] is epoch bad+1's loss
+        reason = "nonfinite" if not np.isfinite(objs[bad]) else "spike"
+        lr_now *= cfg.lr_backoff
+        sup.charge(HealEvent(attempt=len(sup.heals) + 1,
+                             diverged_epoch=bad + 1, rollback_step=target,
+                             reason=reason, lr=lr_now))
+        resume = _rollback(checkpoint_dir, target)
+        done = target
+    res.heals = [h.as_dict() for h in sup.heals]
+    return res
+
+
+def _linear_objective(problem, w, x, y) -> float:
+    import jax.numpy as jnp
+
+    agg = jnp.asarray(x) @ jnp.asarray(w)
+    return float(jnp.mean(problem.loss(agg, jnp.asarray(y)))
+                 + problem.lam * jnp.sum(problem.reg(jnp.asarray(w))))
+
+
+def _deep_objective(problem, params, x, y, layout) -> float:
+    import jax.numpy as jnp
+
+    x = jnp.asarray(x, jnp.float32)
+    z = 0.0
+    for p, (lo, hi) in enumerate(layout.bounds):
+        h = jnp.tanh(x[:, lo:hi] @ params.enc_w1[p] + params.enc_b1[p])
+        z = z + h @ params.enc_w2[p]
+    logit = z @ params.head
+    regv = sum(float(jnp.sum(problem.reg(l)))
+               for l in (list(params.enc_w1) + list(params.enc_b1)
+                         + list(params.enc_w2) + [params.head]))
+    return float(jnp.mean(problem.loss(logit, jnp.asarray(y)))
+                 + problem.lam * regv)
+
+
+def realized_epoch_delays(sched, delays_q, steps: int, epochs: int,
+                          tau: int) -> np.ndarray:
+    """Max realized (base + straggle-extra) delay per epoch, clamped to
+    τ — the adaptive-τ controller's evidence stream."""
+    extra = np.asarray(sched.extra)
+    out = np.zeros(epochs, np.float64)
+    for e in range(epochs):
+        win = extra[e * steps:(e + 1) * steps]
+        real = np.asarray(delays_q)[None, :] + win
+        out[e] = float(np.minimum(real, tau).max()) if real.size else 0.0
+    return out
+
+
+def supervised_guarded_run(problem, x, y, layout, trace, tau: int,
+                           epochs: int, lr: float, batch: int, *,
+                           algo: str = "sgd", seed: int = 0,
+                           guard: bool = True, deep: bool = False,
+                           hidden: int = 32, d_rep: int = 16,
+                           engine_config=None, delays_q=None,
+                           checkpoint_dir: Optional[str] = None,
+                           config: Optional[SupervisorConfig] = None):
+    """Guarded fault-trace training under supervision.
+
+    Wraps ``faults.run_guarded_fused`` (or the deep variant) in
+    ring-depth segments, diagnosing each from the objective AND the
+    :class:`HealthStats` stream: a non-finite partial that entered the
+    aggregate (only possible with ``guard=False``) heals by escalating
+    the guard on retry; objective spikes heal by LR backoff; and when
+    diverged epochs correlate with large realized delays the adaptive-τ
+    controller tightens the effective staleness bound by clamping the
+    base delay vector.  Returns ``(result_params, health, heals)``."""
+    from repro.core import faults
+
+    if checkpoint_dir is None:
+        raise ValueError("supervised guarded runs need checkpoint_dir=")
+    sup = Supervisor(config)
+    cfg = sup.cfg
+    n, _ = np.asarray(x).shape
+    steps = max(1, n // batch)
+    sched = trace.compile(layout.m)
+    base_delays = faults._base_delays(layout, tau, sched, delays_q, seed)
+    tau_eff = tau
+    lr_now = float(lr)
+    guard_now = bool(guard)
+    if deep:
+        import jax
+        from repro.core import deep_vfl
+
+        d = np.asarray(x).shape[1]
+        p0 = deep_vfl.init_deep_vfl(jax.random.PRNGKey(seed), layout, d,
+                                    hidden, d_rep)
+        base0 = _deep_objective(problem, p0, x, y, layout)
+    else:
+        base0 = _linear_objective(
+            problem, np.zeros(np.asarray(x).shape[1], np.float32), x, y)
+    done, resume = 0, None
+    # objective samples at segment boundaries: (epoch_boundary, objective)
+    samples: List[tuple] = []
+    diverged_eps: List[int] = []
+    result = health = None
+    while done < epochs:
+        seg_end = min(done + cfg.chunk, epochs)
+        run = faults.run_deep_guarded_fused if deep \
+            else faults.run_guarded_fused
+        kw = dict(algo=algo, seed=seed, guard=guard_now,
+                  delays_q=np.minimum(base_delays, tau_eff),
+                  engine_config=engine_config,
+                  checkpoint_dir=checkpoint_dir, resume_from=resume,
+                  keep_last=cfg.keep_last, horizon_epochs=epochs)
+        if deep:
+            kw.update(hidden=hidden, d_rep=d_rep)
+        result, health = run(problem, x, y, layout, trace, tau, seg_end,
+                             lr_now, batch, **kw)
+        obj = _deep_objective(problem, result, x, y, layout) if deep \
+            else _linear_objective(problem, result, x, y)
+        samples.append((seg_end, obj))
+        # health diagnosis first: poisoning names the exact epoch
+        pois = poisoned_steps(health)
+        pois[:, seg_end * steps:] = False
+        bad_ep: Optional[int] = None
+        reason = None
+        if pois.any():
+            first_t = int(np.argwhere(pois.any(axis=0))[0, 0])
+            bad_ep = first_t // steps
+            reason = "poisoned"
+        else:
+            objs = [o for _, o in samples]
+            bad_seg = first_divergence(objs, cfg, base0=base0)
+            if bad_seg == len(objs) - 1:
+                bad_ep = done          # blame the segment's first epoch
+                reason = "nonfinite" if not np.isfinite(obj) else "spike"
+        if bad_ep is None:
+            done, resume = seg_end, checkpoint_dir
+            continue
+        diverged_eps.append(bad_ep)
+        if reason == "poisoned" and cfg.guard_escalation and not guard_now:
+            guard_now = True           # quarantine instead of re-poisoning
+        else:
+            lr_now *= cfg.lr_backoff
+        realized = realized_epoch_delays(sched, base_delays, steps,
+                                         epochs, tau)
+        if delay_correlated(realized, diverged_eps, seg_end) \
+                and tau_eff > 0:
+            tau_eff = max(0, tau_eff - cfg.tau_backoff)
+        target = bad_ep                # step of last healthy checkpoint
+        sup.charge(HealEvent(attempt=len(sup.heals) + 1,
+                             diverged_epoch=bad_ep + 1,
+                             rollback_step=target, reason=reason,
+                             lr=lr_now, tau_eff=tau_eff, guard=guard_now))
+        resume = _rollback(checkpoint_dir, target)
+        done = target
+        samples = [(e, o) for e, o in samples if e <= target]
+    return result, health, [h.as_dict() for h in sup.heals]

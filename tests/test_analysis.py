@@ -123,6 +123,50 @@ def test_no_rekey_only_flagged_under_membership():
     assert flagged.get(NO_REKEY, 0) >= 1
 
 
+def test_is_finite_declassification():
+    """The health channel: a program that ships ONLY the finiteness
+    verdict of its private partial is clean (additive masks cannot hide
+    a NaN/Inf, so the verdict is protocol-public), while shipping the
+    raw partial still flags."""
+    def health_only(x):
+        healthy = jnp.all(jnp.isfinite(x)).astype(jnp.float32)
+        return jax.lax.psum(healthy, "model")
+
+    def raw_leak(x):
+        return jax.lax.psum(x, "model")
+
+    axis_env = [("model", 4)]
+    jx = jax.make_jaxpr(health_only, axis_env=axis_env)(jnp.ones(8))
+    assert finding_codes(analyze_party_jaxpr(jx, [0], axis="model")) == {}
+    jx2 = jax.make_jaxpr(raw_leak, axis_env=axis_env)(jnp.ones(8))
+    flagged = finding_codes(analyze_party_jaxpr(jx2, [0], axis="model"))
+    assert flagged.get(UNMASKED, 0) >= 1
+
+
+def test_guarded_entries_lint_like_faulted(quick_reports):
+    """Guarded epochs are membership-varying (the quarantine drops
+    parties), so they must be analyzed with mask re-keying required."""
+    guarded = [r for r in quick_reports
+               if r.name == f"guarded_sgd{ep.TAU}_1"]
+    assert guarded
+    for r in guarded:
+        assert r.membership and r.gated, r.key
+        if r.secure != "off":
+            assert r.taint == {}, (r.key, r.taint)
+
+
+def test_membership_invariant_gates_guarded_entries():
+    """The lint invariant: a guarded/faulted entry analyzed WITHOUT
+    membership semantics is a hard check_reports error."""
+    reports = ep.analyze_matrix(secure_modes=("ring",),
+                                names=(f"guarded_sgd{ep.TAU}_1",))
+    assert ep.check_reports(reports) == []
+    for r in reports:
+        r.membership = False
+    errs = ep.check_reports(reports)
+    assert any("membership" in e for e in errs)
+
+
 # -- ring-buffer staleness audits -------------------------------------------
 
 def test_delayed_rings_bounded_ungated(quick_reports):

@@ -12,6 +12,30 @@ def ds():
     return classification_dataset("as", 600, 24, seed=2, noise=0.4)
 
 
+def test_transport_knobs_validation():
+    k = async_engine.TransportKnobs()
+    k.validate()  # defaults are sane
+    with pytest.raises(ValueError, match="put_timeout"):
+        async_engine.TransportKnobs(put_timeout=0.0).validate()
+    with pytest.raises(ValueError, match="crashed_poll"):
+        async_engine.TransportKnobs(crashed_poll=-1.0).validate()
+
+
+@pytest.mark.slow
+def test_async_runs_with_custom_transport(ds):
+    layout = algorithms.PartyLayout.even(24, 4, 2)
+    prob = losses.logistic_l2()
+    knobs = async_engine.TransportKnobs(put_timeout=0.02, get_timeout=0.02,
+                                        crashed_poll=0.002,
+                                        frozen_poll=0.001)
+    res = async_engine.run_async(prob, ds.x_train, ds.y_train, layout,
+                                 lr=0.2, batch=16, total_epochs=2.0,
+                                 threads_per_party=2, base_delay=1e-3,
+                                 transport=knobs)
+    assert res.updates > 0
+    assert res.loss_trace[-1][2] < res.loss_trace[0][2]
+
+
 @pytest.mark.slow
 def test_async_training_decreases_loss(ds):
     layout = algorithms.PartyLayout.even(24, 4, 2)

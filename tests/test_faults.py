@@ -181,8 +181,8 @@ def _kill_after(monkeypatch, step_to_kill):
 
     orig = ckpt.save_checkpoint
 
-    def killer(path, tree, step=0):
-        orig(path, tree, step=step)
+    def killer(path, tree, step=0, **kw):
+        orig(path, tree, step=step, **kw)
         if step == step_to_kill:
             raise _Preempt()
 

@@ -88,6 +88,23 @@ def test_transcript_audit_across_dropout_boundary():
     assert tr1.seen_by(2) == []
 
 
+def test_strict_refuses_to_degrade_below_three():
+    """strict=True turns the < 3-survivor protocol degrade into a hard
+    error (no Definition-4 tree pair exists over 2 survivors)."""
+    parts = _partials(np.random.default_rng(0))
+    alive = [True, False, False, False, True]
+    with pytest.raises(RuntimeError, match="strict=True"):
+        secure_aggregate_survivors(parts, alive, np.random.default_rng(1),
+                                   strict=True)
+    # >= 3 survivors: strict mode is the normal protocol
+    alive = [True, True, False, False, True]
+    val, _ = secure_aggregate_survivors(parts, alive,
+                                        np.random.default_rng(1),
+                                        strict=True)
+    np.testing.assert_allclose(val, parts[0] + parts[1] + parts[4],
+                               atol=1e-9)
+
+
 def test_no_survivors_rejected():
     with pytest.raises(ValueError, match="surviving party"):
         secure_aggregate_survivors(_partials(np.random.default_rng(0)),

@@ -1,0 +1,276 @@
+"""The self-healing training supervisor: divergence detection units,
+checkpoint-ring retention + rollback machinery, bit-exact rollback
+targets, heal-to-completion under ``train(..., supervise=True)``, guard
+escalation after aggregate poisoning, the adaptive-τ controller, and
+the bounded retry budget."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (checkpoint_step, checkpoint_steps,
+                                   discard_after, latest_checkpoint,
+                                   load_checkpoint, save_checkpoint)
+from repro.core import faults, losses, supervisor
+from repro.core.algorithms import PartyLayout, train
+from repro.core.supervisor import (DivergenceError, SupervisorConfig,
+                                   delay_correlated, first_divergence,
+                                   poisoned_steps, realized_epoch_delays,
+                                   supervised_guarded_run)
+
+TAU = 2
+BATCH = 8
+STEPS = 6  # n // batch
+
+
+@pytest.fixture(scope="module")
+def ds():
+    rng = np.random.default_rng(7)
+    n, d = 48, 12
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = ((rng.random(n) > 0.5).astype(np.float32) * 2 - 1)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def layout():
+    return PartyLayout.even(12, 4, 2)
+
+
+# -- config validation ------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="keep_last >= 2"):
+        SupervisorConfig(keep_last=1)
+    with pytest.raises(ValueError, match="window >= 1"):
+        SupervisorConfig(window=0)
+    with pytest.raises(ValueError, match="spike_factor > 1"):
+        SupervisorConfig(spike_factor=1.0)
+    assert SupervisorConfig(keep_last=4).chunk == 3
+
+
+# -- divergence detection units --------------------------------------------
+
+def test_first_divergence_nonfinite_and_spike():
+    cfg = SupervisorConfig(window=3, spike_factor=5.0)
+    assert first_divergence([0.9, 0.8, np.nan, 0.7], cfg) == 2
+    assert first_divergence([0.9, 0.8, np.inf], cfg) == 2
+    # spike: > factor × trailing median
+    assert first_divergence([1.0, 1.1, 0.9, 100.0], cfg) == 3
+    assert first_divergence([1.0, 1.1, 0.9, 0.8], cfg) is None
+    # decreasing trajectories never trip
+    assert first_divergence([5.0, 2.0, 1.0, 0.5], cfg) is None
+
+
+def test_first_divergence_epoch_zero_needs_base0():
+    """Without a pre-training baseline an immediate blowup has no trail
+    to spike against; base0 supplies it."""
+    cfg = SupervisorConfig(window=3, spike_factor=5.0)
+    # a flat-but-blown trajectory never spikes against itself...
+    assert first_divergence([1e6, 1e6], cfg) is None
+    # ...but against the pre-training objective epoch 0 is caught
+    assert first_divergence([1e6, 1e6], cfg, base0=0.7) == 0
+    # without base0 the earliest catchable epoch is 1 (first with a trail)
+    assert first_divergence([1e6, 1e7], cfg) == 1
+    # non-finite epoch 0 is caught either way
+    assert first_divergence([np.nan], cfg) == 0
+
+
+def test_poisoned_steps_distinguishes_quarantine():
+    finite = np.asarray([[1, 0, 1], [1, 1, 0]], np.float32)
+    alive = np.asarray([[1, 0, 1], [1, 1, 1]], np.float32)
+    h = faults.HealthStats(finite=finite, alive=alive,
+                           pnorm=np.ones_like(finite),
+                           gnorm=np.ones_like(finite))
+    pois = poisoned_steps(h)
+    # (0, 1): non-finite but quarantined -> a contained event, not poison
+    assert not pois[0, 1]
+    # (1, 2): non-finite AND still live -> entered the aggregate
+    assert pois[1, 2]
+    assert pois.sum() == 1
+
+
+def test_delay_correlated():
+    realized = [0.0, 0.0, 2.0, 0.0]
+    assert delay_correlated(realized, [2], total=4)
+    assert not delay_correlated(realized, [1], total=4)
+    # degenerate splits never trigger
+    assert not delay_correlated(realized, [], total=4)
+    assert not delay_correlated(realized, [0, 1, 2, 3], total=4)
+
+
+def test_realized_epoch_delays(layout):
+    ev = (faults.FaultEvent(STEPS + 2, 1, "straggle", k=5),)
+    tr = faults.FaultTrace(q=layout.q, steps=3 * STEPS, events=ev)
+    sched = tr.compile()
+    base = np.asarray([1, 0, 0, 0])
+    out = realized_epoch_delays(sched, base, STEPS, 3, TAU)
+    # epoch 0/2: just the base delay; epoch 1: straggle clamped to τ
+    np.testing.assert_allclose(out, [1.0, float(TAU), 1.0])
+
+
+# -- checkpoint ring retention + rollback helpers ---------------------------
+
+def test_retention_ring_and_latest(tmp_path):
+    path = str(tmp_path / "ring")
+    tree = {"w": np.arange(4, dtype=np.float32)}
+    for s in range(1, 6):
+        save_checkpoint(path, {"w": tree["w"] + s}, step=s, keep_last=3)
+    assert checkpoint_steps(path) == [3, 4, 5]
+    assert latest_checkpoint(path).endswith("checkpoint-00000005.npz")
+    assert checkpoint_step(path) == 5
+    # step-addressed load reaches back into the ring
+    out = load_checkpoint(path, tree, step=4)
+    np.testing.assert_array_equal(out["w"], tree["w"] + 4)
+    with pytest.raises(ValueError, match="no step-2 checkpoint"):
+        load_checkpoint(path, tree, step=2)
+
+
+def test_keep_last_none_and_invalid(tmp_path):
+    path = str(tmp_path / "all")
+    tree = {"w": np.zeros(2, np.float32)}
+    for s in range(1, 4):
+        save_checkpoint(path, tree, step=s, keep_last=None)
+    assert checkpoint_steps(path) == [1, 2, 3]
+    with pytest.raises(ValueError, match="keep_last"):
+        save_checkpoint(path, tree, step=4, keep_last=0)
+
+
+def test_discard_after_rollback(tmp_path):
+    path = str(tmp_path / "rb")
+    tree = {"w": np.zeros(2, np.float32)}
+    for s in range(1, 5):
+        save_checkpoint(path, tree, step=s, keep_last=None)
+    discard_after(path, 2)
+    assert checkpoint_steps(path) == [1, 2]
+    assert checkpoint_step(path) == 2
+    # idempotent; discarding everything leaves an empty ring
+    discard_after(path, 0)
+    assert checkpoint_steps(path) == []
+    assert latest_checkpoint(path) is None
+
+
+# -- bit-exact rollback target ----------------------------------------------
+
+def test_ring_bundle_equals_shorter_run(tmp_path, ds, layout):
+    """The supervisor's rollback guarantee: the step-r bundle of a long
+    run is bit-identical to the final state of an r-epoch run with the
+    same horizon — restoring it IS rewinding the trainer."""
+    x, y = ds
+    prob = losses.logistic_l2(1e-3)
+    kw = dict(algo="sgd", lr=0.3, batch=BATCH, seed=1, engine="fused",
+              keep_last=4, horizon_epochs=4)
+    a, b = str(tmp_path / "long"), str(tmp_path / "short")
+    train(prob, x, y, layout, epochs=4, checkpoint_dir=a, **kw)
+    train(prob, x, y, layout, epochs=2, checkpoint_dir=b, **kw)
+    da = np.load(os.path.join(a, "checkpoint-00000002.npz"))
+    db = np.load(os.path.join(b, "checkpoint-00000002.npz"))
+    assert sorted(da.files) == sorted(db.files)
+    for k in da.files:
+        np.testing.assert_array_equal(da[k], db[k], err_msg=k)
+
+
+# -- supervised training: heal to completion --------------------------------
+
+def test_supervised_train_heals_lr_spike(tmp_path, ds, layout):
+    """Ridge at a divergent learning rate: unsupervised blows up;
+    supervise=True rolls back, backs the rate off, and converges."""
+    x, y = ds
+    prob = losses.ridge(1e-3)
+    kw = dict(algo="sgd", epochs=6, lr=50.0, batch=BATCH, seed=1,
+              engine="fused")
+    bad = train(prob, x, y, layout, **kw)
+    assert not np.isfinite([h["objective"] for h in bad.history]).all()
+
+    res = train(prob, x, y, layout, supervise=True,
+                supervisor_config=SupervisorConfig(lr_backoff=0.1,
+                                                   max_retries=4),
+                checkpoint_dir=str(tmp_path / "sup"), **kw)
+    assert res.heals, "expected at least one rollback"
+    assert all(h["reason"] in ("nonfinite", "spike") for h in res.heals)
+    assert all(h["lr"] < 50.0 for h in res.heals)
+    objs = [h["objective"] for h in res.history]
+    assert np.isfinite(objs).all()
+    assert objs[-1] < objs[0]
+
+
+def test_supervised_train_clean_run_untouched(tmp_path, ds, layout):
+    """A healthy run under supervision matches the unsupervised one
+    exactly — segmenting against the ring must not change the math."""
+    x, y = ds
+    prob = losses.logistic_l2(1e-3)
+    kw = dict(algo="sgd", epochs=4, lr=0.3, batch=BATCH, seed=1,
+              engine="fused")
+    plain = train(prob, x, y, layout, **kw)
+    sup = train(prob, x, y, layout, supervise=True,
+                checkpoint_dir=str(tmp_path / "clean"), **kw)
+    assert sup.heals == []
+    np.testing.assert_array_equal(np.asarray(sup.w), np.asarray(plain.w))
+    np.testing.assert_allclose(
+        [h["objective"] for h in sup.history],
+        [h["objective"] for h in plain.history], rtol=1e-6)
+
+
+def test_divergence_error_on_exhausted_budget(tmp_path, ds, layout):
+    """lr_backoff=1 retries the identical divergent run: the bounded
+    budget must turn that into DivergenceError, not an infinite loop."""
+    x, y = ds
+    prob = losses.ridge(1e-3)
+    cfg = SupervisorConfig(max_retries=2, lr_backoff=1.0, keep_last=2)
+    with pytest.raises(DivergenceError, match="after 2 rollbacks"):
+        train(prob, x, y, layout, algo="sgd", epochs=6, lr=50.0,
+              batch=BATCH, seed=1, engine="fused", supervise=True,
+              supervisor_config=cfg,
+              checkpoint_dir=str(tmp_path / "exhaust"))
+
+
+# -- supervised guarded runs: escalation + adaptive τ -----------------------
+
+def test_guard_escalation_after_poisoning(tmp_path, ds, layout):
+    """guard=False + a NaN partial poisons the aggregate; the supervisor
+    diagnoses it from the health stream, escalates the guard (retrying
+    unguarded would re-poison deterministically), and completes."""
+    x, y = ds
+    prob = losses.logistic_l2(1e-3)
+    epochs = 4
+    ev = (faults.FaultEvent(2 * STEPS + 1, 1, "corrupt", mode="nan"),)
+    tr = faults.FaultTrace(q=layout.q, steps=epochs * STEPS, events=ev)
+    w, health, heals = supervised_guarded_run(
+        prob, x, y, layout, tr, TAU, epochs, 0.3, BATCH, algo="sgd",
+        seed=1, guard=False, checkpoint_dir=str(tmp_path / "esc"),
+        config=SupervisorConfig(keep_last=2))
+    assert len(heals) == 1
+    assert heals[0]["reason"] == "poisoned"
+    assert heals[0]["diverged_epoch"] == 3
+    assert heals[0]["rollback_step"] == 2
+    assert heals[0]["guard"] is True
+    assert np.isfinite(np.asarray(w)).all()
+    # healed horizon: the event is recorded but never enters the sum
+    assert not poisoned_steps(health).any()
+    assert np.asarray(health.finite)[1, 2 * STEPS + 1] == 0
+
+
+def test_adaptive_tau_tightens_on_delay_correlated_spike(tmp_path, ds,
+                                                         layout):
+    """A blowup spike coinciding with a straggler: the τ controller sees
+    the diverged epoch's realized delay exceed the healthy mean and
+    clamps the effective bound alongside the LR backoff."""
+    x, y = ds
+    prob = losses.ridge(1e-3)
+    epochs = 5
+    ev = (faults.FaultEvent(2 * STEPS + 1, 1, "corrupt", mode="blowup"),
+          faults.FaultEvent(2 * STEPS + 1, 1, "straggle", k=2))
+    tr = faults.FaultTrace(q=layout.q, steps=epochs * STEPS, events=ev)
+    cfg = SupervisorConfig(window=3, spike_factor=3.0, max_retries=5,
+                           lr_backoff=0.1, keep_last=2)
+    w, health, heals = supervised_guarded_run(
+        prob, x, y, layout, tr, TAU, epochs, 0.05, BATCH, algo="sgd",
+        seed=1, guard=True, delays_q=np.zeros(layout.q, np.int64),
+        checkpoint_dir=str(tmp_path / "tau"), config=cfg)
+    assert heals, "expected the blowup epoch to spike"
+    assert heals[0]["reason"] == "spike"
+    assert heals[0]["tau_eff"] == TAU - 1
+    assert heals[0]["lr"] == pytest.approx(0.005)
+    assert np.isfinite(np.asarray(w)).all()
+    # blowup is finite: never flagged non-finite, only norm-visible
+    assert np.asarray(health.finite).min() == 1
