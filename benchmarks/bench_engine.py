@@ -1143,3 +1143,111 @@ def run_guards(quick: bool = False):
     }
     save("engine_guards", rec)
     return rec
+
+
+def run_scalability(quick: bool = False):
+    """Party-axis scaling: q packed past the device mesh (PartyMesh).
+
+    Sweeps q ∈ {8, 64, 256} (quick tier: {8, 64}) with ``slots =
+    min(q, 8)`` — q = 8 is the flat one-party-per-slot engine, larger q
+    packs ``parties_per_slot`` logical parties as the inner vmapped axis
+    of each slot and aggregation goes hierarchical
+    (``secure_psum_hier``: intra-slot tree reduce, then cross-slot
+    two-tree).  Per q:
+
+    * fused SGD epoch steps/sec, secure=off and secure=two_tree;
+    * per-step cross-party collective volume from the trip-count-aware
+      jaxpr account (``analysis.volume.jaxpr_collective_volume`` over
+      the recorded party program, restricted to the party axes — bytes
+      each logical party moves across the masked boundary per step);
+    * deterministic gates: ZERO host-transfer primitives in the epoch
+      jaxpr (asserted) and the whole epoch is still ONE dispatch at any
+      q; the per-step boundary bytes gate against ``BENCH_engine.json``
+      (``scalability`` key — byte counts are exact, so any drift is a
+      real protocol change), wall-clock headlines are advisory.
+    """
+    from repro.analysis.volume import jaxpr_collective_volume
+    from repro.sharding.api import PartyMesh
+
+    qs = (8, 64) if quick else (8, 64, 256)
+    n = 512 if quick else 1024
+    batch = 64
+    steps = n // batch
+    m = 2
+    reps = 3 if quick else 5
+
+    prob = losses.logistic_l2()
+    key = jax.random.PRNGKey(0)
+    base = tier_baseline("scalability", quick)
+    cfg = {"n": n, "qs": list(qs), "m": m, "batch": batch, "steps": steps,
+           "backend": jax.default_backend()}
+    per_q: dict = {}
+
+    for q in qs:
+        d = max(2 * q, 128)          # >= 2 features per party
+        rng = np.random.default_rng(q)
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        y = np.sign(rng.standard_normal(n)).astype(np.float32)
+        layout = algorithms.PartyLayout.even(d, q, m)
+        pm = PartyMesh(q=q, slots=min(q, 8))
+
+        engines = {
+            mode: FusedEngine(prob, x, y, layout, EngineConfig(secure=mode),
+                              mesh=pm)
+            for mode in ("off", "two_tree")}
+        wq0 = engines["off"].pack_w(np.zeros(d, np.float32))
+
+        sps = {}
+        for mode, eng in engines.items():
+            def epoch(eng=eng):
+                return jax.block_until_ready(
+                    eng.sgd_epoch(wq0, 0.3, key, batch, steps))
+            dt = best_of(epoch, repeat=reps)
+            sps[mode] = steps / dt
+            emit(f"engine/scalability_q{q}_{mode}", dt * 1e6,
+                 f"steps_per_sec={sps[mode]:.0f} slots={pm.slots} "
+                 f"parties_per_slot={pm.parties_per_slot}")
+
+        # --- structural gates: one dispatch, zero host transfers ----------
+        eng = engines["two_tree"]
+        jaxpr = eng.sgd_epoch_jaxpr(wq0, 0.3, key, batch, steps)
+        transfers = count_host_transfers(jaxpr)
+        assert transfers == 0, (
+            f"q={q} packed epoch contains {transfers} host-transfer "
+            "primitives (hierarchical agg must stay in-program)")
+
+        # --- per-step boundary traffic, per logical party -----------------
+        pp = eng.party_program("sgd")
+        vol = jaxpr_collective_volume(pp.trace(), axes=pp.boundary_axes)
+        bytes_per_step = vol["total_bytes"] / steps
+        emit(f"engine/scalability_q{q}_boundary_bytes", 0.0,
+             f"bytes_per_step_per_party={bytes_per_step:.0f} "
+             f"sites={sum(vol['counts'].values())}")
+
+        committed = base.get("per_q", {}).get(str(q), {})
+        warn_on_drift(f"scalability_q{q}_bytes_per_step", bytes_per_step,
+                      committed.get("boundary_bytes_per_step"),
+                      fresh_config=cfg, committed_config=base.get("config"))
+        warn_on_drift(f"scalability_q{q}_two_tree_steps_per_sec",
+                      sps["two_tree"],
+                      committed.get("two_tree_steps_per_sec"),
+                      tol=ratio_tol(quick), gate=False,
+                      fresh_config=cfg, committed_config=base.get("config"))
+
+        per_q[str(q)] = {
+            "d": d, "slots": pm.slots,
+            "parties_per_slot": pm.parties_per_slot,
+            "off_steps_per_sec": sps["off"],
+            "two_tree_steps_per_sec": sps["two_tree"],
+            "boundary_bytes_per_step": bytes_per_step,
+            "boundary_counts_per_epoch": vol["counts"],
+            "host_transfer_prims": transfers,
+        }
+
+    rec = {
+        "config": cfg,
+        "per_q": per_q,
+        "dispatches_per_epoch": {"fused": 1, "per_minibatch": steps},
+    }
+    save("engine_scalability", rec)
+    return rec

@@ -43,8 +43,12 @@ def main() -> None:
             scale=0.25 if args.quick else 0.5),
         "async": lambda: bench_async.run(
             epochs=3.0 if args.quick else 6.0),
-        "scalability": lambda: bench_scalability.run(
+        # thread-sim party sweep (paper Figs. 2/7) — renamed so the
+        # engine's party-axis scaling suite can own "scalability"
+        "async_scalability": lambda: bench_scalability.run(
             epochs=1.5 if args.quick else 3.0),
+        "scalability": lambda: bench_engine.run_scalability(
+            quick=args.quick),
         "staleness": lambda: bench_staleness.run(
             epochs=4 if args.quick else 8),
         "secure_agg": bench_secure_agg.run,

@@ -36,11 +36,19 @@ from repro.analysis.walkers import count_cross_party, count_host_transfers
 from repro.core import deep_vfl, losses
 from repro.core.algorithms import PartyLayout
 from repro.core.engine import EngineConfig, FusedEngine
+from repro.sharding.api import PartyMesh
 
 # fixture dimensions — small enough that tracing the whole matrix is fast
 N, D, Q, M = 48, 12, 4, 2
 BATCH, STEPS, TAU = 8, 3, 2
 HIDDEN, DREP = 4, 3
+
+#: hierarchical packings for the ``hier_*`` entries: the Q logical
+#: parties folded onto Q//2 slots (2 parties per slot, vmap emulation),
+#: optionally with the sample-parallel data axis enabled.  Lints the
+#: two-level masked aggregation under the multi-axis boundary rule.
+HIER = PartyMesh(q=Q, slots=Q // 2)
+HIER_DDP = PartyMesh(q=Q, slots=Q // 2, data_shards=2)
 
 #: security modes of the shipped engine ("two_tree_sf" = two_tree with the
 #: schedule-faithful ppermute replay of the paper's T1/T2 round structure)
@@ -51,12 +59,16 @@ SECURE_MODES = ("off", "two_tree", "ring", "two_tree_sf")
 class Entry:
     """One traceable engine entry point."""
 
-    name: str                 # jit name, e.g. "sgd", "deep_delayed2"
+    name: str                 # report name, e.g. "sgd", "hier_sgd"
     trace: Callable           # (eng, fix) -> whole-epoch jaxpr (triggers
     #                           party-program recording as a side effect)
     tau: Optional[int] = None  # ring-buffer audit expected iff set
     membership: bool = False   # taint analysis under membership changes
     gated: bool = False        # rings are liveness-gated (faulted epochs)
+    pmesh: Optional[PartyMesh] = None  # hierarchical packing (None = flat)
+    prog: Optional[str] = None  # recorded party-program name, if it
+    #                             differs from ``name`` (hier_* entries
+    #                             reuse the flat builders)
 
 
 @dataclasses.dataclass
@@ -86,7 +98,8 @@ class EntryReport:
 class _Fixture:
     """Deterministic tiny dataset + per-mode engines."""
 
-    def __init__(self, secure: str, use_kernel: bool = False):
+    def __init__(self, secure: str, use_kernel: bool = False,
+                 pmesh: Optional[PartyMesh] = None):
         key = jax.random.key(0)
         self.key = key
         self.x = jax.random.normal(key, (N, D), jnp.float32)
@@ -101,7 +114,7 @@ class _Fixture:
                                 use_kernel=use_kernel,
                                 interpret=use_kernel)
         self.eng = FusedEngine(self.prob, self.x, self.y, self.layout,
-                               self.cfg)
+                               self.cfg, mesh=pmesh)
         self.w = self.eng.pack_w(jnp.zeros(D, jnp.float32))
         self.dp = self.w.shape[1]
         self.delays = jnp.full((Q,), 1, jnp.int32)
@@ -248,12 +261,24 @@ def _entries() -> List[Entry]:
               membership=True, gated=True),
         Entry(f"deep_guarded_sgd{TAU}_1", deep_guarded_sgd, tau=TAU,
               membership=True, gated=True),
+        # hierarchical packings: same builders, engine bound to a
+        # PartyMesh so aggregation is two-level and the taint boundary
+        # spans (slot axis, packed party axis) — plus one entry with the
+        # sample-parallel data axis enabled (sliced minibatches, masks
+        # folded per data shard)
+        Entry("hier_sgd", sgd, pmesh=HIER, prog="sgd"),
+        Entry("hier_svrg", svrg, pmesh=HIER, prog="svrg"),
+        Entry(f"hier_faulted_sgd{TAU}", faulted_sgd, tau=TAU,
+              membership=True, gated=True, pmesh=HIER,
+              prog=f"faulted_sgd{TAU}"),
+        Entry("hier_deep_sgd", deep_sgd, pmesh=HIER, prog="deep_sgd"),
+        Entry("hier_sgd_ddp", sgd, pmesh=HIER_DDP, prog="sgd"),
     ]
 
 
 #: entry names for the quick (test-sized) matrix
 QUICK = ("sgd", f"delayed{TAU}", f"faulted_sgd{TAU}",
-         f"guarded_sgd{TAU}_1", "deep_sgd")
+         f"guarded_sgd{TAU}_1", "deep_sgd", "hier_sgd")
 
 
 def entry_names() -> List[str]:
@@ -275,14 +300,19 @@ def analyze_matrix(secure_modes: Sequence[str] = SECURE_MODES,
     entries = [e for e in _entries()
                if names is None or e.name in set(names)]
     for secure in secure_modes:
-        fx = _Fixture(secure)
+        fixtures: Dict[Optional[PartyMesh], _Fixture] = {}
         for ent in entries:
             if progress is not None:
                 progress(f"{secure}/{ent.name}")
+            if ent.pmesh not in fixtures:
+                fixtures[ent.pmesh] = _Fixture(secure, pmesh=ent.pmesh)
+            fx = fixtures[ent.pmesh]
             epoch_jx = ent.trace(fx.eng, fx)
-            pp = fx.eng.party_program(ent.name)
+            pp = fx.eng.party_program(ent.prog or ent.name)
             pj = pp.trace()
-            findings = analyze_party_jaxpr(pj, [0], axis=pp.axis,
+            # boundary_axes is the full logical-party axis tuple — just
+            # (axis,) for flat engines, (axis, party_axis) when packed
+            findings = analyze_party_jaxpr(pj, [0], axis=pp.boundary_axes,
                                            membership=ent.membership)
             rings = ([a.to_dict() for a in ring_audit(pj, ent.tau)]
                      if ent.tau is not None else [])

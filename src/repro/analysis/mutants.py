@@ -19,7 +19,13 @@ The mutants:
   alive-set fingerprint: after a dropout the surviving masks no longer
   cancel pairwise, and mask streams are reused across membership
   configurations → ``mask-not-membership-keyed`` (caught only under
-  ``membership=True``, which is how faulted entries are analyzed).
+  ``membership=True``, which is how faulted entries are analyzed);
+* ``hier_inner_only`` — hierarchical (slot × packed-party) aggregation
+  whose mask key is folded with the *inner* party index only: parties in
+  the same inner position of different slots share a mask stream, so the
+  key is not distinct per logical party → ``mask-not-party-distinct``
+  under the two-axis boundary rule (the matching positive control is the
+  shipped ``secure_psum_hier``, which folds both levels).
 """
 from __future__ import annotations
 
@@ -37,9 +43,20 @@ AXIS = "model"
 Q = 4
 _SHAPE = (8,)
 
+# hierarchical packing self-test: q = SLOTS × PPS logical parties over
+# the (outer slot axis, inner vmapped party axis) pair
+INNER_AXIS = "party"
+SLOTS, PPS = 2, 2
+HIER_AXES = (AXIS, INNER_AXIS)
+
 
 def _trace(fn, *args):
     return jax.make_jaxpr(fn, axis_env=[(AXIS, Q)])(*args)
+
+
+def _trace_hier(fn, *args):
+    return jax.make_jaxpr(
+        fn, axis_env=[(AXIS, SLOTS), (INNER_AXIS, PPS)])(*args)
 
 
 def off_psum(z):
@@ -76,6 +93,28 @@ def control_ring_members(z, key, alive):
     return secure_agg.secure_psum_ring_members(z, AXIS, key, alive)
 
 
+def hier_inner_only(z, key):
+    """Mutant: hierarchical agg keyed by the inner party index only.
+
+    Both levels mask, but every key folds just ``axis_index(INNER_AXIS)``
+    — parties sitting at the same packed position in different slots draw
+    identical δ streams, so the composed mask is not distinct per
+    *logical* party.
+    """
+    si = jax.lax.axis_index(INNER_AXIS)
+    k = jax.random.fold_in(key, si)                  # no slot-index fold!
+    d1 = jax.random.normal(k, z.shape, jnp.float32)
+    z_slot = jax.lax.psum(z + d1, INNER_AXIS) - jax.lax.psum(d1, INNER_AXIS)
+    d2 = jax.random.normal(jax.random.fold_in(k, 1), z.shape, jnp.float32)
+    return jax.lax.psum(z_slot + d2, AXIS) - jax.lax.psum(d2, AXIS)
+
+
+def control_hier(z, key):
+    """Positive control: the shipped hierarchical masked reduction."""
+    return secure_agg.secure_psum_hier(z, AXIS, INNER_AXIS, key,
+                                       slots=SLOTS, pps=PPS)
+
+
 @dataclasses.dataclass
 class MutantResult:
     name: str
@@ -108,9 +147,18 @@ def run_selftest() -> List[MutantResult]:
         ("control_ring_members", _trace(control_ring_members, z, key, alive),
          True, {}),
     ]
+    hier_cases = [
+        ("hier_inner_only", _trace_hier(hier_inner_only, z, key), False,
+         {EQUAL_SEEDED: 1}),
+        ("control_hier", _trace_hier(control_hier, z, key), False, {}),
+    ]
     results = []
     for name, jx, membership, expected in cases:
         findings = analyze_party_jaxpr(jx, [0], axis=AXIS,
+                                       membership=membership)
+        results.append(MutantResult(name, expected, finding_codes(findings)))
+    for name, jx, membership, expected in hier_cases:
+        findings = analyze_party_jaxpr(jx, [0], axis=HIER_AXES,
                                        membership=membership)
         results.append(MutantResult(name, expected, finding_codes(findings)))
     return results

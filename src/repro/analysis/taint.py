@@ -23,14 +23,16 @@ entry point* by static dataflow over the per-party jaxpr:
   ``scan``/``while`` fixpoints, ``cond`` branches, ``pjit`` bodies, and
   opaque combinators (``pallas_call``: any-in → all-out);
 * **mask provenance** starts at ``random_bits`` outputs.  Each PRNG
-  stream carries two provenance flags: ``party_distinct`` (its key
-  depends on ``axis_index`` over the party axis) and
-  ``membership_keyed`` (its key depends on an ``all_gather``'d liveness
-  vector — the alive-set fingerprint re-key);
+  stream records the *set of party axes* its key depends on (via
+  ``axis_index`` folds) plus a ``membership_keyed`` flag (key depends on
+  an ``all_gather``'d liveness vector — the alive-set fingerprint
+  re-key).  With hierarchical packing the logical party index factors
+  over two named axes (outer slot × inner packed party), so a stream is
+  party-distinct only if its axis set covers them all;
 * at every cross-party primitive, each tainted operand must carry at
-  least one party-distinct mask stream (and, for membership-varying
-  entry points, one that is also membership-keyed) — otherwise a named
-  finding is emitted.
+  least one mask stream distinct per *logical* party (and, for
+  membership-varying entry points, one that is also membership-keyed) —
+  otherwise a named finding is emitted.
 
 Soundness stance: this is a linter, not a proof assistant.  Taint and
 mask provenance both propagate by union through unknown primitives, so a
@@ -56,11 +58,16 @@ except AttributeError:             # pragma: no cover - very old jax
     from jax._src.core import Literal
 
 
-# A PRNG stream: (id of the random_bits eqn, party_distinct,
-# membership_keyed).  Streams are compared structurally so a fixpoint
-# over scan carries terminates (the stream set is bounded by the number
-# of random_bits equations in the program).
-Stream = Tuple[int, bool, bool]
+# A PRNG stream: (id of the random_bits eqn, frozenset of party-axis
+# names its key depends on via axis_index, membership_keyed).  A stream
+# is party-distinct for a boundary iff its axis set covers EVERY party
+# axis — under the hierarchical (slots × parties_per_slot) factorization
+# a key folded with only one of the two indices repeats across the
+# other, so coverage of the full set is what "distinct per logical
+# party" means.  Streams are compared structurally so a fixpoint over
+# scan carries terminates (the stream set is bounded by the number of
+# random_bits equations in the program).
+Stream = Tuple[int, FrozenSet[str], bool]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,13 +76,14 @@ class Props:
 
     taint: bool = False            # derives from a party-private source
     streams: FrozenSet[Stream] = frozenset()   # PRNG streams in provenance
-    party_dep: bool = False        # depends on axis_index over party axis
+    # party-axis names whose axis_index is in this value's provenance
+    party_dep: FrozenSet[str] = frozenset()
     alive_dep: bool = False        # depends on an all_gather'd vector
 
     def join(self, other: "Props") -> "Props":
         return Props(self.taint or other.taint,
                      self.streams | other.streams,
-                     self.party_dep or other.party_dep,
+                     self.party_dep | other.party_dep,
                      self.alive_dep or other.alive_dep)
 
 
@@ -103,8 +111,10 @@ NO_REKEY = "mask-not-membership-keyed"
 
 
 class _Analyzer:
-    def __init__(self, axis: str, membership: bool):
-        self.axis = axis
+    def __init__(self, axis, membership: bool):
+        # ``axis`` is one party-axis name or a tuple of them (hierarchical
+        # packing: the outer slot axis plus the inner vmapped party axis).
+        self.axes = frozenset((axis,) if isinstance(axis, str) else axis)
         self.membership = membership
         self.findings: List[TaintFinding] = []
         self.emit = True           # silenced during fixpoint pre-passes
@@ -124,30 +134,40 @@ class _Analyzer:
 
     # -- boundary checking ---------------------------------------------------
 
-    def _axis_match(self, params) -> bool:
-        """Does this collective operate over the party axis?"""
+    @staticmethod
+    def _eqn_axes(params) -> FrozenSet[str]:
         axes = params.get("axes", params.get("axis_name", ()))
         if isinstance(axes, (str, int)):
             axes = (axes,)
         try:
-            return self.axis in tuple(axes)
+            return frozenset(a for a in tuple(axes) if isinstance(a, str))
         except TypeError:
-            return False
+            return frozenset()
+
+    def _axis_match(self, params) -> bool:
+        """Does this collective operate over (any of) the party axes?"""
+        return bool(self._eqn_axes(params) & self.axes)
 
     def _check_boundary(self, eqn, in_props: Sequence[Props], path: str):
         for props in in_props:
             if not props.taint:
                 continue
-            distinct = [s for s in props.streams if s[1]]
+            # A stream only protects the boundary if its key separates
+            # EVERY logical party, i.e. its axis_index provenance covers
+            # all party axes (outer slot axis AND inner packed axis).
+            distinct = [s for s in props.streams if s[1] >= self.axes]
             if not props.streams:
                 self._find(UNMASKED, eqn, path,
                            "party-private operand crosses the boundary "
                            "with no PRNG mask offset in its provenance")
             elif not distinct:
                 self._find(EQUAL_SEEDED, eqn, path,
-                           "mask stream does not depend on the party "
-                           "index (equal-seeded masks are visible to the "
-                           "aggregator after cancellation)")
+                           "no mask stream depends on the full set of "
+                           "party axes %s (a key folded with only part "
+                           "of the logical party index repeats across "
+                           "the rest — equal-seeded masks are visible "
+                           "to the aggregator after cancellation)"
+                           % sorted(self.axes))
             elif self.membership and not any(s[2] for s in distinct):
                 self._find(NO_REKEY, eqn, path,
                            "membership-varying entry point: mask key is "
@@ -187,8 +207,9 @@ class _Analyzer:
             union = union.join(p)
 
         if name == "axis_index":
-            if self._axis_match(eqn.params):
-                union = union.join(Props(party_dep=True))
+            hit = self._eqn_axes(eqn.params) & self.axes
+            if hit:
+                union = union.join(Props(party_dep=hit))
             self.write(env, eqn.outvars[0], union)
             return
 
@@ -215,7 +236,8 @@ class _Analyzer:
 
         if name == "random_bits":
             # a fresh PRNG stream; its quality flags come from the key's
-            # provenance (fold_in(axis_index) => party-distinct;
+            # provenance (fold_in(axis_index) per party axis => that axis
+            # joins the stream's distinctness set;
             # fold_in(fingerprint(all_gather(alive))) => membership-keyed).
             # Stream identity is the eqn's object id — stable across the
             # repeated walks of a scan fixpoint, so carry sets converge.
@@ -328,14 +350,19 @@ class _Analyzer:
 
 
 def analyze_party_jaxpr(closed_jaxpr, source_invars: Sequence[int],
-                        axis: str = "model",
+                        axis="model",
                         membership: bool = False) -> List[TaintFinding]:
     """Run the leakage taint pass over a per-party (closed) jaxpr.
 
     ``source_invars``: indices (into ``jaxpr.invars``) of the
     party-private sources — for engine epochs, the party's feature block
     (always the first leaf of the ``local`` pytree by the ``_bind``
-    convention).  ``membership=True`` additionally requires boundary
+    convention).  ``axis`` is the party-axis name, or a tuple of names
+    when the logical party index is factored over several named axes
+    (hierarchical packing — ``FusedEngine`` exposes the right tuple as
+    ``PartyProgram.boundary_axes``); mask streams must then be keyed per
+    the *full* logical index, i.e. depend on axis_index over every axis
+    in the tuple.  ``membership=True`` additionally requires boundary
     masks to be membership-keyed (faulted / survivor-aggregating entry
     points).
 

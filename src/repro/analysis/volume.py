@@ -21,11 +21,13 @@ Caveat inherited from ``hlo_analysis``: HLO counts a ``while``
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.walkers import CROSS_PARTY_PRIMS, sub_jaxprs
 from repro.launch.hlo_analysis import collective_stats
 
 #: entries with a measured collective account (small on purpose: each
@@ -36,6 +38,60 @@ DEFAULT_MODES = ("off", "two_tree", "ring")
 
 def mesh_available(q: int) -> bool:
     return len(jax.devices()) >= q
+
+
+def jaxpr_collective_volume(jaxpr, axes=None) -> Dict[str, dict]:
+    """Trip-count-aware collective account straight from a traced jaxpr.
+
+    The HLO path above needs a real >=Q-device mesh and counts a scan
+    body once; this walker runs on any device count (the scalability
+    bench sweeps q far past the host's devices) and multiplies each
+    collective site's operand bytes by the product of enclosing ``scan``
+    trip counts — i.e. bytes actually moved per epoch, per participant
+    shard of the traced program (multiply by q for aggregate fabric
+    traffic).  ``while`` bodies have no static trip count and are
+    counted once.
+
+    ``axes``: restrict to collectives whose named-axis set intersects
+    these names (e.g. a :class:`~repro.sharding.api.PartyMesh`'s party
+    axes, to exclude intra-party data-axis psums); None counts all.
+
+    Returns ``{"counts": {kind: n}, "bytes": {kind: b},
+    "total_bytes": b}`` with counts trip-count-weighted.
+    """
+    want = frozenset(axes) if axes is not None else None
+    counts: Dict[str, int] = {}
+    bytes_: Dict[str, int] = {}
+
+    def _eqn_axes(params):
+        ax = params.get("axes", params.get("axis_name", ()))
+        if isinstance(ax, (str, int)):
+            ax = (ax,)
+        return frozenset(a for a in tuple(ax) if isinstance(a, str))
+
+    def _nbytes(atom):
+        aval = atom.aval
+        return math.prod(aval.shape) * jnp.dtype(aval.dtype).itemsize
+
+    def walk(j, mult):
+        j = getattr(j, "jaxpr", j)
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            if name in CROSS_PARTY_PRIMS and (
+                    want is None or (_eqn_axes(eqn.params) & want)):
+                counts[name] = counts.get(name, 0) + mult
+                bytes_[name] = bytes_.get(name, 0) + mult * sum(
+                    _nbytes(v) for v in eqn.invars)
+            sub_mult = mult * int(eqn.params["length"]) \
+                if name == "scan" else mult
+            for v in eqn.params.values():
+                for s in sub_jaxprs(v):
+                    walk(s, sub_mult)
+
+    walk(jaxpr, 1)
+    return {"counts": dict(sorted(counts.items())),
+            "bytes": dict(sorted(bytes_.items())),
+            "total_bytes": sum(bytes_.values())}
 
 
 def collective_volume(secure_modes: Sequence[str] = DEFAULT_MODES,

@@ -115,7 +115,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -124,11 +124,13 @@ import numpy as np
 from repro.core.algorithms import PartyLayout, _batch_indices
 from repro.core.faults import HealthStats, apply_corruption
 from repro.core.losses import Problem
-from repro.core.secure_agg import (secure_psum, secure_psum_members,
+from repro.core.secure_agg import (secure_psum, secure_psum_hier,
+                                   secure_psum_hier_members,
+                                   secure_psum_members,
                                    secure_psum_ring,
                                    secure_psum_ring_members)
 from repro.kernels import vfl_grad as _vg
-from repro.sharding.api import shard_map
+from repro.sharding.api import PartyMesh, shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -309,11 +311,24 @@ class PartyProgram:
     shared_avals: object    # pytree of ShapeDtypeStruct (replicated)
     axis: str
     q: int
+    # Hierarchical (PartyMesh) binding: the full named-axis environment
+    # of the per-party program, outermost first — e.g.
+    # (("model", slots), ("party", pps), ("data", ddp)) — and the subset
+    # of names that span the *logical* party axis.  Empty tuples mean
+    # the flat layout: axis_env [(axis, q)], party axes (axis,).
+    axes: Tuple = ()
+    party_axes: Tuple = ()
 
     def trace(self):
-        """Per-party closed jaxpr with the party axis abstractly bound."""
-        return jax.make_jaxpr(self.fn, axis_env=[(self.axis, self.q)])(
+        """Per-party closed jaxpr with every named axis abstractly bound."""
+        env = list(self.axes) if self.axes else [(self.axis, self.q)]
+        return jax.make_jaxpr(self.fn, axis_env=env)(
             self.local_avals, self.shared_avals)
+
+    @property
+    def boundary_axes(self) -> Tuple:
+        """Names of the axes that cross party boundaries (taint target)."""
+        return tuple(self.party_axes) if self.party_axes else (self.axis,)
 
     @property
     def n_local(self) -> int:
@@ -356,20 +371,55 @@ class FusedEngine:
         self.trainq = jnp.asarray(
             [1.0 if (not active_only or p < layout.m) else 0.0
              for p in range(layout.q)], jnp.float32)
-        self.mesh = mesh
-        if mesh is not None:
-            # A supplied mesh states SPMD intent; a silent vmap fallback
-            # would report "multi-chip" numbers that ran on one device.
-            if (cfg.axis not in mesh.axis_names
-                    or mesh.shape[cfg.axis] != layout.q):
+        # ``mesh`` is either a plain jax Mesh (flat layout: one party per
+        # slot, the historical contract) or a PartyMesh decoupling the
+        # logical party axis from the physical one (q = slots × pps, with
+        # pps packed parties vmapped inside each slot and an optional
+        # sample-parallel "data" dimension).
+        if isinstance(mesh, PartyMesh):
+            if mesh.q != layout.q:
                 raise ValueError(
-                    f"mesh must carry a {cfg.axis!r} axis of size q="
-                    f"{layout.q} to host one party per device; got axes "
-                    f"{dict(mesh.shape)}. Pass mesh=None for the "
-                    "single-device vmap emulation.")
-            self._use_shard_map = True
+                    f"PartyMesh.q={mesh.q} != layout.q={layout.q}")
+            if mesh.axis != cfg.axis:
+                raise ValueError(
+                    f"PartyMesh.axis={mesh.axis!r} != EngineConfig.axis="
+                    f"{cfg.axis!r}")
+            self.pmesh = mesh
+            self.mesh = mesh.mesh
         else:
-            self._use_shard_map = False
+            if mesh is not None:
+                # A supplied mesh states SPMD intent; a silent vmap
+                # fallback would report "multi-chip" numbers that ran on
+                # one device.
+                if (cfg.axis not in mesh.axis_names
+                        or mesh.shape[cfg.axis] != layout.q):
+                    raise ValueError(
+                        f"mesh must carry a {cfg.axis!r} axis of size q="
+                        f"{layout.q} to host one party per device; got "
+                        f"axes {dict(mesh.shape)}. Pass mesh=None for the "
+                        "single-device vmap emulation, or a PartyMesh to "
+                        "pack multiple parties per slot.")
+            self.pmesh = None
+            self.mesh = mesh
+        self._use_shard_map = self.mesh is not None
+        pm = self.pmesh
+        self._slots = pm.slots if pm is not None else layout.q
+        self._pps = pm.parties_per_slot if pm is not None else 1
+        self._ddp = pm.data_shards if pm is not None else 1
+        self._party_axes = ((cfg.axis, pm.party_axis)
+                            if pm is not None and pm.packed
+                            else (cfg.axis,))
+        self._data_axis = (pm.data_axis
+                           if pm is not None and pm.data_shards > 1
+                           else None)
+        # full named-axis environment of one per-party program (taint
+        # retrace + PartyProgram recording), outermost first
+        env = [(cfg.axis, self._slots)]
+        if self._pps > 1:
+            env.append((pm.party_axis, self._pps))
+        if self._data_axis is not None:
+            env.append((self._data_axis, self._ddp))
+        self._axis_env = tuple(env)
         kern = cfg.use_kernel
         self._kernel = (jax.default_backend() == "tpu") if kern is None else kern
         interp = cfg.interpret
@@ -384,23 +434,57 @@ class FusedEngine:
     # -- party-axis binding --------------------------------------------------
 
     def _bind(self, party_fn):
-        """Map ``party_fn(local, shared)`` over the party axis.
+        """Map ``party_fn(local, shared)`` over the logical party axis.
 
         ``local`` is a pytree of party-stacked arrays (leading q axis),
-        ``shared`` a replicated pytree.  shard_map on a q-wide mesh axis,
-        vmap-with-axis-name otherwise; identical collective semantics.
+        ``shared`` a replicated pytree.  Flat layout: shard_map on a
+        q-wide mesh axis, vmap-with-axis-name otherwise — identical
+        collective semantics.  PartyMesh layout: the q leading entries
+        are viewed as (slots, parties_per_slot), the inner factor is
+        vmapped (named ``party_axis``) *inside* each slot, the outer
+        factor is the physical slot mapping, and an optional sample-
+        parallel ``data`` axis is bound around it (a second mesh
+        dimension under shard_map; a broadcast vmap in emulation, whose
+        replicated outputs are collapsed by taking index 0 — sliced
+        epochs re-synchronize shards via the data-axis psum, so outputs
+        are shard-invariant).  ``party_fn`` itself is layout-blind: it
+        sees one logical party either way.
         """
+        tm = jax.tree_util.tree_map
+        slots, pps, ddp = self._slots, self._pps, self._ddp
+        fn = party_fn
+        if pps > 1:
+            fn = jax.vmap(party_fn, in_axes=(0, None), out_axes=0,
+                          axis_name=self.pmesh.party_axis)
         if self._use_shard_map:
             def island(local, shared):
-                sq = jax.tree_util.tree_map(lambda a: a[0], local)
-                out = party_fn(sq, shared)
-                return jax.tree_util.tree_map(lambda o: o[None], out)
-            mapped = shard_map(island, mesh=self.mesh,
-                               in_specs=(P(self.cfg.axis), P()),
-                               out_specs=P(self.cfg.axis), check_vma=False)
+                sq = tm(lambda a: a[0], local)
+                out = fn(sq, shared)
+                return tm(lambda o: o[None], out)
+            core = shard_map(island, mesh=self.mesh,
+                             in_specs=(P(self.cfg.axis), P()),
+                             out_specs=P(self.cfg.axis), check_vma=False)
         else:
-            mapped = jax.vmap(party_fn, in_axes=(0, None), out_axes=0,
-                              axis_name=self.cfg.axis)
+            core = jax.vmap(fn, in_axes=(0, None), out_axes=0,
+                            axis_name=self.cfg.axis)
+            if ddp > 1:
+                slot_core = core
+
+                def core(local, shared):
+                    dmapped = jax.vmap(slot_core, in_axes=(None, None),
+                                       out_axes=0,
+                                       axis_name=self._data_axis,
+                                       axis_size=ddp)
+                    return tm(lambda o: o[0], dmapped(local, shared))
+        if pps > 1:
+            packed_core = core
+
+            def core(local, shared):
+                l2 = tm(lambda a: a.reshape((slots, pps) + a.shape[1:]),
+                        local)
+                out = packed_core(l2, shared)
+                return tm(lambda o: o.reshape((-1,) + o.shape[2:]), out)
+        mapped = core
         name = self._building
         if name is None:
             return mapped
@@ -419,7 +503,8 @@ class FusedEngine:
                 shared_avals=jax.tree_util.tree_map(
                     lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
                     shared),
-                axis=self.cfg.axis, q=self.q)
+                axis=self.cfg.axis, q=self.q,
+                axes=self._axis_env, party_axes=self._party_axes)
             return mapped(local, shared)
 
         return recording
@@ -533,8 +618,23 @@ class FusedEngine:
         return xb_fwd @ wp, gg
 
     def _agg(self, z, kt):
-        """Masked secure aggregation of partials over the party axis."""
+        """Masked secure aggregation of partials over the party axis.
+
+        Flat layout: one reduction over ``cfg.axis``.  PartyMesh packed
+        layout: the hierarchical two-level form — intra-slot reduce over
+        the inner vmapped party axis, then the configured two_tree/ring
+        lowering across slots, with every mask stream ``fold_in``-
+        distinct per *logical* party (see ``secure_psum_hier``).
+        """
         cfg = self.cfg
+        if self._pps > 1:
+            if cfg.secure == "off":
+                return jax.lax.psum(z, self._party_axes)
+            return secure_psum_hier(
+                z, cfg.axis, self.pmesh.party_axis, kt, mode=cfg.secure,
+                mask_scale=cfg.mask_scale,
+                schedule_faithful=cfg.schedule_faithful,
+                slots=self._slots, pps=self._pps)
         if cfg.secure == "off":
             return jax.lax.psum(z, cfg.axis)
         if cfg.secure == "ring":
@@ -554,8 +654,17 @@ class FusedEngine:
         ``schedule_faithful`` ppermute replay of a fixed tree schedule is
         not membership-safe (a crashed party is a hole in the permutation
         sequence), while mask cancellation is schedule-independent.
+        Packed layout: the hierarchical membership form, whose alive-set
+        fingerprint is gathered over BOTH axes and folded into the key
+        above both levels (``secure_psum_hier_members``).
         """
         cfg = self.cfg
+        if self._pps > 1:
+            if cfg.secure == "off":
+                return jax.lax.psum(alive * z, self._party_axes)
+            return secure_psum_hier_members(
+                z, cfg.axis, self.pmesh.party_axis, kt, alive,
+                mode=cfg.secure, mask_scale=cfg.mask_scale)
         if cfg.secure == "off":
             return jax.lax.psum(alive * z, cfg.axis)
         if cfg.secure == "ring":
@@ -563,6 +672,40 @@ class FusedEngine:
                                             mask_scale=cfg.mask_scale)
         return secure_psum_members(z, cfg.axis, kt, alive,
                                    mask_scale=cfg.mask_scale)
+
+    # -- data (sample-parallel) axis helpers ---------------------------------
+    # Identity when no data axis is bound, so every epoch body can call
+    # them unconditionally.  Data shards of one party share that party's
+    # trust domain (see PartyMesh), so the gradient psum is plain.
+
+    def _dslice(self, ib):
+        """This data shard's disjoint slice of a (B,) minibatch index
+        vector (identity without a data axis).  B must divide evenly."""
+        if self._data_axis is None:
+            return ib
+        if ib.shape[0] % self._ddp != 0:
+            raise ValueError(
+                f"batch={ib.shape[0]} must divide data_shards={self._ddp}")
+        bs = ib.shape[0] // self._ddp
+        start = jax.lax.axis_index(self._data_axis) * bs
+        return jax.lax.dynamic_slice_in_dim(ib, start, bs)
+
+    def _dsum(self, g):
+        """Sum a per-shard partial gradient over the data axis."""
+        if self._data_axis is None:
+            return g
+        return jax.lax.psum(g, self._data_axis)
+
+    def _dkey(self, kt):
+        """Fold the data-shard index into a mask key: sliced epochs
+        aggregate *different* sample slices per shard, so reusing one
+        mask stream across shards would let a party-axis observer
+        difference two shards' masked partials.  Replicated epochs skip
+        this (identical plaintexts keep bitwise-replicated outputs)."""
+        if self._data_axis is None:
+            return kt
+        return jax.random.fold_in(
+            kt, 0xda7a + jax.lax.axis_index(self._data_axis))
 
     def _keys(self, key, steps: int):
         """Per-step mask keys, derived off the sampling key's stream."""
@@ -604,11 +747,17 @@ class FusedEngine:
 
                 def body(wp, inp):
                     ib, kt = inp
-                    xb = xp[ib]
+                    # each data shard forwards/aggregates its own slice
+                    # of the minibatch; the per-shard partial gradients
+                    # (denominated by the FULL batch) are psum'd back
+                    # over the data axis — identity without one
+                    ibs = self._dslice(ib)
+                    xb = xp[ibs]
                     z = self._fwd(xb, wp[:, None])[:, 0]
-                    agg = self._agg(z, kt)
-                    theta = prob.theta(agg, y[ib])
-                    g = self._bwd(xb, theta[:, None], ib.shape[0])[:, 0] \
+                    agg = self._agg(z, self._dkey(kt))
+                    theta = prob.theta(agg, y[ibs])
+                    g = self._dsum(
+                        self._bwd(xb, theta[:, None], ib.shape[0]))[:, 0] \
                         + prob.lam * prob.reg_grad(wp)
                     return wp - lr * maskp * g, None
 
@@ -666,13 +815,15 @@ class FusedEngine:
 
                 def body(wp, inp):
                     ib, kt = inp
-                    xb = xp[ib]
+                    ibs = self._dslice(ib)
+                    xb = xp[ibs]
                     z = self._fwd(xb, jnp.stack([wp, wsp], axis=1))  # (B, 2)
-                    agg = self._agg(z, kt)
-                    th1 = prob.theta(agg[:, 0], y[ib])
-                    th0 = prob.theta(agg[:, 1], y[ib])
-                    gg = self._bwd(xb, jnp.stack([th1, th0], axis=1),
-                                   ib.shape[0])                      # (dp, 2)
+                    agg = self._agg(z, self._dkey(kt))
+                    th1 = prob.theta(agg[:, 0], y[ibs])
+                    th0 = prob.theta(agg[:, 1], y[ibs])
+                    gg = self._dsum(
+                        self._bwd(xb, jnp.stack([th1, th0], axis=1),
+                                  ib.shape[0]))                      # (dp, 2)
                     g1 = gg[:, 0] + prob.lam * prob.reg_grad(wp)
                     g0 = gg[:, 1] + prob.lam * prob.reg_grad(wsp)
                     return wp - lr * maskp * (g1 - g0 + mup), None

@@ -509,7 +509,7 @@ def run_faulted_fused(problem: Problem, x, y, layout: PartyLayout,
                       trace: FaultTrace, tau: int, epochs: int, lr: float,
                       batch: int, algo: str = "sgd", seed: int = 0,
                       delays_q=None, engine_config=None,
-                      active_only: bool = False,
+                      active_only: bool = False, mesh=None,
                       checkpoint_dir: Optional[str] = None,
                       resume_from: Optional[str] = None) -> np.ndarray:
     """Faulted VFB² on the fused engine: whole membership-masked epochs
@@ -537,7 +537,8 @@ def run_faulted_fused(problem: Problem, x, y, layout: PartyLayout,
     delays_q = _base_delays(layout, tau, sched, delays_q, seed)
     cfg = engine_config if engine_config is not None \
         else EngineConfig(donate=True)
-    eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
+    eng = FusedEngine(problem, x, y, layout, cfg, mesh=mesh,
+                      active_only=active_only)
     dq = jnp.asarray(delays_q)
     wq = eng.pack_w(np.zeros(d, np.float32))
     bufq = jnp.zeros((layout.q, tau + 1, eng.dp), jnp.float32)
@@ -1046,6 +1047,7 @@ def run_guarded_fused(problem: Problem, x, y, layout: PartyLayout,
                       batch: int, algo: str = "sgd", seed: int = 0,
                       delays_q=None, engine_config=None,
                       active_only: bool = False, guard: bool = True,
+                      mesh=None,
                       checkpoint_dir: Optional[str] = None,
                       resume_from: Optional[str] = None,
                       keep_last: Optional[int] = 1,
@@ -1071,7 +1073,8 @@ def run_guarded_fused(problem: Problem, x, y, layout: PartyLayout,
     delays_q = _base_delays(layout, tau, sched, delays_q, seed)
     cfg = engine_config if engine_config is not None \
         else EngineConfig(donate=True)
-    eng = FusedEngine(problem, x, y, layout, cfg, active_only=active_only)
+    eng = FusedEngine(problem, x, y, layout, cfg, mesh=mesh,
+                      active_only=active_only)
     dq = jnp.asarray(delays_q)
     wq = eng.pack_w(np.zeros(d, np.float32))
     bufq = jnp.zeros((layout.q, tau + 1, eng.dp), jnp.float32)

@@ -298,6 +298,130 @@ def _alive_fingerprint(av: jax.Array) -> jax.Array:
     return fp
 
 
+# ---------------------------------------------------------------------------
+# hierarchical forms: logical party axis = (outer slots) × (inner packed)
+# ---------------------------------------------------------------------------
+# With q logical parties packed ``pps`` per physical slot (see
+# ``sharding.api.PartyMesh``), one flat reduction over a single named axis
+# no longer exists: aggregation becomes two-level.  Level 1 reduces the
+# packed parties *within* a slot (over the inner vmapped axis — the
+# intra-slot tree: masked psum on the fast path, the exact T1/T2 round
+# replay from ``core.trees`` under ``schedule_faithful``); level 2 runs the
+# existing two_tree/ring lowering across slots on the per-slot sums.
+#
+# Mask-stream discipline (what the taint lint proves):
+#   * level-1 streams are keyed ``fold_in(fold_in(key, _L1_SALT),
+#     slot_index)`` then per-inner-party inside the flat primitive — i.e.
+#     distinct per *logical* party (slot AND inner index), so no stream is
+#     reused across slots;
+#   * level-2 streams fold the inner index into the key before the flat
+#     primitive folds the slot index — also logical-party distinct.  Each
+#     inner replica therefore runs an independently-masked copy of the
+#     cross-slot protocol on identical per-slot sums (masks cancel within
+#     each replica's plane; replicas agree to f32 mask-rounding).
+# The two salts keep the level-1 and level-2 stream domains disjoint.
+
+_L1_SALT = 0x51071   # level-1 (intra-slot) mask-stream domain
+_L2_SALT = 0x1e2e1   # level-2 (cross-slot) mask-stream domain
+
+
+def secure_psum_hier(
+    partial: jax.Array,
+    outer_axis: str,
+    inner_axis: str,
+    key: jax.Array,
+    mode: str = "two_tree",
+    mask_scale: float = 1.0,
+    schedule_faithful: bool = False,
+    slots: int | None = None,
+    pps: int | None = None,
+) -> jax.Array:
+    """Two-level masked aggregation over ``(outer_axis, inner_axis)``.
+
+    Numerically the masks cancel level by level, so the result equals the
+    plain sum over all q = slots × pps logical parties (to f32 rounding —
+    the same tolerance class as the flat lowerings).  ``mode`` selects the
+    *cross-slot* lowering ("two_tree" or "ring"); the intra-slot level
+    uses two-tree masking (ring masks within a slot under ``mode="ring"``)
+    and honors ``schedule_faithful`` by replaying the
+    ``trees.default_tree_pair`` rounds over the inner axis.
+    """
+    so = jax.lax.axis_index(outer_axis)
+    si = jax.lax.axis_index(inner_axis)
+    out_dtype = partial.dtype
+    partial = partial.astype(jnp.float32)
+    # level 1: intra-slot reduce; key slot-folded, then per-inner-party
+    # inside the flat primitive => streams distinct per logical party
+    k1 = jax.random.fold_in(jax.random.fold_in(key, _L1_SALT), so)
+    if mode == "ring":
+        z_slot = secure_psum_ring(partial, inner_axis, k1,
+                                  mask_scale=mask_scale)
+    else:
+        z_slot = secure_psum(partial, inner_axis, k1,
+                             mask_scale=mask_scale,
+                             schedule_faithful=schedule_faithful, q=pps)
+    # level 2: the existing cross-slot lowering on the per-slot sums; the
+    # inner index is folded in so each replica's stream set is also
+    # logical-party distinct (no stream reuse across the inner axis)
+    k2 = jax.random.fold_in(jax.random.fold_in(key, _L2_SALT), si)
+    if mode == "ring":
+        tot = secure_psum_ring(z_slot, outer_axis, k2,
+                               mask_scale=mask_scale)
+    else:
+        tot = secure_psum(z_slot, outer_axis, k2, mask_scale=mask_scale,
+                          schedule_faithful=schedule_faithful, q=slots)
+    return tot.astype(out_dtype)
+
+
+def secure_psum_hier_members(
+    partial: jax.Array,
+    outer_axis: str,
+    inner_axis: str,
+    key: jax.Array,
+    alive: jax.Array,
+    mode: str = "two_tree",
+    mask_scale: float = 1.0,
+) -> jax.Array:
+    """Membership-safe two-level aggregation (hierarchical fault path).
+
+    The full *logical* alive vector is gathered over both axes and its
+    fingerprint is folded into the key **once, above both levels** — the
+    re-key is composed across the hierarchy, so any single party's
+    dropout re-keys every level-1 and level-2 mask stream (no stream from
+    one membership configuration survives into another, even in slots the
+    crash didn't touch).  Level 1 then runs the flat membership lowering
+    over the inner axis (which additionally folds the slot-local
+    fingerprint — harmless double keying); level 2 aggregates the
+    per-slot survivor sums across slots with the slot's any-alive flag as
+    its liveness (an all-dead slot contributes neither value nor mask).
+    """
+    so = jax.lax.axis_index(outer_axis)
+    si = jax.lax.axis_index(inner_axis)
+    out_dtype = partial.dtype
+    partial = partial.astype(jnp.float32)
+    alive = alive.astype(jnp.float32)
+    av_in = jax.lax.all_gather(alive, inner_axis)          # (pps,)
+    av = jax.lax.all_gather(av_in, outer_axis)             # (slots, pps)
+    kk = jax.random.fold_in(
+        key, _alive_fingerprint(av.reshape(-1).astype(jnp.int32)))
+    k1 = jax.random.fold_in(jax.random.fold_in(kk, _L1_SALT), so)
+    if mode == "ring":
+        z_slot = secure_psum_ring_members(partial, inner_axis, k1, alive,
+                                          mask_scale=mask_scale)
+    else:
+        z_slot = secure_psum_members(partial, inner_axis, k1, alive,
+                                     mask_scale=mask_scale)
+    slot_alive = jnp.minimum(av_in.sum(), 1.0)
+    k2 = jax.random.fold_in(jax.random.fold_in(kk, _L2_SALT), si)
+    if mode == "ring":
+        tot = secure_psum_ring_members(z_slot, outer_axis, k2, slot_alive,
+                                       mask_scale=mask_scale)
+    else:
+        tot = secure_psum_members(z_slot, outer_axis, k2, slot_alive,
+                                  mask_scale=mask_scale)
+    return tot.astype(out_dtype)
+
+
 def secure_psum_ring_members(
     partial: jax.Array,
     axis_name: str,

@@ -4,9 +4,28 @@ Axis roles (fixed names across the framework):
   * "pod"   — inter-pod data parallelism = the paper's *upper-level*
               (distributed-memory, between active-party groups);
   * "data"  — intra-pod batch parallelism = the paper's *lower-level*
-              (shared-memory collaborative threads within a party);
-  * "model" — the party axis: vertical feature/vocab partition (q = 16),
-              also used for TP/expert/sequence sharding.
+              (shared-memory collaborative threads within a party; the
+              fused engine also binds it as the sample-parallel axis of
+              its (party × batch) 2D mesh — see :class:`PartyMesh`);
+  * "model" — the party axis: vertical feature/vocab partition, also
+              used for TP/expert/sequence sharding.  Its size is
+              **dynamic** (``PartyLayout.q`` / the mesh shape — nothing
+              is hard-coded): one party per mesh slot in the flat
+              engine layout, or ``slots`` physical islands each packing
+              ``parties_per_slot`` *logical* parties when the engine is
+              given a :class:`PartyMesh`.
+
+Logical vs physical party axis
+------------------------------
+Historically the engine assumed q <= devices: the "model" axis WAS the
+party axis.  :class:`PartyMesh` splits the two: the *logical* party
+axis (size ``q``) factors as ``slots × parties_per_slot``, with the
+outer factor mapped onto the physical "model" mesh axis (shard_map —
+or an emulating vmap on one device) and the inner factor bound as a
+vmapped named axis *inside* each slot.  Collectives address the pair
+``(outer, inner)`` of named axes; masked secure aggregation becomes
+hierarchical (intra-slot reduce, then cross-slot two_tree/ring — see
+``core.secure_agg.secure_psum_hier``).
 """
 from __future__ import annotations
 
@@ -42,6 +61,78 @@ except ImportError:  # jax 0.4.x
     def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
         return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs, check_rep=check_vma)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartyMesh:
+    """Factorization of the logical party axis over a physical mesh.
+
+    ``q = slots × parties_per_slot`` logical parties: the outer factor
+    (``slots``) is the physical party dimension — one ``shard_map``
+    island per slot when ``mesh`` is given, a vmapped named axis on one
+    device otherwise — and the inner factor rides a vmapped named axis
+    (``party_axis``) *inside* each slot, so q can exceed the device
+    count arbitrarily.  ``data_shards`` adds the second (sample-
+    parallel) mesh dimension: each data shard processes a disjoint
+    slice of every minibatch and the per-party gradients are psum'd
+    over ``data_axis`` — the (party × batch) 2D mesh.
+
+    Security note: data shards of one party live in that party's trust
+    domain (the paper's lower level — collaborative workers *within* a
+    party), so party-local values may cross ``data_axis`` unmasked;
+    every value crossing ``axis``/``party_axis`` remains mask-offset
+    with streams ``fold_in``-distinct per *logical* party (the taint
+    lint enforces this — see ``repro.analysis.taint``).
+
+    ``mesh=None`` runs the single-device emulation (vmap with named
+    axes — identical collective semantics, as everywhere else in the
+    engine); a supplied mesh must carry ``axis`` of size ``slots`` and,
+    when ``data_shards > 1``, ``data_axis`` of size ``data_shards``.
+    """
+
+    q: int                          # logical party count
+    slots: int                      # physical party-axis width
+    mesh: Optional[Mesh] = None     # device mesh; None = vmap emulation
+    axis: str = "model"             # outer (slot) named axis
+    party_axis: str = "party"       # inner (packed parties) named axis
+    data_shards: int = 1            # sample-parallel width
+    data_axis: str = "data"         # batch named axis
+
+    def __post_init__(self):
+        if self.q < 1 or self.slots < 1 or self.data_shards < 1:
+            raise ValueError(
+                f"PartyMesh sizes must be >= 1; got q={self.q}, "
+                f"slots={self.slots}, data_shards={self.data_shards}")
+        if self.q % self.slots != 0:
+            raise ValueError(
+                f"q={self.q} must divide evenly into slots={self.slots} "
+                f"islands (got remainder {self.q % self.slots})")
+        if self.axis == self.party_axis or self.data_axis in (
+                self.axis, self.party_axis):
+            raise ValueError(
+                f"axis names must be distinct; got axis={self.axis!r}, "
+                f"party_axis={self.party_axis!r}, "
+                f"data_axis={self.data_axis!r}")
+        if self.mesh is not None:
+            shape = dict(self.mesh.shape)
+            if shape.get(self.axis) != self.slots:
+                raise ValueError(
+                    f"mesh must carry a {self.axis!r} axis of size "
+                    f"slots={self.slots}; got axes {shape}")
+            if self.data_shards > 1 and \
+                    shape.get(self.data_axis) != self.data_shards:
+                raise ValueError(
+                    f"mesh must carry a {self.data_axis!r} axis of size "
+                    f"data_shards={self.data_shards}; got axes {shape}")
+
+    @property
+    def parties_per_slot(self) -> int:
+        return self.q // self.slots
+
+    @property
+    def packed(self) -> bool:
+        """More than one logical party per slot (hierarchical agg)."""
+        return self.parties_per_slot > 1
 
 
 @dataclasses.dataclass(frozen=True)

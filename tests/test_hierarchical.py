@@ -1,0 +1,355 @@
+"""Hierarchical party sharding (PartyMesh): q past the mesh, losslessly.
+
+The acceptance bar (ISSUE 9): with the logical party axis factored as
+``slots × parties_per_slot`` — outer factor on the physical "model" axis,
+inner factor a vmapped named axis inside each slot — every packed epoch
+must reproduce the flat sequential oracles at 1e-5: SGD/SVRG/SAGA ×
+off/two_tree/ring on the linear path, SGD/SVRG × the secure modes on the
+deep path, q = 64 on an (emulated) 8-slot mesh.  The whole packed epoch
+stays ONE dispatch with ZERO host-transfer primitives (jaxpr-audited),
+and the sample-parallel data axis (the party × batch 2D mesh) folds its
+psum into the aggregate without changing the math.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms, deep_vfl, losses
+from repro.core.engine import EngineConfig, FusedEngine
+from repro.data.synthetic import classification_dataset
+from repro.sharding.api import PartyMesh
+
+N, D, Q, M, BATCH = 256, 128, 64, 2, 32
+SECURE = ["off", "two_tree", "ring"]
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return classification_dataset("hier", N, D, seed=11, noise=0.4)
+
+
+@pytest.fixture(scope="module")
+def layout():
+    return algorithms.PartyLayout.even(D, Q, M)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return losses.logistic_l2()
+
+
+def _pm(q=Q, slots=8, **kw):
+    return PartyMesh(q=q, slots=slots, **kw)
+
+
+def _engine(ds, layout, prob, secure, pmesh):
+    return FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                       EngineConfig(secure=secure), mesh=pmesh)
+
+
+# -- PartyMesh validation ----------------------------------------------------
+
+def test_partymesh_factors():
+    pm = PartyMesh(q=64, slots=8)
+    assert pm.parties_per_slot == 8 and pm.packed
+    assert not PartyMesh(q=4, slots=4).packed
+
+
+def test_partymesh_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="divide evenly"):
+        PartyMesh(q=10, slots=4)
+    with pytest.raises(ValueError, match=">= 1"):
+        PartyMesh(q=0, slots=1)
+    with pytest.raises(ValueError, match="distinct"):
+        PartyMesh(q=4, slots=2, axis="p", party_axis="p")
+    with pytest.raises(ValueError, match="distinct"):
+        PartyMesh(q=4, slots=2, data_axis="party")
+
+
+def test_engine_rejects_mismatched_partymesh(ds, prob):
+    lay = algorithms.PartyLayout.even(D, 8, 2)
+    with pytest.raises(ValueError, match="q"):
+        _engine(ds, lay, prob, "off", PartyMesh(q=16, slots=4))
+
+
+# -- linear epochs: packed q=64 vs the sequential oracles --------------------
+
+@pytest.fixture(scope="module")
+def ref_inputs(ds, layout):
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train)
+    mask = jnp.asarray(layout.update_mask(D, False))
+    return x, y, mask
+
+
+@pytest.mark.parametrize("secure", SECURE)
+def test_packed_sgd_matches_oracle(ds, layout, prob, ref_inputs, secure):
+    x, y, mask = ref_inputs
+    key = jax.random.PRNGKey(0)
+    steps = N // BATCH
+    w_ref = algorithms.sgd_epoch(prob, jnp.zeros(D), x, y, 0.5, mask, key,
+                                 BATCH, steps)
+    eng = _engine(ds, layout, prob, secure, _pm())
+    wq = eng.sgd_epoch(eng.pack_w(np.zeros(D)), 0.5, key, BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("secure", SECURE)
+def test_packed_svrg_matches_oracle(ds, layout, prob, ref_inputs, secure):
+    x, y, mask = ref_inputs
+    key = jax.random.PRNGKey(2)
+    steps = N // BATCH
+    w0 = jnp.zeros(D)
+    mu = algorithms.full_gradient(prob, w0, x, y)
+    w_ref = algorithms.svrg_epoch(prob, w0, w0, mu, x, y, 0.5, mask, key,
+                                  BATCH, steps)
+    eng = _engine(ds, layout, prob, secure, _pm())
+    wq0 = eng.pack_w(np.zeros(D))
+    muq = eng.full_gradient(wq0, key)
+    np.testing.assert_allclose(eng.unpack_w(muq), np.asarray(mu),
+                               atol=1e-5, rtol=0)
+    wq = eng.svrg_epoch(wq0, wq0, muq, 0.5, key, BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("secure", SECURE)
+def test_packed_saga_matches_oracle(ds, layout, prob, ref_inputs, secure):
+    x, y, mask = ref_inputs
+    key = jax.random.PRNGKey(3)
+    steps = N // BATCH
+    tab = prob.theta(x @ jnp.zeros(D), y)
+    avg = x.T @ tab / x.shape[0]
+    w_ref, tab_ref, _ = algorithms.saga_epoch(prob, jnp.zeros(D), tab, avg,
+                                              x, y, 0.5, mask, key, BATCH,
+                                              steps)
+    eng = _engine(ds, layout, prob, secure, _pm())
+    wq0 = eng.pack_w(np.zeros(D))
+    tabq, avgq = eng.saga_init(wq0, key)
+    wq, tabq, _ = eng.saga_epoch(wq0, tabq, avgq, 0.5, key, BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+    np.testing.assert_allclose(np.asarray(tabq[0]), np.asarray(tab_ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_packed_matches_flat_bitwise_shapes(ds, layout, prob):
+    """Different packings of the same q agree with the flat engine —
+    the factorization is an implementation detail of the binder."""
+    key = jax.random.PRNGKey(5)
+    steps = N // BATCH
+    flat = FusedEngine(prob, ds.x_train, ds.y_train, layout,
+                       EngineConfig(secure="two_tree"))
+    w_flat = flat.sgd_epoch(flat.pack_w(np.zeros(D)), 0.5, key, BATCH,
+                            steps)
+    for slots in (4, 16, 32):
+        eng = _engine(ds, layout, prob, "two_tree", _pm(slots=slots))
+        wq = eng.sgd_epoch(eng.pack_w(np.zeros(D)), 0.5, key, BATCH, steps)
+        np.testing.assert_allclose(eng.unpack_w(wq),
+                                   flat.unpack_w(w_flat),
+                                   atol=1e-5, rtol=0)
+
+
+# -- the data axis: (party × batch) 2D mesh ----------------------------------
+
+@pytest.mark.parametrize("secure", SECURE)
+def test_data_axis_sgd_matches_oracle(ds, prob, secure):
+    """Sliced minibatches + gradient psum over the sample-parallel axis
+    reproduce the undistributed epoch, with and without packing."""
+    lay = algorithms.PartyLayout.even(D, 8, 2)
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train)
+    mask = jnp.asarray(lay.update_mask(D, False))
+    key = jax.random.PRNGKey(7)
+    steps = N // BATCH
+    w_ref = algorithms.sgd_epoch(prob, jnp.zeros(D), x, y, 0.5, mask, key,
+                                 BATCH, steps)
+    for pm in (_pm(q=8, slots=8, data_shards=2),
+               _pm(q=8, slots=2, data_shards=2)):
+        eng = _engine(ds, lay, prob, secure, pm)
+        wq = eng.sgd_epoch(eng.pack_w(np.zeros(D)), 0.5, key, BATCH, steps)
+        np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                                   atol=1e-5, rtol=0)
+
+
+def test_data_axis_svrg_matches_oracle(ds, prob):
+    lay = algorithms.PartyLayout.even(D, 8, 2)
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train)
+    mask = jnp.asarray(lay.update_mask(D, False))
+    key = jax.random.PRNGKey(8)
+    steps = N // BATCH
+    w0 = jnp.zeros(D)
+    mu = algorithms.full_gradient(prob, w0, x, y)
+    w_ref = algorithms.svrg_epoch(prob, w0, w0, mu, x, y, 0.5, mask, key,
+                                  BATCH, steps)
+    eng = _engine(ds, lay, prob, "two_tree",
+                  _pm(q=8, slots=4, data_shards=2))
+    wq0 = eng.pack_w(np.zeros(D))
+    muq = eng.full_gradient(wq0, key)
+    wq = eng.svrg_epoch(wq0, wq0, muq, 0.5, key, BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_data_axis_rejects_indivisible_batch(ds, prob):
+    lay = algorithms.PartyLayout.even(D, 8, 2)
+    eng = _engine(ds, lay, prob, "off", _pm(q=8, slots=4, data_shards=3))
+    with pytest.raises(ValueError, match="data_shards"):
+        eng.sgd_epoch(eng.pack_w(np.zeros(D)), 0.5, jax.random.PRNGKey(0),
+                      BATCH, 2)
+
+
+# -- faulted / guarded packed epochs -----------------------------------------
+
+def test_packed_faulted_matches_reference(ds, prob):
+    from repro.core import faults
+    lay = algorithms.PartyLayout.even(D, 8, 2)
+    steps = ds.x_train.shape[0] // BATCH
+    trace = faults.random_trace(lay, steps, rate=0.15, max_straggle=2,
+                                seed=4)
+    kw = dict(tau=2, epochs=1, lr=0.3, batch=BATCH, seed=0)
+    for secure in SECURE:
+        w_ref = faults.run_faulted_reference(prob, ds.x_train, ds.y_train,
+                                             lay, trace, **kw)
+        w_fus = faults.run_faulted_fused(
+            prob, ds.x_train, ds.y_train, lay, trace,
+            engine_config=EngineConfig(secure=secure),
+            mesh=_pm(q=8, slots=2), **kw)
+        np.testing.assert_allclose(w_fus, w_ref, atol=1e-5, rtol=0)
+
+
+def test_packed_guarded_matches_reference(ds, prob):
+    from repro.core import faults
+    lay = algorithms.PartyLayout.even(D, 8, 2)
+    steps = ds.x_train.shape[0] // BATCH
+    trace = faults.random_trace(lay, steps, rate=0.15, max_straggle=2,
+                                p_corrupt=0.3, corrupt_modes=("nan",),
+                                seed=6)
+    kw = dict(tau=2, epochs=1, lr=0.3, batch=BATCH, seed=0)
+    w_ref, hs_ref = faults.run_guarded_reference(prob, ds.x_train,
+                                                 ds.y_train, lay, trace,
+                                                 **kw)
+    w_fus, hs_fus = faults.run_guarded_fused(
+        prob, ds.x_train, ds.y_train, lay, trace,
+        engine_config=EngineConfig(secure="ring"),
+        mesh=_pm(q=8, slots=2), **kw)
+    np.testing.assert_allclose(w_fus, w_ref, atol=1e-5, rtol=0)
+    for a, b in zip(hs_fus, hs_ref):
+        a, b = np.asarray(a), np.asarray(b)
+        both_nan = np.isnan(a) & np.isnan(b)
+        np.testing.assert_allclose(np.where(both_nan, 0.0, a),
+                                   np.where(both_nan, 0.0, b),
+                                   atol=1e-4, rtol=0)
+
+
+# -- deep path ---------------------------------------------------------------
+
+HID, DREP, DEEP_EPOCHS = 4, 3, 2
+
+
+def _run_deep(eng, algo="sgd", seed=0):
+    key = jax.random.PRNGKey(seed)
+    pq = eng.pack_deep(deep_vfl.init_deep_vfl(key, eng.layout, D, HID,
+                                              DREP))
+    steps = eng.n // BATCH
+    for _ in range(DEEP_EPOCHS):
+        key, sub = jax.random.split(key)
+        if algo == "svrg":
+            muq = eng.deep_full_gradient(pq, sub)
+            pq = eng.deep_svrg_epoch(pq, pq, muq, 0.05, sub, BATCH, steps)
+        else:
+            pq = eng.deep_sgd_epoch(pq, 0.05, sub, BATCH, steps)
+    return eng.unpack_deep(pq)
+
+
+def _assert_deep_close(a, b, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(a.head), np.asarray(b.head),
+                               atol=atol, rtol=0)
+    for la, lb in zip((*a.enc_w1, *a.enc_b1, *a.enc_w2),
+                      (*b.enc_w1, *b.enc_b1, *b.enc_w2)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=atol, rtol=0)
+
+
+@pytest.mark.parametrize("algo", ["sgd", "svrg"])
+@pytest.mark.parametrize("secure", SECURE)
+def test_packed_deep_matches_oracle(ds, layout, prob, algo, secure):
+    p_ref = deep_vfl.train_deep_vfl(
+        prob, ds.x_train, ds.y_train, layout, epochs=DEEP_EPOCHS, lr=0.05,
+        batch=BATCH, seed=0, hidden=HID, d_rep=DREP, algo=algo)[0]
+    eng = _engine(ds, layout, prob, secure, _pm())
+    _assert_deep_close(_run_deep(eng, algo=algo), p_ref)
+
+
+# -- structural audits: one dispatch, zero host transfers --------------------
+
+def test_packed_epoch_is_one_program(ds, layout, prob):
+    from repro.analysis.walkers import (count_cross_party,
+                                        count_host_transfers)
+    eng = _engine(ds, layout, prob, "two_tree", _pm())
+    wq0 = eng.pack_w(np.zeros(D))
+    key = jax.random.PRNGKey(0)
+    steps = N // BATCH
+    jx = eng.sgd_epoch_jaxpr(wq0, 0.5, key, BATCH, steps)
+    assert count_host_transfers(jx) == 0
+    pp = eng.party_program("sgd")
+    assert pp.boundary_axes == ("model", "party")
+    assert count_cross_party(pp.trace()) >= 2   # masked value + masks
+
+
+def test_packed_boundary_masks_are_logical_party_distinct(ds, layout,
+                                                          prob):
+    """The taint pass proves the two-level masks under the two-axis
+    boundary rule — and still flags secure='off'."""
+    from repro.analysis.taint import analyze_party_jaxpr, finding_codes
+    for secure, want in (("two_tree", {}), ("ring", {}),
+                         ("off", {"unmasked-boundary"})):
+        eng = _engine(ds, layout, prob, secure, _pm())
+        eng.sgd_epoch_jaxpr(eng.pack_w(np.zeros(D)), 0.5,
+                            jax.random.PRNGKey(0), BATCH, 2)
+        pp = eng.party_program("sgd")
+        codes = finding_codes(analyze_party_jaxpr(
+            pp.trace(), [0], axis=pp.boundary_axes))
+        assert set(codes) == set(want), (secure, codes)
+
+
+def test_data_axis_volume_excluded_from_boundary(ds, prob):
+    """Data-axis psums are intra-party (trust-domain) traffic: the
+    party-axes-restricted collective account must not count them."""
+    from repro.analysis.volume import jaxpr_collective_volume
+    lay = algorithms.PartyLayout.even(D, 8, 2)
+    eng = _engine(ds, lay, prob, "off", _pm(q=8, slots=4, data_shards=2))
+    eng.sgd_epoch_jaxpr(eng.pack_w(np.zeros(D)), 0.5,
+                        jax.random.PRNGKey(0), BATCH, 2)
+    pj = eng.party_program("sgd").trace()
+    all_axes = jaxpr_collective_volume(pj)
+    party_only = jaxpr_collective_volume(
+        pj, axes=eng.party_program("sgd").boundary_axes)
+    assert party_only["total_bytes"] < all_axes["total_bytes"]
+
+
+# -- nightly scale point -----------------------------------------------------
+
+@pytest.mark.slow
+def test_packed_q256_matches_oracle():
+    """q = 256 on 8 slots (32 parties per slot): the full sweep point the
+    nightly benchmark measures, pinned to the oracle here."""
+    n, d, q = 256, 512, 256
+    ds = classification_dataset("hier256", n, d, seed=13, noise=0.4)
+    lay = algorithms.PartyLayout.even(d, q, 3)
+    prob = losses.logistic_l2()
+    x, y = jnp.asarray(ds.x_train), jnp.asarray(ds.y_train)
+    mask = jnp.asarray(lay.update_mask(d, False))
+    key = jax.random.PRNGKey(0)
+    steps = n // BATCH
+    w_ref = algorithms.sgd_epoch(prob, jnp.zeros(d), x, y, 0.5, mask, key,
+                                 BATCH, steps)
+    eng = FusedEngine(prob, ds.x_train, ds.y_train, lay,
+                      EngineConfig(secure="two_tree"),
+                      mesh=PartyMesh(q=q, slots=8))
+    wq = eng.sgd_epoch(eng.pack_w(np.zeros(d)), 0.5, key, BATCH, steps)
+    np.testing.assert_allclose(eng.unpack_w(wq), np.asarray(w_ref),
+                               atol=1e-5, rtol=0)

@@ -44,3 +44,41 @@ def test_subtree_leafsets_are_proper(q):
     t1, _ = trees.default_tree_pair(q)
     for ls in t1.subtree_leafsets():
         assert 1 < len(ls) < q
+
+
+# -- the party axis scales past any device mesh (hierarchical packing) ----
+# q = 6 (non-power-of-two, odd halving) and q = 100 (well past a pod's
+# device count — the regime PartyMesh packs onto slots).
+
+@pytest.mark.parametrize("q", [6, 100])
+def test_binary_tree_reduces_at_scale(q):
+    t = trees.binary_tree(q)
+    t.validate()
+    vals = np.arange(q, dtype=np.float64)
+    assert t.reduce_host(list(vals)) == vals.sum()
+
+
+@pytest.mark.parametrize("q", [6, 100])
+def test_pair_leafsets_proper_at_scale(q):
+    t1, t2 = trees.default_tree_pair(q)
+    assert trees.significantly_different(t1, t2)
+    for t in (t1, t2):
+        t.validate()
+        for ls in t.subtree_leafsets():
+            assert 1 < len(ls) < q
+
+
+@pytest.mark.parametrize("q", [6, 100])
+def test_survivor_pair_definition4_at_scale(q):
+    """Post-dropout rebuild keeps Definition 4 at q beyond the mesh."""
+    rng = np.random.default_rng(q)
+    keep = max(3, q - q // 4)
+    survivors = sorted(rng.choice(q, size=keep, replace=False).tolist())
+    t1, t2, surv = trees.survivor_tree_pair(q, survivors)
+    assert surv == survivors
+    t1.validate()
+    t2.validate()
+    assert t1.q == t2.q == keep          # compact index space
+    assert trees.significantly_different(t1, t2)
+    with pytest.raises(ValueError):
+        trees.survivor_tree_pair(q, survivors[:2])
