@@ -31,7 +31,7 @@ def main() -> None:
     from benchmarks import (bench_async, bench_engine, bench_kernels,
                             bench_losslessness, bench_regression,
                             bench_roofline, bench_scalability,
-                            bench_secure_agg, bench_staleness)
+                            bench_secure_agg, bench_serve, bench_staleness)
 
     suites = {
         "losslessness": lambda: bench_losslessness.run(
@@ -64,6 +64,7 @@ def main() -> None:
             quick=args.quick),
         "faults": lambda: bench_engine.run_faults(quick=args.quick),
         "guards": lambda: bench_engine.run_guards(quick=args.quick),
+        "serve": lambda: bench_serve.run(quick=args.quick),
         "roofline": bench_roofline.run,
     }
     if args.ci:

@@ -36,6 +36,7 @@ from repro.analysis.walkers import count_cross_party, count_host_transfers
 from repro.core import deep_vfl, losses
 from repro.core.algorithms import PartyLayout
 from repro.core.engine import EngineConfig, FusedEngine
+from repro.serve import ServeEngine
 from repro.sharding.api import PartyMesh
 
 # fixture dimensions — small enough that tracing the whole matrix is fast
@@ -126,6 +127,8 @@ class _Fixture:
         self.extraq = jnp.zeros((Q, STEPS), jnp.int32)
         self.corruptq = jnp.zeros((Q, STEPS), jnp.int32)
         self._deep_pq = None
+        self._serve = None
+        self._deep_serve = None
 
     @property
     def deep_pq(self):
@@ -134,6 +137,25 @@ class _Fixture:
                                             HIDDEN, DREP)
             self._deep_pq = self.eng.pack_deep(params)
         return self._deep_pq
+
+    @property
+    def serve(self) -> ServeEngine:
+        """Linear serving wrapper; two weight installs so the stale-
+        refresh (delta) program is buildable."""
+        if self._serve is None:
+            sv = ServeEngine(self.eng, max_batch=BATCH)
+            sv.set_weights(jnp.zeros(D, jnp.float32))
+            sv.set_weights(jnp.ones(D, jnp.float32))
+            self._serve = sv
+        return self._serve
+
+    @property
+    def deep_serve(self) -> ServeEngine:
+        if self._deep_serve is None:
+            sv = ServeEngine(self.eng, max_batch=BATCH)
+            sv.set_deep_params(self.deep_pq)
+            self._deep_serve = sv
+        return self._deep_serve
 
 
 def _entries() -> List[Entry]:
@@ -240,6 +262,21 @@ def _entries() -> List[Entry]:
                 fx.corruptq, 0.05, k, BATCH, STEPS, TAU)
         )(fx.deep_pq, buf)
 
+    # serving-path entries (repro.serve): the cold/miss dispatch and the
+    # stale-refresh delta dispatch cross the party axis exactly like a
+    # training forward — lint them under the same source convention (the
+    # party's feature block is local leaf 0).  The cache-hit dispatch has
+    # no party axis at all and is audited structurally in the serve
+    # tests/bench instead.
+    def serve_full(eng, fx):
+        return fx.serve.serve_full_jaxpr()
+
+    def serve_delta(eng, fx):
+        return fx.serve.serve_delta_jaxpr()
+
+    def deep_serve_full(eng, fx):
+        return fx.deep_serve.serve_full_jaxpr()
+
     return [
         Entry("sgd", sgd),
         Entry("svrg", svrg),
@@ -266,6 +303,9 @@ def _entries() -> List[Entry]:
         # spans (slot axis, packed party axis) — plus one entry with the
         # sample-parallel data axis enabled (sliced minibatches, masks
         # folded per data shard)
+        Entry("serve", serve_full, prog="serve_full"),
+        Entry("serve_delta", serve_delta),
+        Entry("deep_serve", deep_serve_full, prog="deep_serve_full"),
         Entry("hier_sgd", sgd, pmesh=HIER, prog="sgd"),
         Entry("hier_svrg", svrg, pmesh=HIER, prog="svrg"),
         Entry(f"hier_faulted_sgd{TAU}", faulted_sgd, tau=TAU,
@@ -273,12 +313,13 @@ def _entries() -> List[Entry]:
               prog=f"faulted_sgd{TAU}"),
         Entry("hier_deep_sgd", deep_sgd, pmesh=HIER, prog="deep_sgd"),
         Entry("hier_sgd_ddp", sgd, pmesh=HIER_DDP, prog="sgd"),
+        Entry("hier_serve", serve_full, pmesh=HIER, prog="serve_full"),
     ]
 
 
 #: entry names for the quick (test-sized) matrix
 QUICK = ("sgd", f"delayed{TAU}", f"faulted_sgd{TAU}",
-         f"guarded_sgd{TAU}_1", "deep_sgd", "hier_sgd")
+         f"guarded_sgd{TAU}_1", "deep_sgd", "hier_sgd", "serve")
 
 
 def entry_names() -> List[str]:

@@ -1,7 +1,10 @@
-"""Serving launcher: batched prefill + greedy decode loop.
+"""LM serving demo: batched prefill + greedy decode on the dormant
+model stack (``repro.models``), run on small reduced configs.
 
-The decode path is the sequence-sharded-cache ``serve_step`` that the
-dry-run lowers at 32k/500k; here it runs for real on small configs.
+This is a demo of the transformer stack only — the repo's real serving
+subsystem is the secure federated inference path in ``repro.serve``
+(request coalescing, passive-partial caches, masked aggregation at
+inference; see ``docs/SERVING.md``).
 """
 from __future__ import annotations
 

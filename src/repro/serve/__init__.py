@@ -1,0 +1,12 @@
+"""Secure federated inference serving (see ``docs/SERVING.md``).
+
+:class:`ServeEngine` coalesces concurrent requests into rank-k forward
+dispatches through the training engine's masked-aggregation boundary and
+caches aggregated passive partials per sample id; :class:`ServeQueue`
+wraps it in a ``max_batch``/``max_wait`` continuous-batching admission
+loop for concurrent callers.
+"""
+from repro.serve.engine import ServeEngine, ServeStats
+from repro.serve.queue import ServeQueue
+
+__all__ = ["ServeEngine", "ServeStats", "ServeQueue"]

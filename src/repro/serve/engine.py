@@ -1,0 +1,520 @@
+"""Secure federated inference serving on the fused engine.
+
+Training (``core.engine``) runs whole VFB² epochs as one dispatch; this
+module is the *inference* counterpart for heavy traffic: concurrent
+requests are coalesced into rank-k forward dispatches through the same
+masked-aggregation boundary the training epochs prove secure, and a
+dominator-side cache of aggregated passive partials turns repeat traffic
+into dominator-local work with **zero** cross-party communication.
+
+Request batching (the M axis)
+-----------------------------
+A serve batch of R concurrent requests is ONE rank-k forward dispatch:
+party ℓ's partial products for all R requests are the M = R columns of a
+single ``vfl_grad(mode="forward")`` invocation — ``xb`` is the party's
+weight row ``w_ℓ[None, :]`` and the weight operand is the gathered
+request feature block transposed, so the kernel's M axis *is* the
+concurrent-request axis.  Batches are padded to a fixed ``max_batch`` so
+steady-state serving reuses one compilation per entry point (the cache
+carries are donated, so buffers update in place dispatch over dispatch).
+
+Passive-party partial cache
+---------------------------
+Per sample id the dominator caches the **masked-aggregated passive sum**
+
+    S_i = Σ_{ℓ ≥ 1} x_{i,G_ℓ} · w_{G_ℓ}          (linear)
+    S_i = Σ_{ℓ ≥ 1} f_ℓ(x_{i,G_ℓ})               (deep, (d_rep,) vector)
+
+— the output of the same Algorithm-1 masked aggregation training uses
+(the dominator's own payload rides the collective as zero), never any
+individual party's partial.  A cache **hit** therefore turns q-party
+secure inference into one dominator matvec plus a cache read: the hit
+program has no party axis and no cross-party collective at all.  A
+**stale** entry (exactly one weight version behind, linear path) is
+refreshed by one masked aggregation of *deltas* — party ℓ contributes
+``x_{i,G_ℓ}·(w_ℓ − w_ℓ^prev)`` — instead of full partials.
+
+Cache consistency
+-----------------
+Entries are versioned: every weight update bumps ``version`` and thereby
+invalidates all entries (an entry is a hit only when its recorded version
+matches).  The linear delta path can repair entries exactly one version
+behind; anything older, and every deep entry after an update, is a miss.
+``docs/SERVING.md`` carries the full consistency and security argument.
+
+Security
+--------
+The inference boundary is *identical* to training's: the only values that
+cross the party axis are additively-masked partials through
+``secure_psum`` / ``secure_psum_ring`` (or their hierarchical forms on a
+packed ``PartyMesh``).  The cached value is an aggregate the dominator
+already learns during training (it sees Σ_ℓ z_ℓ and knows its own z₀),
+so a cache hit reveals nothing beyond the training boundary.  The serve
+party programs are linted by the same jaxpr taint pass as the training
+epochs (``repro.analysis.entrypoints`` — the ``serve*`` matrix entries),
+with ``secure="off"`` flagging as the vacuity guard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import FusedEngine, pack_features
+from repro.kernels import vfl_grad as _vg
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Host-side dispatch accounting for one :class:`ServeEngine`.
+
+    ``full_dispatches`` are q-party masked-aggregation programs (cold /
+    miss path), ``delta_dispatches`` q-party masked *delta* aggregations
+    (stale-refresh path), ``hit_dispatches`` dominator-only programs with
+    zero cross-party collectives.  ``cache_hits`` / ``cache_misses`` /
+    ``cache_stale`` count *requests* by how their batch was routed."""
+
+    requests: int = 0
+    batches: int = 0
+    full_dispatches: int = 0
+    delta_dispatches: int = 0
+    hit_dispatches: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_stale: int = 0
+
+    @property
+    def dispatches(self) -> int:
+        return (self.full_dispatches + self.delta_dispatches
+                + self.hit_dispatches)
+
+
+class ServeEngine:
+    """Batched secure inference over a trained :class:`FusedEngine`.
+
+    ``engine`` supplies the vertical layout, the security configuration
+    (``EngineConfig.secure`` — off/two_tree/ring, hierarchical when the
+    engine is bound to a packed ``PartyMesh``), the kernel routing, and
+    the party-axis binding; ``x`` optionally replaces the engine's
+    training features with a dedicated serving universe (same vertical
+    layout).  Weights come from :meth:`set_weights` (linear) or
+    :meth:`set_deep_params` (deep); every update bumps the cache version.
+
+    All device programs are built once per engine and take fixed
+    ``max_batch``-padded id vectors, so a serving loop compiles each
+    entry point exactly once; the cache carries are donated
+    (``donate=True``) and update in place.
+    """
+
+    def __init__(self, engine: FusedEngine, x=None, *, max_batch: int = 64,
+                 cache: bool = True, delta_refresh: bool = True,
+                 donate: bool = True, seed: int = 0):
+        self.eng = engine
+        self.layout = engine.layout
+        self.q = engine.q
+        if x is None:
+            self.xs = engine.xs
+        else:
+            self.xs = pack_features(np.asarray(x), engine.layout)
+        self.n = int(self.xs.shape[1])
+        self.dp = int(self.xs.shape[2])
+        self.max_batch = int(max_batch)
+        self.cache_enabled = bool(cache)
+        self.delta_refresh = bool(delta_refresh)
+        self.donate = bool(donate)
+        # payload selector: the dominator (logical party 0) rides the
+        # masked aggregation with a zero payload, so the collective's
+        # output is exactly the passive sum.  Party-stacked so the same
+        # program works under flat vmap/shard_map and packed PartyMesh
+        # bindings without any axis-index arithmetic.
+        self._pfq = jnp.asarray(
+            [0.0] + [1.0] * (self.q - 1), jnp.float32)
+        self._base_key = jax.random.PRNGKey(seed)
+        self.version = 0
+        self._counter = 0          # masked dispatches within this version
+        self.deep = False
+        self._wq = None            # (q, dp) linear iterate
+        self._prev_wq = None       # previous version (delta refresh)
+        self._pq = None            # (w1q, b1q, w2q, headq) deep params
+        self._csum = None          # (n,) or (n, d_rep) cached passive sums
+        self._cver = None          # (n,) int32 entry versions on device
+        self._ver = np.full((self.n,), -1, np.int64)   # host routing mirror
+        self.stats = ServeStats()
+
+    # -- weights / invalidation ----------------------------------------------
+
+    def set_weights(self, w) -> None:
+        """Install a linear iterate — ``(d,)`` coordinate vector or the
+        party-stacked ``(q, dp)`` form.  Any update after the first bumps
+        the cache version: every cached passive sum was computed under
+        the old passive blocks and is no longer a hit (linear entries
+        exactly one version behind stay repairable via the masked delta
+        aggregation while ``delta_refresh`` holds)."""
+        wq = (jnp.asarray(w, jnp.float32)
+              if np.asarray(w).ndim == 2 else self.eng.pack_w(w))
+        if wq.shape != (self.q, self.dp):
+            raise ValueError(f"weights shape {wq.shape} != (q, dp) = "
+                             f"{(self.q, self.dp)}")
+        had = self._wq is not None or self._pq is not None
+        self._prev_wq = self._wq if (self.delta_refresh
+                                     and not self.deep) else None
+        self._wq = wq
+        self._pq = None
+        self.deep = False
+        if had:
+            self._bump_version()
+        if self._csum is None or self._csum.ndim != 1:
+            self._alloc_cache((self.n,))
+
+    def set_deep_params(self, params) -> None:
+        """Install deep (party-local encoder) parameters —
+        ``DeepVFLParams`` or the party-stacked ``(w1q, b1q, w2q, headq)``
+        from ``FusedEngine.pack_deep``.  Deep updates always invalidate
+        outright: an encoder change has no linear delta structure, so
+        stale entries are recomputed, never repaired."""
+        pq = params if isinstance(params, tuple) \
+            else self.eng.pack_deep(params)
+        if len(pq) != 4:
+            raise ValueError("deep params must be the 4-tuple "
+                             "(w1q, b1q, w2q, headq)")
+        had = self._wq is not None or self._pq is not None
+        self._pq = tuple(jnp.asarray(a) for a in pq)
+        self._wq = None
+        self._prev_wq = None
+        self.deep = True
+        d_rep = int(self._pq[2].shape[2])
+        if had:
+            self._bump_version()
+        if self._csum is None or self._csum.ndim != 2 \
+                or self._csum.shape[1] != d_rep:
+            self._alloc_cache((self.n, d_rep))
+
+    def _bump_version(self) -> None:
+        self.version += 1
+        self._counter = 0
+
+    def _alloc_cache(self, shape) -> None:
+        self._csum = jnp.zeros(shape, jnp.float32)
+        self._cver = jnp.full((self.n,), -1, jnp.int32)
+        self._ver = np.full((self.n,), -1, np.int64)
+
+    def reset_cache(self) -> None:
+        """Drop every cached entry (cold-start; benchmarking helper)."""
+        if self._csum is not None:
+            self._alloc_cache(self._csum.shape)
+
+    def _dispatch_key(self):
+        """Fresh mask key per masked dispatch: the (version, counter)
+        pair is folded into the base key, so no mask stream is ever
+        reused across dispatches — and a replayed (version, counter)
+        sequence (e.g. a fresh engine serving the same trace) derives
+        bit-identical masks, which is what makes invalidated re-serves
+        reproducible bit-exactly."""
+        kt = jax.random.fold_in(self._base_key, self.version)
+        kt = jax.random.fold_in(kt, self._counter)
+        self._counter += 1
+        return kt
+
+    # -- request-axis contractions -------------------------------------------
+
+    def _req_fwd(self, rows, wcol):
+        """(R, dp) request rows · (dp,) weight column -> (R,) partials.
+
+        Kernel path: ONE ``vfl_grad(mode="forward")`` rank-k pass whose
+        M axis is the R concurrent requests (``xb`` = the weight row,
+        weight operand = the request block transposed).  jnp path: the
+        plain matvec, identical numbers."""
+        eng = self.eng
+        if eng._route_kernel(1):
+            z, _ = _vg.vfl_grad(wcol[None, :], rows.T, None,
+                                mode="forward", interpret=eng._interpret,
+                                block_b=eng.cfg.block_b,
+                                block_d=eng.cfg.block_d)
+            return z[0]
+        return rows @ wcol
+
+    def _req_encode(self, rows, w1, b1, w2):
+        """(R, dp) request rows -> (R, d_rep) encoder representations
+        (the deep partial), X-block contractions kernel-routed with
+        hidden/d_rep as the M axis exactly as the training epochs do."""
+        h = jnp.tanh(self.eng._fwd(rows, w1) + b1)
+        return self.eng._fwd(h, w2)
+
+    def _clamp(self, ids):
+        # pad slots carry the sentinel id n: clamp for gathers (the
+        # gathered row is computed but discarded) and leave the raw ids
+        # for scatters, where mode="drop" skips them.
+        return jnp.minimum(ids, self.n - 1)
+
+    # -- device programs ------------------------------------------------------
+    # Built once per engine through FusedEngine._epoch so the party
+    # programs are recorded for the static-analysis matrix under the
+    # names "serve_full" / "serve_delta" / "deep_serve_full".
+
+    def _donate_args(self, *names):
+        return names if self.donate else ()
+
+    def _full_fn(self):
+        eng, n = self.eng, self.n
+
+        def build():
+            def party(local, shared):
+                xp, wp, pf = local
+                ids, kt = shared
+                rows = xp[jnp.minimum(ids, n - 1)]
+                z = self._req_fwd(rows, wp)
+                # dominator payload is zero; every transmitted partial
+                # is masked by the engine's configured aggregation
+                return eng._agg(pf * z, kt)
+
+            mapped = eng._bind(party)
+
+            @functools.partial(
+                jax.jit, donate_argnames=self._donate_args("csum", "cver"))
+            def full(xs, wq, pfq, ids, csum, cver, kt, version):
+                psum = mapped((xs, wq, pfq), (ids, kt))[0]      # (R,)
+                # scatter first, predict from the STORED values: rows
+                # that repeat an id within one batch carry independently-
+                # masked aggregates (1-ulp residue apart under secure
+                # modes), and the cache keeps one winner — reading it
+                # back makes every row's output ≡ the cache entry, so a
+                # later hit replays this dispatch bit-exactly
+                idsc = jnp.minimum(ids, n - 1)
+                csum = csum.at[ids].set(psum, mode="drop")
+                cver = cver.at[ids].set(version, mode="drop")
+                pred = self._req_fwd(xs[0][idsc], wq[0]) + csum[idsc]
+                return pred, csum, cver
+
+            return full
+
+        return self.eng._epoch("serve_full", build)
+
+    def _hit_fn(self):
+        n = self.n
+
+        def build():
+            @jax.jit
+            def hit(x0, w0, ids, csum):
+                idsc = jnp.minimum(ids, n - 1)
+                return self._req_fwd(x0[idsc], w0) + csum[idsc]
+
+            return hit
+
+        return self.eng._epoch("serve_hit", build)
+
+    def _delta_fn(self):
+        eng, n = self.eng, self.n
+
+        def build():
+            def party(local, shared):
+                xp, wp, wpp, pf = local
+                ids, stale, kt = shared
+                rows = xp[jnp.minimum(ids, n - 1)]
+                dz = self._req_fwd(rows, wp - wpp)
+                # only rows flagged stale contribute their delta; rows
+                # already current ride the collective as zero payload
+                return eng._agg(pf * stale * dz, kt)
+
+            mapped = eng._bind(party)
+
+            @functools.partial(
+                jax.jit, donate_argnames=self._donate_args("csum", "cver"))
+            def delta(xs, wq, wq_prev, pfq, ids, stale, csum, cver, kt,
+                      version):
+                dsum = mapped((xs, wq, wq_prev, pfq), (ids, stale, kt))[0]
+                idsc = jnp.minimum(ids, n - 1)
+                # scatter-then-read, as in the full program: duplicate-id
+                # rows must all emit the one stored winner
+                csum = csum.at[ids].set(csum[idsc] + dsum, mode="drop")
+                cver = cver.at[ids].set(version, mode="drop")
+                pred = self._req_fwd(xs[0][idsc], wq[0]) + csum[idsc]
+                return pred, csum, cver
+
+            return delta
+
+        return self.eng._epoch("serve_delta", build)
+
+    def _deep_full_fn(self):
+        eng, n = self.eng, self.n
+
+        def build():
+            def party(local, shared):
+                xp, w1, b1, w2, pf = local
+                ids, kt = shared
+                rows = xp[jnp.minimum(ids, n - 1)]
+                rep = self._req_encode(rows, w1, b1, w2)    # (R, d_rep)
+                return eng._agg(pf * rep, kt)
+
+            mapped = eng._bind(party)
+
+            @functools.partial(
+                jax.jit, donate_argnames=self._donate_args("csum", "cver"))
+            def full(xs, pq, pfq, ids, csum, cver, kt, version):
+                w1q, b1q, w2q, headq = pq
+                psum = mapped((xs, w1q, b1q, w2q, pfq), (ids, kt))[0]
+                # scatter-then-read (see the linear full program)
+                idsc = jnp.minimum(ids, n - 1)
+                csum = csum.at[ids].set(psum, mode="drop")
+                cver = cver.at[ids].set(version, mode="drop")
+                rep0 = self._req_encode(xs[0][idsc], w1q[0], b1q[0],
+                                        w2q[0])
+                pred = (rep0 + csum[idsc]) @ headq[0]
+                return pred, csum, cver
+
+            return full
+
+        return self.eng._epoch("deep_serve_full", build)
+
+    def _deep_hit_fn(self):
+        n = self.n
+
+        def build():
+            @jax.jit
+            def hit(x0, w1, b1, w2, head, ids, csum):
+                idsc = jnp.minimum(ids, n - 1)
+                rep0 = self._req_encode(x0[idsc], w1, b1, w2)
+                return (rep0 + csum[idsc]) @ head
+
+            return hit
+
+        return self.eng._epoch("deep_serve_hit", build)
+
+    # -- jaxpr probes (tests / benchmarks / analysis matrix) ------------------
+
+    def serve_full_jaxpr(self):
+        """Whole-program jaxpr of the cold/miss dispatch (host-transfer
+        audits; tracing it records the ``serve_full``/``deep_serve_full``
+        party program for the taint matrix)."""
+        self._require_weights()
+        ids = jnp.zeros((self.max_batch,), jnp.int32)
+        kt = jax.random.fold_in(self._base_key, 0)
+        v = jnp.int32(self.version)
+        if self.deep:
+            fn = self._deep_full_fn()
+            return jax.make_jaxpr(
+                lambda pq, cs, cv: fn(self.xs, pq, self._pfq, ids, cs, cv,
+                                      kt, v))(self._pq, self._csum,
+                                              self._cver)
+        fn = self._full_fn()
+        return jax.make_jaxpr(
+            lambda wq, cs, cv: fn(self.xs, wq, self._pfq, ids, cs, cv,
+                                  kt, v))(self._wq, self._csum, self._cver)
+
+    def serve_delta_jaxpr(self):
+        """Whole-program jaxpr of the stale-refresh (delta) dispatch."""
+        self._require_weights()
+        if self.deep:
+            raise ValueError("delta refresh is linear-only")
+        ids = jnp.zeros((self.max_batch,), jnp.int32)
+        stale = jnp.ones((self.max_batch,), jnp.float32)
+        kt = jax.random.fold_in(self._base_key, 0)
+        v = jnp.int32(self.version)
+        prev = self._prev_wq if self._prev_wq is not None else self._wq
+        fn = self._delta_fn()
+        return jax.make_jaxpr(
+            lambda wq, wp, cs, cv: fn(self.xs, wq, wp, self._pfq, ids,
+                                      stale, cs, cv, kt, v))(
+            self._wq, prev, self._csum, self._cver)
+
+    def serve_hit_jaxpr(self):
+        """Whole-program jaxpr of the cache-hit dispatch — the program a
+        structural audit proves free of cross-party collectives."""
+        self._require_weights()
+        ids = jnp.zeros((self.max_batch,), jnp.int32)
+        if self.deep:
+            w1q, b1q, w2q, headq = self._pq
+            fn = self._deep_hit_fn()
+            return jax.make_jaxpr(
+                lambda cs: fn(self.xs[0], w1q[0], b1q[0], w2q[0], headq[0],
+                              ids, cs))(self._csum)
+        fn = self._hit_fn()
+        return jax.make_jaxpr(
+            lambda cs: fn(self.xs[0], self._wq[0], ids, cs))(self._csum)
+
+    # -- the serving entry point ----------------------------------------------
+
+    def _require_weights(self):
+        if self._wq is None and self._pq is None:
+            raise ValueError("no weights installed — call set_weights() "
+                             "or set_deep_params() first")
+
+    def serve(self, ids) -> np.ndarray:
+        """Serve a coalesced request batch: ``ids`` are sample ids into
+        the serving universe; returns the per-request scores (wᵀx for the
+        linear objectives, the logit for the deep path).  Batches larger
+        than ``max_batch`` are chunked; each chunk is routed to the hit /
+        delta / full program by its cache state and costs exactly one
+        device dispatch."""
+        self._require_weights()
+        ids = np.asarray(ids, np.int64).ravel()
+        if ids.size == 0:
+            return np.zeros((0,), np.float32)
+        if ids.min() < 0 or ids.max() >= self.n:
+            raise ValueError(f"sample ids must lie in [0, {self.n})")
+        out = np.empty(ids.shape[0], np.float32)
+        for lo in range(0, ids.shape[0], self.max_batch):
+            chunk = ids[lo:lo + self.max_batch]
+            out[lo:lo + chunk.shape[0]] = self._serve_chunk(chunk)
+        return out
+
+    def _serve_chunk(self, ids: np.ndarray) -> np.ndarray:
+        count = ids.shape[0]
+        padded = np.full((self.max_batch,), self.n, np.int32)
+        padded[:count] = ids
+        pid = jnp.asarray(padded)
+        ver = self._ver[ids]
+        self.stats.requests += count
+        self.stats.batches += 1
+        if self.cache_enabled and np.all(ver == self.version):
+            preds = self._dispatch_hit(pid)
+            self.stats.hit_dispatches += 1
+            self.stats.cache_hits += count
+        elif (self.cache_enabled and self.delta_refresh and not self.deep
+              and self._prev_wq is not None
+              and np.all(ver >= self.version - 1)):
+            stale = np.zeros((self.max_batch,), np.float32)
+            stale[:count] = (ver < self.version).astype(np.float32)
+            preds = self._dispatch_delta(pid, jnp.asarray(stale))
+            self._ver[ids] = self.version
+            self.stats.delta_dispatches += 1
+            self.stats.cache_stale += int(stale.sum())
+            self.stats.cache_hits += count - int(stale.sum())
+        else:
+            preds = self._dispatch_full(pid)
+            if self.cache_enabled:
+                self._ver[ids] = self.version
+            self.stats.full_dispatches += 1
+            self.stats.cache_misses += count
+        return np.asarray(preds)[:count]
+
+    def _dispatch_full(self, pid):
+        kt = self._dispatch_key()
+        v = jnp.int32(self.version)
+        if self.deep:
+            preds, self._csum, self._cver = self._deep_full_fn()(
+                self.xs, self._pq, self._pfq, pid, self._csum, self._cver,
+                kt, v)
+        else:
+            preds, self._csum, self._cver = self._full_fn()(
+                self.xs, self._wq, self._pfq, pid, self._csum, self._cver,
+                kt, v)
+        return preds
+
+    def _dispatch_delta(self, pid, stale):
+        kt = self._dispatch_key()
+        v = jnp.int32(self.version)
+        preds, self._csum, self._cver = self._delta_fn()(
+            self.xs, self._wq, self._prev_wq, self._pfq, pid, stale,
+            self._csum, self._cver, kt, v)
+        return preds
+
+    def _dispatch_hit(self, pid):
+        if self.deep:
+            w1q, b1q, w2q, headq = self._pq
+            return self._deep_hit_fn()(self.xs[0], w1q[0], b1q[0],
+                                       w2q[0], headq[0], pid, self._csum)
+        return self._hit_fn()(self.xs[0], self._wq[0], pid, self._csum)

@@ -1,0 +1,57 @@
+"""Documentation link hygiene (also run as the CI lint-job docs check).
+
+Two gates over the repo's markdown:
+
+* every guide under ``docs/*.md`` is referenced from the top-level
+  README — orphaned guides rot;
+* no dead relative links: every non-URL link target in README.md,
+  docs/*.md, and benchmarks/README.md resolves to an existing file or
+  directory (anchors stripped).
+"""
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: markdown inline links [text](target), excluding images' alt brackets
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _md_files():
+    out = [os.path.join(REPO, "README.md"),
+           os.path.join(REPO, "benchmarks", "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        out += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                if f.endswith(".md")]
+    return [p for p in out if os.path.exists(p)]
+
+
+def _links(path):
+    with open(path) as f:
+        for target in _LINK.findall(f.read()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            yield target.split("#", 1)[0]
+
+
+def test_every_doc_is_referenced_from_readme():
+    docs = os.path.join(REPO, "docs")
+    if not os.path.isdir(docs):
+        pytest.skip("no docs/ directory")
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    missing = [f for f in sorted(os.listdir(docs))
+               if f.endswith(".md") and f"docs/{f}" not in readme]
+    assert not missing, f"docs not referenced from README.md: {missing}"
+
+
+@pytest.mark.parametrize("md", _md_files(),
+                         ids=[os.path.relpath(p, REPO) for p in _md_files()])
+def test_no_dead_relative_links(md):
+    base = os.path.dirname(md)
+    dead = [t for t in _links(md)
+            if t and not os.path.exists(os.path.join(base, t))]
+    assert not dead, f"dead relative links in {md}: {dead}"
